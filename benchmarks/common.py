@@ -1,0 +1,96 @@
+"""Shared benchmark scaffolding.
+
+Scale knobs: BENCH_SCALE ∈ {"smoke", "small", "full"} via env var.  The
+paper's 20M-series scale is exercised by the multi-pod dry-run; these
+benchmarks validate the paper's *relative* claims at container scale.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SSHParams
+from repro.data.timeseries import (extract_subsequences, random_walk,
+                                   synthetic_ecg)
+
+SCALE = os.environ.get("BENCH_SCALE", "smoke")
+
+# points per stream / queries per (dataset, length) cell
+_SCALES = {"smoke": (6_000, 2), "small": (20_000, 4), "full": (120_000, 8)}
+N_POINTS, N_QUERIES = _SCALES[SCALE]
+
+LENGTHS = {"smoke": [128, 256], "small": [128, 512, 1024],
+           "full": [128, 512, 1024, 2048]}[SCALE]
+
+PARAMS = {
+    "ecg": SSHParams(window=80, step=3, ngram=15, num_hashes=40,
+                     num_tables=20),
+    "randomwalk": SSHParams(window=30, step=5, ngram=15, num_hashes=40,
+                            num_tables=20),
+}
+GENERATORS = {"ecg": synthetic_ecg, "randomwalk": random_walk}
+
+
+def dataset(kind: str, length: int, seed: int = 3):
+    """(db (N, L) z-normed jnp array, query offsets)."""
+    stream = GENERATORS[kind](N_POINTS, seed=seed)
+    db = extract_subsequences(stream, length, stride=1, znorm=True)
+    rng = np.random.default_rng(0)
+    qoffs = rng.integers(0, len(stream) - length, N_QUERIES)
+    queries = []
+    for off in qoffs:
+        q = stream[off:off + length].astype(np.float32)
+        queries.append((q - q.mean()) / (q.std() + 1e-8))
+    return jnp.asarray(db), [jnp.asarray(q) for q in queries]
+
+
+_GOLD_CACHE = {}
+_DS_CACHE = {}
+
+
+def dataset_cached(kind: str, length: int):
+    key = (kind, length)
+    if key not in _DS_CACHE:
+        _DS_CACHE[key] = dataset(kind, length)
+    return _DS_CACHE[key]
+
+
+def gold_topk_cached(kind: str, length: int, k: int, band: int):
+    """Exact-DTW gold rankings, shared across benchmark modules (the
+    dominant CPU cost — one brute-force pass per (dataset, length))."""
+    from repro.core import brute_force_topk
+    key = (kind, length, band)
+    if key not in _GOLD_CACHE:
+        db, queries = dataset_cached(kind, length)
+        _GOLD_CACHE[key] = [brute_force_topk(q, db, 50, band=band)[0]
+                            for q in queries]
+    return [g[:k] for g in _GOLD_CACHE[key]]
+
+
+def band_for(length: int) -> int:
+    return max(4, length // 20)        # UCR-suite 5% convention
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree.leaves(out)[0]) if jax.tree.leaves(out) \
+        else None
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+        leaves = jax.tree.leaves(out)
+        if leaves and hasattr(leaves[0], "block_until_ready"):
+            leaves[0].block_until_ready()
+    return out, (time.perf_counter() - t0) / iters
+
+
+def emit(name: str, us_per_call: float, derived: Dict) -> None:
+    """CSV contract: name,us_per_call,derived"""
+    kv = ";".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us_per_call:.1f},{kv}", flush=True)

@@ -1,0 +1,70 @@
+"""Paper Figs 7-12: parameter studies — accuracy + preprocessing time as a
+function of W (filter width), δ (stride), n (shingle length)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (PARAMS, band_for,
+                               dataset_cached as dataset,
+                               gold_topk_cached, emit)
+from repro.core import (SSHIndex, brute_force_topk, precision_at_k,
+                        ssh_search)
+
+from benchmarks.common import SCALE
+
+LENGTH = 256
+SWEEPS = {
+    "W": [10, 20, 40, 80, 120],
+    "delta": [1, 2, 3, 5, 8],
+    "n": [4, 8, 12, 15, 18],
+} if SCALE != "smoke" else {        # trimmed sweep keeps the shape of
+    "W": [20, 80, 120],             # Figs 7-12 at tractable CPU cost
+    "delta": [1, 3, 8],
+    "n": [4, 12, 18],
+}
+
+
+def _study(kind: str, param: str, values) -> None:
+    db, queries = dataset(kind, LENGTH)
+    band = band_for(LENGTH)
+    if SCALE == "smoke":
+        db = db[: len(db) // 2]     # halve the index-build cost
+        golds = [brute_force_topk(q, db, 10, band=band)[0]
+                 for q in queries]  # gold must match the halved db
+    else:
+        golds = gold_topk_cached(kind, LENGTH, 10, band)
+    base = PARAMS[kind]
+    for v in values:
+        if param == "W" and v >= LENGTH:
+            continue
+        params = dataclasses.replace(
+            base,
+            window=v if param == "W" else min(base.window, LENGTH // 2),
+            step=v if param == "delta" else base.step,
+            ngram=v if param == "n" else base.ngram)
+        t0 = time.perf_counter()
+        index = SSHIndex.build(db, params)
+        jnp.asarray(index.signatures).block_until_ready()
+        t_build = time.perf_counter() - t0
+        precs = [precision_at_k(
+            ssh_search(q, index, topk=10, top_c=512, band=band,
+                       multiprobe_offsets=params.step).ids, g, 10)
+            for q, g in zip(queries, golds)]
+        emit(f"fig_param/{kind}/{param}={v}",
+             t_build / db.shape[0] * 1e6,
+             {"precision_at10": round(float(np.mean(precs)), 3),
+              "build_s": round(t_build, 3)})
+
+
+def run() -> None:
+    for kind in ("ecg", "randomwalk"):
+        for param, values in SWEEPS.items():
+            _study(kind, param, values)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Kernel micro-benchmarks: Pallas(interpret)-vs-ref correctness timing is
+meaningless on CPU, so this measures the REF path wall time (the CPU
+production path) and reports the kernels' analytic TPU roofline instead."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.kernels import ref
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    # sketch_conv: paper ECG setting
+    x = jnp.asarray(rng.normal(size=(256, 2048)), jnp.float32)
+    filt = jnp.asarray(rng.normal(size=(80, 1)), jnp.float32)
+    _, t = timed(ref.sketch_conv_ref, x, filt, 3)
+    flops = 2 * 256 * ((2048 - 80) // 3 + 1) * 80
+    emit("kernel/sketch_conv/ref", t * 1e6,
+         {"gflops": round(flops / t / 1e9, 2),
+          "tpu_bound": "memory (AI≈27 FLOP/B at F=1)"})
+
+    # dtw rerank: 1024 candidates x 2048, band 102
+    q = jnp.asarray(rng.normal(size=512), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(128, 512)), jnp.float32)
+    _, t = timed(lambda: ref.dtw_wavefront_ref(q, c, band=26))
+    cells = 128 * 512 * 53
+    emit("kernel/dtw_rerank/ref", t * 1e6,
+         {"mcells_per_s": round(cells / t / 1e6, 1),
+          "tpu_kernel": "wavefront: 2m steps x (band,128) VPU tiles"})
+
+    # collision count: 1M x 40
+    db = jnp.asarray(rng.integers(0, 1 << 30, (1_000_000, 40)), jnp.int32)
+    qk = jnp.asarray(rng.integers(0, 1 << 30, (40,)), jnp.int32)
+    _, t = timed(lambda: ref.collision_count_ref(qk, db))
+    emit("kernel/collision_count/ref", t * 1e6,
+         {"gB_per_s": round(db.nbytes / t / 1e9, 2),
+          "tpu_bound": "HBM bandwidth"})
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table3] [BENCH_SCALE=small]
+
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
+"""
+import argparse
+import sys
+import time
+
+
+MODULES = [
+    ("table1_lb_pruning", "Table 1: LB pruning collapse vs length"),
+    ("table2_precision", "Table 2 + Fig 6: SSH vs SRP precision/NDCG"),
+    ("table3_query_time", "Table 3: query time SSH vs UCR vs brute"),
+    ("table4_pruning", "Table 4: candidates pruned"),
+    ("fig7_param_study", "Figs 7-12: W / delta / n parameter studies"),
+    ("kernel_bench", "kernel micro-benchmarks"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+    t0 = time.time()
+    for mod_name, desc in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        print(f"# === {mod_name}: {desc} ===", flush=True)
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        t = time.time()
+        mod.run()
+        print(f"# {mod_name} done in {time.time()-t:.1f}s", flush=True)
+    print(f"# all benchmarks done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

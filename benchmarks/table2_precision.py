@@ -1,0 +1,43 @@
+"""Paper Table 2 + Fig 6: precision/NDCG of SSH vs SRP for top-k retrieval
+(gold = exact DTW)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import (LENGTHS, PARAMS, band_for,
+                               dataset_cached, gold_topk_cached, emit)
+from repro.core import (SSHIndex, brute_force_topk, ndcg_at_k,
+                        precision_at_k, srp_search, ssh_search)
+from repro.core.srp import make_srp, srp_bits
+
+KS = (5, 10, 20)
+
+
+def run() -> None:
+    for kind in ("ecg", "randomwalk"):
+        params = PARAMS[kind]
+        for length in LENGTHS:
+            db, queries = dataset_cached(kind, length)
+            band = band_for(length)
+            index = SSHIndex.build(db, params)
+            planes = make_srp(jax.random.PRNGKey(0), 64, length)
+            db_bits = srp_bits(db, planes)
+            for k in KS:
+                ssh_p, ssh_n, srp_p = [], [], []
+                golds = gold_topk_cached(kind, length, k, band)
+                for q, gold in zip(queries, golds):
+                    res = ssh_search(q, index, topk=k, top_c=512, band=band,
+                                     multiprobe_offsets=params.step)
+                    ssh_p.append(precision_at_k(res.ids, gold, k))
+                    ssh_n.append(ndcg_at_k(res.ids, gold, k))
+                    res2 = srp_search(q, db, planes, db_bits, topk=k)
+                    srp_p.append(precision_at_k(res2.ids, gold, k))
+                emit(f"table2/{kind}/len{length}/top{k}", 0.0,
+                     {"ssh_precision": round(float(np.mean(ssh_p)), 3),
+                      "ssh_ndcg": round(float(np.mean(ssh_n)), 3),
+                      "srp_precision": round(float(np.mean(srp_p)), 3)})
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Paper Table 3: query wall time — SSH vs the (vectorised) UCR suite vs
+brute force.  Paper shows ~20x at length 2048; the ratio is what matters
+(absolute times here are single-CPU jax, not the paper's C++)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (LENGTHS, PARAMS, band_for,
+                               dataset_cached as dataset, emit, timed)
+from repro.core import SSHIndex, brute_force_topk, ssh_search, ucr_search
+
+
+def run() -> None:
+    for kind in ("ecg", "randomwalk"):
+        params = PARAMS[kind]
+        for length in LENGTHS:
+            db, queries = dataset(kind, length)
+            band = band_for(length)
+            index = SSHIndex.build(db, params)
+            q = queries[0]
+            _, t_ssh = timed(
+                lambda: ssh_search(q, index, topk=10, top_c=512, band=band,
+                                   multiprobe_offsets=params.step),
+                warmup=1, iters=2)
+            _, t_ucr = timed(
+                lambda: ucr_search(q, db, topk=10, band=band),
+                warmup=1, iters=2)
+            _, t_brute = timed(
+                lambda: brute_force_topk(q, db, 10, band=band),
+                warmup=1, iters=1)
+            emit(f"table3/{kind}/len{length}", t_ssh * 1e6,
+                 {"ssh_s": round(t_ssh, 4), "ucr_s": round(t_ucr, 4),
+                  "brute_s": round(t_brute, 4),
+                  "speedup_vs_ucr": round(t_ucr / t_ssh, 2),
+                  "speedup_vs_brute": round(t_brute / t_ssh, 2)})
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Paper Table 4: % of the database pruned — SSH full / hashing alone /
+UCR branch-and-bound, by series length."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (LENGTHS, PARAMS, band_for,
+                               dataset_cached as dataset, emit)
+from repro.core import SSHIndex, ssh_search, ucr_search
+
+
+def run() -> None:
+    for kind in ("ecg", "randomwalk"):
+        params = PARAMS[kind]
+        for length in LENGTHS:
+            db, queries = dataset(kind, length)
+            band = band_for(length)
+            index = SSHIndex.build(db, params)
+            hash_only, full, ucr = [], [], []
+            for q in queries:
+                res = ssh_search(q, index, topk=10, top_c=512, band=band,
+                                 use_lb_cascade=True,
+                                 multiprobe_offsets=params.step)
+                hash_only.append(res.pruned_by_hash_frac)
+                full.append(res.pruned_total_frac)
+                ucr.append(ucr_search(q, db, topk=10,
+                                      band=band).pruned_total_frac)
+            emit(f"table4/{kind}/len{length}", 0.0,
+                 {"ssh_full": round(float(np.mean(full)), 4),
+                  "ssh_hash_alone": round(float(np.mean(hash_only)), 4),
+                  "ucr_bnb": round(float(np.mean(ucr)), 4)})
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,5 @@
+from repro.checkpoint.checkpointer import (Checkpointer, latest_step,
+                                           save_checkpoint, restore_checkpoint)
+
+__all__ = ["Checkpointer", "latest_step", "save_checkpoint",
+           "restore_checkpoint"]

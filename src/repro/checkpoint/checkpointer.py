@@ -1,0 +1,182 @@
+"""Fault-tolerant checkpointing (no external deps — npz shards + manifest).
+
+Design (maps to multi-host practice):
+  * one ``shard_<k>.npz`` per host (here: per logical shard), containing
+    the host-local slices of every array, written to a temp dir and
+    atomically renamed — a crashed writer never corrupts ``latest``;
+  * a JSON manifest with step, tree structure, global shapes and the
+    sharding layout used at save time;
+  * **resharding restore**: arrays are reassembled to global shape and
+    re-laid-out for the *current* mesh — restoring a 512-chip checkpoint
+    onto 256 chips (elastic downscale) or vice versa just works;
+  * retention: keep the last ``keep`` checkpoints (crash-safe GC order:
+    new checkpoint is durable before old ones are removed);
+  * optional async save (thread) so the train loop isn't blocked.
+
+Restart protocol: trainers call ``latest_step(dir)`` on boot and resume
+from there — combined with the seeded, offset-indexed data pipeline this
+gives deterministic recovery from node failure.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree: PyTree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(directory: str | Path, step: int, tree: PyTree,
+                    keep: int = 3, n_shards: int = 1) -> Path:
+    """Write checkpoint ``step`` atomically; returns the final path."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    tmp = directory / f".tmp_step_{step}_{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    leaves = _flatten_with_paths(tree)
+    manifest: Dict[str, Any] = {"step": step, "time": time.time(),
+                                "n_shards": n_shards, "arrays": {}}
+    shards: List[Dict[str, np.ndarray]] = [{} for _ in range(n_shards)]
+    for key, leaf in leaves:
+        arr = np.asarray(leaf)
+        manifest["arrays"][key] = {"shape": list(arr.shape),
+                                   "dtype": str(arr.dtype),
+                                   "shard_axis": 0 if arr.ndim and
+                                   arr.shape[0] % n_shards == 0 and
+                                   n_shards > 1 else None}
+        ax = manifest["arrays"][key]["shard_axis"]
+        if ax is None:
+            shards[0][key] = arr
+        else:
+            for k, piece in enumerate(np.split(arr, n_shards, axis=ax)):
+                shards[k][key] = piece
+    for k, shard in enumerate(shards):
+        np.savez(tmp / f"shard_{k}.npz", **shard)
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+
+    final = directory / f"step_{step:010d}"
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)                       # atomic publish
+
+    steps = sorted(all_steps(directory))
+    for old in steps[:-keep]:
+        shutil.rmtree(directory / f"step_{old:010d}", ignore_errors=True)
+    return final
+
+
+def all_steps(directory: str | Path) -> List[int]:
+    directory = Path(directory)
+    out = []
+    if not directory.exists():
+        return out
+    for p in directory.iterdir():
+        if p.name.startswith("step_") and (p / "manifest.json").exists():
+            out.append(int(p.name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str | Path, tree_like: PyTree,
+                       step: Optional[int] = None,
+                       shardings: Optional[PyTree] = None) -> Tuple[int, PyTree]:
+    """Restore into the structure of ``tree_like``; optionally re-shard
+    (``shardings`` may target a *different* mesh than at save time)."""
+    directory = Path(directory)
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    cdir = directory / f"step_{step:010d}"
+    manifest = json.loads((cdir / "manifest.json").read_text())
+    shards = [np.load(cdir / f"shard_{k}.npz")
+              for k in range(manifest["n_shards"])]
+
+    arrays: Dict[str, np.ndarray] = {}
+    for key, info in manifest["arrays"].items():
+        if info["shard_axis"] is None:
+            arrays[key] = shards[0][key]
+        else:
+            arrays[key] = np.concatenate(
+                [s[key] for s in shards], axis=info["shard_axis"])
+
+    flat = _flatten_with_paths(tree_like)
+    sh_flat = (_flatten_with_paths(shardings) if shardings is not None
+               else [(k, None) for k, _ in flat])
+    sh_map = dict(sh_flat)
+    leaves = []
+    for key, like in flat:
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing array {key!r}")
+        arr = arrays[key]
+        want = tuple(like.shape)
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"expected {want}")
+        sh = sh_map.get(key)
+        leaves.append(jax.device_put(arr, sh) if sh is not None
+                      else jax.numpy.asarray(arr))
+    structure = jax.tree_util.tree_structure(tree_like)
+    return step, jax.tree_util.tree_unflatten(structure, leaves)
+
+
+class Checkpointer:
+    """Async-capable checkpoint manager with restart discovery."""
+
+    def __init__(self, directory: str | Path, keep: int = 3,
+                 async_save: bool = False, n_shards: int = 1):
+        self.directory = Path(directory)
+        self.keep = keep
+        self.async_save = async_save
+        self.n_shards = n_shards
+        self._pending: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: PyTree) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # snapshot off-device
+        if self.async_save:
+            t = threading.Thread(
+                target=save_checkpoint,
+                args=(self.directory, step, host_tree, self.keep,
+                      self.n_shards), daemon=True)
+            t.start()
+            self._pending = t
+        else:
+            save_checkpoint(self.directory, step, host_tree, self.keep,
+                            self.n_shards)
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def restore_latest(self, tree_like: PyTree, shardings: PyTree = None
+                       ) -> Tuple[Optional[int], PyTree]:
+        if latest_step(self.directory) is None:
+            return None, tree_like
+        return restore_checkpoint(self.directory, tree_like,
+                                  shardings=shardings)

@@ -1,0 +1,156 @@
+"""ArchDef — the contract between configs, steps, and the dry-run.
+
+Each config module exports ``ARCH = ArchDef(...)``.  ``input_specs``
+returns ShapeDtypeStruct stand-ins for every model input of a given shape
+cell (weak-type-correct, shardable, zero allocation), and ``kind`` selects
+which step function the cell lowers (train / prefill / decode / serve /
+retrieval / build / query).
+
+GNN note: node/edge counts are padded to multiples of 4096 so the arrays
+shard evenly on every mesh in play; padding edges are self-loops which the
+model masks via the zero-length-edge rule (see repro.models.nequip).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return int(math.ceil(n / mult) * mult)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    kind: str                      # train|prefill|decode|serve|retrieval|build|query
+    meta: Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDef:
+    name: str
+    family: str                    # lm | gnn | recsys | ssh
+    config: Any
+    smoke_config: Any
+    shapes: Dict[str, ShapeCell]
+    # optional per-shape config override (e.g. GNN d_feat differs per cell)
+    config_for_shape: Optional[Callable[[Any, str], Any]] = None
+
+    def cell_config(self, shape: str) -> Any:
+        if self.config_for_shape is not None:
+            return self.config_for_shape(self.config, shape)
+        return self.config
+
+    def input_specs(self, shape: str) -> Tuple[str, Dict[str, Any]]:
+        cell = self.shapes[shape]
+        cfg = self.cell_config(shape)
+        builder = _SPEC_BUILDERS[self.family]
+        return cell.kind, builder(cfg, cell)
+
+
+# --------------------------------------------------------------------------
+# per-family spec builders
+# --------------------------------------------------------------------------
+
+def lm_specs(cfg, cell: ShapeCell) -> Dict[str, Any]:
+    m = cell.meta
+    b, s = m["batch"], m["seq"]
+    if cell.kind == "train":
+        return {"tokens": SDS((b, s), jnp.int32),
+                "labels": SDS((b, s), jnp.int32)}
+    if cell.kind == "prefill":
+        return {"tokens": SDS((b, s), jnp.int32)}
+    if cell.kind == "decode":
+        from repro.models.transformer import init_cache
+        cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+        return {"tokens": SDS((b, 1), jnp.int32), "cache": cache}
+    raise ValueError(cell.kind)
+
+
+def gnn_specs(cfg, cell: ShapeCell) -> Dict[str, Any]:
+    m = cell.meta
+    n = _pad_to(m["n_nodes"], 4096)
+    e = _pad_to(m["n_edges"], 4096)
+    specs = {
+        "node_feat": SDS((n, m["d_feat"]), jnp.float32),
+        "positions": SDS((n, 3), jnp.float32),
+        "edge_src": SDS((e,), jnp.int32),
+        "edge_dst": SDS((e,), jnp.int32),
+    }
+    if m.get("n_graphs"):
+        specs["graph_ids"] = SDS((n,), jnp.int32)
+        specs["energy"] = SDS((m["n_graphs"],), jnp.float32)
+    else:
+        specs["node_targets"] = SDS((n,), jnp.float32)
+    return specs
+
+
+def recsys_specs(cfg, cell: ShapeCell) -> Dict[str, Any]:
+    m = cell.meta
+    b = m["batch"]
+    name = cfg.name
+    if cell.kind == "retrieval":
+        nc = m["n_candidates"]
+        if name.startswith("dlrm"):
+            return {"dense": SDS((1, cfg.n_dense), jnp.float32),
+                    "sparse": SDS((1, cfg.n_sparse), jnp.int32),
+                    "cand_ids": SDS((nc,), jnp.int32)}
+        return {"history": SDS((1, cfg.seq_len), jnp.int32),
+                "cand_ids": SDS((nc,), jnp.int32)}
+    # train / serve share the batch structure (train adds labels)
+    if name.startswith("dlrm"):
+        specs = {"dense": SDS((b, cfg.n_dense), jnp.float32),
+                 "sparse": SDS((b, cfg.n_sparse), jnp.int32)}
+    elif name.startswith("bst"):
+        specs = {"history": SDS((b, cfg.seq_len), jnp.int32),
+                 "target": SDS((b,), jnp.int32),
+                 "profile": SDS((b, cfg.n_profile), jnp.int32)}
+    else:  # mind / dien
+        specs = {"history": SDS((b, cfg.seq_len), jnp.int32),
+                 "target": SDS((b,), jnp.int32)}
+    if cell.kind == "train":
+        specs["labels"] = SDS((b,), jnp.float32)
+    return specs
+
+
+def ssh_specs(cfg, cell: ShapeCell) -> Dict[str, Any]:
+    m = cell.meta
+    if cell.kind == "build":
+        return {"series": SDS((m["batch"], m["length"]), jnp.float32)}
+    if cell.kind == "query":
+        return {
+            "query": SDS((m["length"],), jnp.float32),
+            "db_sigs": SDS((m["n_database"], cfg.num_hashes), jnp.int32),
+            "db_series": SDS((m["n_database"], m["length"]), jnp.float32),
+        }
+    raise ValueError(cell.kind)
+
+
+_SPEC_BUILDERS = {"lm": lm_specs, "gnn": gnn_specs, "recsys": recsys_specs,
+                  "ssh": ssh_specs}
+
+
+# canonical LM shape set (assignment block)
+def lm_shapes() -> Dict[str, ShapeCell]:
+    return {
+        "train_4k": ShapeCell("train", {"seq": 4096, "batch": 256}),
+        "prefill_32k": ShapeCell("prefill", {"seq": 32768, "batch": 32}),
+        "decode_32k": ShapeCell("decode", {"seq": 32768, "batch": 128}),
+        "long_500k": ShapeCell("decode", {"seq": 524288, "batch": 1}),
+    }
+
+
+def recsys_shapes(seq_len: int = 0) -> Dict[str, ShapeCell]:
+    return {
+        "train_batch": ShapeCell("train", {"batch": 65536}),
+        "serve_p99": ShapeCell("serve", {"batch": 512}),
+        "serve_bulk": ShapeCell("serve", {"batch": 262144}),
+        "retrieval_cand": ShapeCell("retrieval",
+                                    {"batch": 1, "n_candidates": 1_000_000}),
+    }

@@ -1,0 +1,30 @@
+"""--arch registry: maps assignment ids to ArchDefs."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+_MODULES: Dict[str, str] = {
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "phi3-mini-3.8b": "repro.configs.phi3_mini_3_8b",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "nequip": "repro.configs.nequip",
+    "bst": "repro.configs.bst",
+    "dlrm-rm2": "repro.configs.dlrm_rm2",
+    "mind": "repro.configs.mind",
+    "dien": "repro.configs.dien",
+    "ssh-ecg": "repro.configs.ssh_ecg",
+    "ssh-randomwalk": "repro.configs.ssh_randomwalk",
+}
+
+
+def list_archs() -> List[str]:
+    return sorted(_MODULES)
+
+
+def get_arch(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {list_archs()}")
+    return importlib.import_module(_MODULES[name]).ARCH

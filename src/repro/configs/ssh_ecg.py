@@ -1,0 +1,29 @@
+"""SSH on ECG (paper §5.1): W=80, δ=3, n=15, 20 tables.
+
+Dry-run cells exercise the distributed index at the paper's 20M-series
+scale: ``build`` hashes a series batch; ``query`` probes sharded
+signatures + banded-DTW re-ranks the hash candidates.
+"""
+import dataclasses
+
+from repro.configs.base import ArchDef, ShapeCell
+from repro.core.index import SSHParams
+
+CONFIG = SSHParams(window=80, step=3, ngram=15, num_hashes=40,
+                   num_tables=20, seed=7)
+
+SMOKE = dataclasses.replace(CONFIG, window=24, step=3, ngram=8,
+                            num_hashes=20, num_tables=20)
+
+SHAPES = {
+    "build_2048": ShapeCell("build", {"batch": 65536, "length": 2048}),
+    "query_128": ShapeCell("query", {"length": 128,
+                                     "n_database": 20_971_520,
+                                     "top_c": 1024, "band": 6}),
+    "query_2048": ShapeCell("query", {"length": 2048,
+                                      "n_database": 20_971_520,
+                                      "top_c": 1024, "band": 102}),
+}
+
+ARCH = ArchDef(name="ssh-ecg", family="ssh", config=CONFIG,
+               smoke_config=SMOKE, shapes=SHAPES)

@@ -1,0 +1,21 @@
+"""SSH on Random Walk (paper §5.1): W=30, δ=5, n=15, 20 tables."""
+import dataclasses
+
+from repro.configs.base import ArchDef, ShapeCell
+from repro.core.index import SSHParams
+
+CONFIG = SSHParams(window=30, step=5, ngram=15, num_hashes=40,
+                   num_tables=20, seed=11)
+
+SMOKE = dataclasses.replace(CONFIG, window=16, step=5, ngram=8,
+                            num_hashes=20, num_tables=20)
+
+SHAPES = {
+    "build_2048": ShapeCell("build", {"batch": 65536, "length": 2048}),
+    "query_2048": ShapeCell("query", {"length": 2048,
+                                      "n_database": 20_971_520,
+                                      "top_c": 1024, "band": 102}),
+}
+
+ARCH = ArchDef(name="ssh-randomwalk", family="ssh", config=CONFIG,
+               smoke_config=SMOKE, shapes=SHAPES)

@@ -1,0 +1,23 @@
+"""SSH (Sketch, Shingle, & Hash) — the paper's core contribution.
+
+Public API:
+  SSHParams, SSHFunctions, SSHIndex   — index construction
+  ssh_search / ucr_search / srp_search / brute_force_topk — query paths
+  dtw, dtw_batch, znormalize          — similarity measure
+"""
+from repro.core.dtw import (dtw, dtw_batch, dtw_pairwise, dtw_distance,
+                            znormalize)
+from repro.core.index import (SSHParams, SSHFunctions, SSHIndex,
+                              build_signatures, band_keys,
+                              signature_collisions, probe_topc)
+from repro.core.search import (SearchResult, ssh_search, ucr_search,
+                               srp_search, brute_force_topk,
+                               precision_at_k, ndcg_at_k)
+
+__all__ = [
+    "dtw", "dtw_batch", "dtw_pairwise", "dtw_distance", "znormalize",
+    "SSHParams", "SSHFunctions", "SSHIndex", "build_signatures",
+    "band_keys", "signature_collisions", "probe_topc",
+    "SearchResult", "ssh_search", "ucr_search", "srp_search",
+    "brute_force_topk", "precision_at_k", "ndcg_at_k",
+]

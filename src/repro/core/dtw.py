@@ -1,0 +1,163 @@
+"""Dynamic Time Warping in JAX.
+
+The paper (§2.1) uses squared-difference DTW:
+
+    DTW(X, Y) = min_P sqrt( sum_k w_k ),   w_k = (x_i - y_j)^2 along path P
+
+with the standard monotone/contiguous warping-path constraints and an
+optional Sakoe-Chiba band of radius ``band`` (|i - j| <= band).
+
+Implementation notes
+--------------------
+The textbook DP has a 2-D dependency (D[i,j] needs D[i-1,j], D[i,j-1],
+D[i-1,j-1]).  We scan over *columns* of the DP matrix and resolve the
+within-column dependency with the (min,+)-algebra identity:
+
+    D[i] = c_i + min(e_i, D[i-1])            (e_i = min of the two
+                                               previous-column entries)
+         = C_i + min_{k<=i} (e_k - C_{k-1})  (C = inclusive cumsum of c)
+         = C_i + cummin(e - shift(C, 1))
+
+so each column update is a cumsum + cummin — fully parallel on the VPU —
+and the whole DTW is a single ``lax.scan`` of length ``m_y``.  This is the
+pure-jnp oracle; the TPU hot path is ``repro.kernels.dtw_wavefront``
+(anti-diagonal wavefront, candidates on the lane axis).
+
+Band masking is applied *after* the column update (on D, never inside the
+cumsum) so the cumulative sums only ever contain real costs — masking with
+a BIG constant inside the cumsum would cause catastrophic cancellation for
+paths re-entering the band.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Large-but-finite "infinity".  float32 max is ~3.4e38; BIG must survive a
+# few additions of itself without overflowing.
+BIG = jnp.float32(1e30)
+
+
+def znormalize(x: jnp.ndarray, axis: int = -1, eps: float = 1e-8) -> jnp.ndarray:
+    """Z-normalise a time series (UCR-suite convention)."""
+    mu = jnp.mean(x, axis=axis, keepdims=True)
+    sd = jnp.std(x, axis=axis, keepdims=True)
+    return (x - mu) / (sd + eps)
+
+
+def _column_update(carry_col: jnp.ndarray, cost_col: jnp.ndarray,
+                   first_col_mask: jnp.ndarray) -> jnp.ndarray:
+    """One DP column via the cumsum/cummin (min,+) identity.
+
+    carry_col: (m_x,) previous column D[:, j-1]  (BIG outside band)
+    cost_col:  (m_x,) squared costs c[:, j]      (real values everywhere)
+    first_col_mask: scalar bool — True when j == 0 (no left neighbour).
+    """
+    prev_shift = jnp.concatenate([jnp.full((1,), BIG, carry_col.dtype),
+                                  carry_col[:-1]])
+    # e_i = min(D[i, j-1], D[i-1, j-1]); for row 0 only the left neighbour.
+    e = jnp.minimum(carry_col, prev_shift)
+    # For the very first column there is no left neighbour at all:
+    # D[i,0] = cumsum(c[:i,0]) — emulate with e_0 = 0, e_i>0 = BIG.
+    e0 = jnp.concatenate([jnp.zeros((1,), carry_col.dtype),
+                          jnp.full((carry_col.shape[0] - 1,), BIG,
+                                   carry_col.dtype)])
+    e = jnp.where(first_col_mask, e0, e)
+    csum = jnp.cumsum(cost_col)
+    shifted = jnp.concatenate([jnp.zeros((1,), csum.dtype), csum[:-1]])
+    # D[i] = C_i + cummin_k<=i (e_k - C_{k-1})
+    run = jax.lax.associative_scan(jnp.minimum, e - shifted)
+    col = csum + run
+    return jnp.minimum(col, BIG)
+
+
+@functools.partial(jax.jit, static_argnames=("band",))
+def dtw(x: jnp.ndarray, y: jnp.ndarray,
+        band: Optional[int] = None) -> jnp.ndarray:
+    """Exact (optionally Sakoe-Chiba banded) squared-DTW cost.
+
+    Args:
+      x: (m_x,) float array.
+      y: (m_y,) float array.
+      band: Sakoe-Chiba radius; ``None`` = unconstrained.  For rectangular
+        problems the band is measured around the scaled diagonal.
+
+    Returns:
+      scalar: min over warping paths of the summed squared differences.
+      (Take ``jnp.sqrt`` for the paper's distance; ranking is identical.)
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    m_x, m_y = x.shape[0], y.shape[0]
+    rows = jnp.arange(m_x)
+
+    if band is None:
+        in_band_fn = lambda j: jnp.ones((m_x,), bool)  # noqa: E731
+    else:
+        slope = m_x / m_y
+
+        def in_band_fn(j):
+            center = j * slope
+            return jnp.abs(rows - center) <= jnp.maximum(band, 1.0 * abs(m_x - m_y) + band)
+
+    def step(carry, j):
+        cost_col = (x - y[j]) ** 2
+        col = _column_update(carry, cost_col, j == 0)
+        col = jnp.where(in_band_fn(j), col, BIG)
+        return col, ()
+
+    init = jnp.full((m_x,), BIG, jnp.float32)
+    final_col, _ = jax.lax.scan(step, init, jnp.arange(m_y))
+    return final_col[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("band",))
+def dtw_batch(query: jnp.ndarray, candidates: jnp.ndarray,
+              band: Optional[int] = None) -> jnp.ndarray:
+    """DTW of one query against a batch of candidates: (C, m) -> (C,)."""
+    return jax.vmap(lambda c: dtw(query, c, band=band))(candidates)
+
+
+@functools.partial(jax.jit, static_argnames=("band",))
+def dtw_pairwise(xs: jnp.ndarray, ys: jnp.ndarray,
+                 band: Optional[int] = None) -> jnp.ndarray:
+    """All-pairs DTW: xs (A, m), ys (B, m) -> (A, B)."""
+    return jax.vmap(lambda q: dtw_batch(q, ys, band=band))(xs)
+
+
+def dtw_distance(x: jnp.ndarray, y: jnp.ndarray,
+                 band: Optional[int] = None) -> jnp.ndarray:
+    """Paper-convention distance: sqrt of the summed squared path cost."""
+    return jnp.sqrt(dtw(x, y, band=band))
+
+
+def dtw_dp_reference(x, y, band=None):
+    """O(m^2) numpy-style DP, for tests only (the 'obviously correct' DTW)."""
+    import numpy as np
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    m_x, m_y = len(x), len(y)
+    D = np.full((m_x, m_y), np.inf)
+    slope = m_x / m_y
+    for j in range(m_y):
+        for i in range(m_x):
+            if band is not None:
+                width = max(band, abs(m_x - m_y) + band)
+                if abs(i - j * slope) > width:
+                    continue
+            c = (x[i] - y[j]) ** 2
+            if i == 0 and j == 0:
+                D[i, j] = c
+            else:
+                best = np.inf
+                if i > 0:
+                    best = min(best, D[i - 1, j])
+                if j > 0:
+                    best = min(best, D[i, j - 1])
+                if i > 0 and j > 0:
+                    best = min(best, D[i - 1, j - 1])
+                D[i, j] = c + best
+    return D[-1, -1]

@@ -1,0 +1,199 @@
+"""SSH index — signatures, hash tables, and the device-side probe path.
+
+Two interchangeable probe backends:
+
+* **Host buckets** (`HostBuckets`): exact emulation of the paper's d hash
+  tables as Python dicts — reference semantics, used by tests and the
+  small-scale benchmarks.
+* **Device scan** (`signature_collisions` / `probe_topc`): the TPU-native
+  replacement — the (N, L) band-key matrix stays on device; probing is a
+  vectorised equality-count + top-C.  This is what shards across pods
+  (see `repro.distributed.dist_index`) and what the `collision_count`
+  Pallas kernel accelerates.
+
+Pipeline (paper Fig. 5): series → sketch bits → shingle histogram → CWS
+signature (K hashes) → L band keys → tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import minhash, shingle, sketch
+
+
+@dataclasses.dataclass(frozen=True)
+class SSHParams:
+    """SSH hyper-parameters (paper §4.5 / §5.5)."""
+    window: int = 80          # W — filter length
+    step: int = 3             # δ — slide stride
+    ngram: int = 15           # n — shingle length
+    num_filters: int = 1      # F — filter-bank size (F=1 == paper)
+    num_hashes: int = 20      # K — total CWS hashes
+    num_tables: int = 20      # L — hash tables (bands); rows = K / L
+    seed: int = 7
+
+    @property
+    def shingle_dim(self) -> int:
+        return shingle.shingle_space(self.ngram, self.num_filters)
+
+    def validate(self) -> None:
+        if self.num_hashes % self.num_tables:
+            raise ValueError("num_hashes must be divisible by num_tables")
+        if self.ngram > 20:
+            raise ValueError("shingle space 2^n exceeds 1M bins; use n<=20")
+
+
+@dataclasses.dataclass
+class SSHFunctions:
+    """Materialised random functions (filter bank + CWS fields)."""
+    params: SSHParams
+    filters: jnp.ndarray      # (W, F)
+    cws: minhash.CWSParams    # fields over (K, F·2^n)
+
+    @classmethod
+    def create(cls, params: SSHParams) -> "SSHFunctions":
+        params.validate()
+        key = jax.random.PRNGKey(params.seed)
+        kf, kc = jax.random.split(key)
+        filters = sketch.make_filter(kf, params.window, params.num_filters)
+        cws = minhash.make_cws(kc, params.num_hashes, params.shingle_dim)
+        return cls(params=params, filters=filters, cws=cws)
+
+
+@functools.partial(jax.jit, static_argnames=("step", "ngram"))
+def _signature_one(x, filters, cws, *, step: int, ngram: int):
+    bits = sketch.sketch_bits(x, filters, step)          # (N_B, F)
+    counts = shingle.shingle_histogram(bits, ngram)      # (F·2^n,)
+    return minhash.cws_hash(counts, cws)                 # (K,)
+
+
+def build_signatures(series: jnp.ndarray, fns: SSHFunctions,
+                     batch: int = 256) -> jnp.ndarray:
+    """(N, m) -> (N, K) int32 CWS signatures, chunked over the database."""
+    p = fns.params
+    n = series.shape[0]
+    sig_fn = jax.jit(jax.vmap(
+        lambda x: _signature_one(x, fns.filters, fns.cws,
+                                 step=p.step, ngram=p.ngram)))
+    out = []
+    for lo in range(0, n, batch):
+        out.append(np.asarray(sig_fn(series[lo:lo + batch])))
+    return jnp.asarray(np.concatenate(out, axis=0))
+
+
+def band_keys(signatures: jnp.ndarray, params: SSHParams) -> jnp.ndarray:
+    """(N, K) -> (N, L) uint32 bucket keys."""
+    return minhash.combine_bands(signatures, params.num_tables)
+
+
+@jax.jit
+def signature_collisions(query_keys: jnp.ndarray, db_keys: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """Number of tables in which query and candidate share a bucket.
+
+    query_keys: (L,), db_keys: (N, L) -> (N,) int32.
+    """
+    return jnp.sum((db_keys == query_keys[None, :]).astype(jnp.int32),
+                   axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("top_c",))
+def probe_topc(query_keys: jnp.ndarray, db_keys: jnp.ndarray, top_c: int
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-C candidates by collision count. Returns (ids, counts)."""
+    counts = signature_collisions(query_keys, db_keys)
+    vals, idx = jax.lax.top_k(counts, top_c)
+    return idx, vals
+
+
+class HostBuckets:
+    """Paper-faithful d hash tables (Python dicts), for reference/tests."""
+
+    def __init__(self, params: SSHParams):
+        self.params = params
+        self.tables: List[Dict[int, List[int]]] = [
+            defaultdict(list) for _ in range(params.num_tables)]
+
+    def insert(self, keys: np.ndarray, base_id: int = 0) -> None:
+        """keys: (N, L) uint32."""
+        keys = np.asarray(keys)
+        for i in range(keys.shape[0]):
+            for t in range(self.params.num_tables):
+                self.tables[t][int(keys[i, t])].append(base_id + i)
+
+    def probe(self, query_keys: np.ndarray) -> np.ndarray:
+        """Bucket members across tables (paper Alg. 2 lines 7-9), ranked by
+        how many tables they collide in (most-promising first)."""
+        from collections import Counter
+        query_keys = np.asarray(query_keys)
+        counts: Counter = Counter()
+        for t in range(self.params.num_tables):
+            counts.update(self.tables[t].get(int(query_keys[t]), ()))
+        if not counts:
+            return np.empty(0, np.int64)
+        ranked = [i for i, _ in counts.most_common()]
+        return np.asarray(ranked, dtype=np.int64)
+
+
+@dataclasses.dataclass
+class SSHIndex:
+    """End-to-end SSH index over a database of fixed-length series."""
+    fns: SSHFunctions
+    signatures: jnp.ndarray            # (N, K)
+    keys: jnp.ndarray                  # (N, L)
+    series: Optional[jnp.ndarray]      # (N, m) — kept for re-ranking
+    host_buckets: Optional[HostBuckets] = None
+
+    @classmethod
+    def build(cls, series: jnp.ndarray, params: SSHParams,
+              with_host_buckets: bool = False, batch: int = 256) -> "SSHIndex":
+        fns = SSHFunctions.create(params)
+        sigs = build_signatures(series, fns, batch=batch)
+        keys = band_keys(sigs, params)
+        hb = None
+        if with_host_buckets:
+            hb = HostBuckets(params)
+            hb.insert(np.asarray(keys))
+        return cls(fns=fns, signatures=sigs, keys=keys, series=series,
+                   host_buckets=hb)
+
+    def query_signature(self, q: jnp.ndarray) -> jnp.ndarray:
+        p = self.fns.params
+        return _signature_one(q, self.fns.filters, self.fns.cws,
+                              step=p.step, ngram=p.ngram)
+
+    def query_signatures_multiprobe(self, q: jnp.ndarray,
+                                    offsets: int) -> jnp.ndarray:
+        """Signatures of ``offsets`` shifted copies of the query.
+
+        Beyond-paper refinement: the shingle grid only aligns for shifts
+        ≡ 0 (mod δ); hashing the query at each residue offset recovers the
+        other δ-1 alignment classes at query time (the database is
+        untouched).  Returns (offsets, K).
+        """
+        p = self.fns.params
+        sigs = [self.query_signature(q[o:]) for o in range(offsets)]
+        return jnp.stack(sigs, axis=0)
+
+    def query_keys(self, q: jnp.ndarray) -> jnp.ndarray:
+        sig = self.query_signature(q)
+        return minhash.combine_bands(sig, self.fns.params.num_tables)
+
+    def insert(self, series: jnp.ndarray) -> None:
+        """Streaming insert (data-independent hashing ⇒ no retraining)."""
+        sigs = build_signatures(series, self.fns)
+        keys = band_keys(sigs, self.fns.params)
+        base = int(self.signatures.shape[0])
+        self.signatures = jnp.concatenate([self.signatures, sigs], axis=0)
+        self.keys = jnp.concatenate([self.keys, keys], axis=0)
+        if self.series is not None:
+            self.series = jnp.concatenate([self.series, series], axis=0)
+        if self.host_buckets is not None:
+            self.host_buckets.insert(np.asarray(keys), base_id=base)

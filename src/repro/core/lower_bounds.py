@@ -1,0 +1,106 @@
+"""DTW lower bounds (the branch-and-bound machinery of the UCR suite).
+
+Paper §3: the UCR suite cascades LB_Kim (O(1)), LB_Keogh (O(m)) and
+LB_Keogh2 (O(m)) before paying O(m^2) for exact DTW.  The paper's Table 1
+shows these bounds collapse for long series — we reproduce that in
+``benchmarks/table1_lb_pruning.py``.
+
+TPU adaptation: the UCR suite applies bounds *sequentially per candidate*
+with early exit.  Scalar early-exit control flow is hostile to SPMD and to
+the VPU, so we compute every bound as a *batched masked op* over all
+candidates and prune by boolean mask (identical pruning decisions, data
+parallel execution).  All bounds here are on *squared* costs so they are
+directly comparable with ``repro.core.dtw.dtw`` (squared-sum convention).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("radius",))
+def envelope(x: jnp.ndarray, radius: int):
+    """Upper/lower envelope of ``x`` within a Sakoe-Chiba band.
+
+    U_i = max(x[i-r : i+r+1]),  L_i = min(x[i-r : i+r+1]).
+
+    Implemented as a max/min over 2r+1 shifted copies — O(m·r) work but
+    fully vectorised (Lemire's O(m) deque does not vectorise).  x: (..., m).
+    """
+    m = x.shape[-1]
+    pads = [(0, 0)] * (x.ndim - 1) + [(radius, radius)]
+    hi = jnp.pad(x, pads, constant_values=-jnp.inf)
+    lo = jnp.pad(x, pads, constant_values=jnp.inf)
+    idx = jnp.arange(m)[:, None] + jnp.arange(2 * radius + 1)[None, :]
+    upper = jnp.max(hi[..., idx], axis=-1)
+    lower = jnp.min(lo[..., idx], axis=-1)
+    return upper, lower
+
+
+@jax.jit
+def lb_kim(query: jnp.ndarray, candidates: jnp.ndarray) -> jnp.ndarray:
+    """LB_Kim (first/last-point variant used by the UCR suite), squared.
+
+    query: (m,), candidates: (..., m) -> (...,)
+    """
+    first = (candidates[..., 0] - query[0]) ** 2
+    last = (candidates[..., -1] - query[-1]) ** 2
+    return first + last
+
+
+@jax.jit
+def lb_keogh(upper: jnp.ndarray, lower: jnp.ndarray,
+             candidates: jnp.ndarray) -> jnp.ndarray:
+    """LB_Keogh: distance of candidates to the query envelope, squared.
+
+    upper/lower: (m,) envelopes of the *query*; candidates: (..., m).
+    """
+    above = jnp.where(candidates > upper, (candidates - upper) ** 2, 0.0)
+    below = jnp.where(candidates < lower, (lower - candidates) ** 2, 0.0)
+    return jnp.sum(above + below, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("radius",))
+def lb_keogh2(query: jnp.ndarray, candidates: jnp.ndarray,
+              radius: int) -> jnp.ndarray:
+    """LB_Keogh with roles swapped: query against *candidate* envelopes."""
+    upper, lower = envelope(candidates, radius)
+    above = jnp.where(query > upper, (query - upper) ** 2, 0.0)
+    below = jnp.where(query < lower, (lower - query) ** 2, 0.0)
+    return jnp.sum(above + below, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("radius",))
+def cascade(query: jnp.ndarray, candidates: jnp.ndarray, radius: int,
+            best_so_far: jnp.ndarray) -> jnp.ndarray:
+    """Vectorised UCR-suite cascade. Returns the survivor mask.
+
+    A candidate survives iff *every* lower bound is below ``best_so_far``
+    (same decisions as the sequential cascade; evaluation is batched).
+    """
+    u, l = envelope(query, radius)
+    lb1 = lb_kim(query, candidates)
+    lb2 = lb_keogh(u, l, candidates)
+    lb3 = lb_keogh2(query, candidates, radius)
+    lb = jnp.maximum(jnp.maximum(lb1, lb2), lb3)
+    return lb < best_so_far
+
+
+@functools.partial(jax.jit, static_argnames=("radius",))
+def cascade_stats(query: jnp.ndarray, candidates: jnp.ndarray, radius: int,
+                  best_so_far: jnp.ndarray):
+    """Per-bound pruning fractions (paper Table 1 reproduction)."""
+    u, l = envelope(query, radius)
+    lb1 = lb_kim(query, candidates)
+    lb2 = lb_keogh(u, l, candidates)
+    lb3 = lb_keogh2(query, candidates, radius)
+    n = candidates.shape[0]
+    frac = lambda m: jnp.sum(m) / n  # noqa: E731
+    pruned_kim = frac(lb1 >= best_so_far)
+    pruned_keogh = frac(lb2 >= best_so_far)
+    pruned_keogh2 = frac(lb3 >= best_so_far)
+    combined = frac(jnp.maximum(jnp.maximum(lb1, lb2), lb3) >= best_so_far)
+    return dict(kim=pruned_kim, keogh=pruned_keogh, keogh2=pruned_keogh2,
+                combined=combined)

@@ -1,0 +1,174 @@
+"""Step 3 of SSH — weighted minwise hashing of the shingle set (§4.3).
+
+We implement Ioffe's Consistent Weighted Sampling (ICDM'10) and use its
+0-bit variant (Li, KDD'15 — the paper's reference [29]): the hash value is
+just the argmin element index, which empirically collides with probability
+≈ the weighted Jaccard similarity and removes the (index, t) pair bookkeeping.
+
+The CWS random fields r, c ~ Gamma(2,1), β ~ U(0,1) are precomputed per
+hash function over the full shingle space (K, D) — data *independent*, so
+the index supports streaming inserts and distribution drift (the paper's
+core argument vs learned hashing).
+
+Collision property (paper eq. 3):  Pr[h(x) = h(y)] = J_w(x, y).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CWSParams(NamedTuple):
+    """Random fields for K independent CWS hashes over a D-dim space."""
+    log_r: jnp.ndarray   # (K, D) — actually r itself; see make_cws
+    r: jnp.ndarray       # (K, D) Gamma(2,1)
+    log_c: jnp.ndarray   # (K, D) log of Gamma(2,1)
+    beta: jnp.ndarray    # (K, D) U(0,1)
+
+    @property
+    def num_hashes(self) -> int:
+        return self.r.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.r.shape[1]
+
+
+def make_cws(key: jax.Array, num_hashes: int, dim: int) -> CWSParams:
+    """Sample the CWS random fields.  Gamma(2,1) = -log(u1) - log(u2)."""
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    shape = (num_hashes, dim)
+    u1 = jax.random.uniform(k1, shape, jnp.float32, 1e-12, 1.0)
+    u2 = jax.random.uniform(k2, shape, jnp.float32, 1e-12, 1.0)
+    r = -jnp.log(u1) - jnp.log(u2)
+    v1 = jax.random.uniform(k3, shape, jnp.float32, 1e-12, 1.0)
+    v2 = jax.random.uniform(k4, shape, jnp.float32, 1e-12, 1.0)
+    c = -jnp.log(v1) - jnp.log(v2)
+    beta = jax.random.uniform(k5, shape, jnp.float32)
+    return CWSParams(log_r=jnp.log(r), r=r, log_c=jnp.log(c), beta=beta)
+
+
+@jax.jit
+def cws_hash(weights: jnp.ndarray, params: CWSParams) -> jnp.ndarray:
+    """0-bit CWS signature of one weighted set.
+
+    weights: (D,) non-negative -> (K,) int32 argmin indices.
+
+    ln a_i = ln c_i - r_i (t_i - β_i) - r_i,
+    t_i = floor(ln w_i / r_i + β_i);  elements with w_i = 0 are excluded.
+    """
+    w = weights.astype(jnp.float32)
+    logw = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)), 0.0)
+    t = jnp.floor(logw[None, :] / params.r + params.beta)       # (K, D)
+    ln_a = params.log_c - params.r * (t - params.beta) - params.r
+    ln_a = jnp.where(w[None, :] > 0, ln_a, jnp.inf)
+    return jnp.argmin(ln_a, axis=1).astype(jnp.int32)
+
+
+@jax.jit
+def cws_hash_dense_batch(weights: jnp.ndarray, params: CWSParams
+                         ) -> jnp.ndarray:
+    """Batch-parallel 0-bit CWS: (B, D) -> (B, K).
+
+    Scans over the K hash functions (K is small, ~20-64) so the *batch*
+    axis stays a single shardable dimension — unlike a per-series map,
+    which lowers to a while loop XLA cannot partition (this was the 255×
+    replication found in the ssh build_2048 baseline; EXPERIMENTS.md
+    §Perf).  Peak temp per scan step is one (B, D) f32 tile.
+    """
+    w = weights.astype(jnp.float32)
+    logw = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)), 0.0)
+    active = w > 0
+
+    def one_hash(_, fields):
+        r, log_c, beta = fields
+        t = jnp.floor(logw / r[None, :] + beta[None, :])
+        ln_a = log_c[None, :] - r[None, :] * (t - beta[None, :]) - r[None, :]
+        ln_a = jnp.where(active, ln_a, jnp.inf)
+        return _, jnp.argmin(ln_a, axis=1).astype(jnp.int32)
+
+    _, sigs = jax.lax.scan(one_hash, None,
+                           (params.r, params.log_c, params.beta))
+    return sigs.T                                    # (B, K)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def cws_hash_batch(weights: jnp.ndarray, params: CWSParams,
+                   chunk: int = 64) -> jnp.ndarray:
+    """(B, D) -> (B, K), evaluated in chunks to bound the (chunk, K, D) temp."""
+    b = weights.shape[0]
+    pad = (-b) % chunk
+    wpad = jnp.pad(weights, ((0, pad), (0, 0)))
+    blocks = wpad.reshape(-1, chunk, weights.shape[1])
+
+    def body(blk):
+        return jax.vmap(lambda w: cws_hash(w, params))(blk)
+
+    sigs = jax.lax.map(body, blocks).reshape(-1, params.num_hashes)
+    return sigs[:b]
+
+
+def combine_bands(signatures: jnp.ndarray, num_tables: int) -> jnp.ndarray:
+    """Group K hashes into L bands and mix each band into one bucket key.
+
+    signatures: (..., K) int32, K = L * rows  ->  (..., L) uint32.
+    Polynomial rolling hash per band (Carter–Wegman style).
+    """
+    k = signatures.shape[-1]
+    if k % num_tables:
+        raise ValueError(f"K={k} not divisible by L={num_tables}")
+    rows = k // num_tables
+    bands = signatures.reshape(signatures.shape[:-1] + (num_tables, rows))
+    bands = bands.astype(jnp.uint32)
+    mult = jnp.uint32(0x9E3779B1)  # golden-ratio odd multiplier
+    acc = jnp.zeros(bands.shape[:-1], jnp.uint32)
+    for i in range(rows):  # static: rows is a config constant
+        acc = (acc * mult) ^ (bands[..., i] + jnp.uint32(0x85EBCA6B))
+        acc = acc ^ (acc >> 15)
+    return acc
+
+
+def collision_probability_estimate(sig_a: jnp.ndarray, sig_b: jnp.ndarray
+                                   ) -> jnp.ndarray:
+    """Fraction of agreeing hashes — unbiased estimator of weighted Jaccard."""
+    return jnp.mean((sig_a == sig_b).astype(jnp.float32), axis=-1)
+
+
+# --------------------------------------------------------------------------
+# b-bit signature packing (Li & König — the paper's ref [30]) — beyond-paper
+# storage/bandwidth optimisation: keep only the low b bits of each CWS hash,
+# 32/b hashes per int32 word.  Collision probability becomes
+# J + (1 - J)/2^b; ranking by agreement count is preserved (the +1/2^b
+# offset is rank-monotone), while index bytes shrink 32/b-fold — the probe
+# is HBM-bound (see §Roofline), so bandwidth is the win.
+# --------------------------------------------------------------------------
+
+def pack_signatures(signatures: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """(..., K) int32 -> (..., K*bits/32) int32 packed b-bit sketches."""
+    if 32 % bits:
+        raise ValueError("bits must divide 32")
+    per_word = 32 // bits
+    k = signatures.shape[-1]
+    if k % per_word:
+        raise ValueError(f"K={k} not divisible by {per_word} hashes/word")
+    mask = jnp.int32((1 << bits) - 1)
+    s = (signatures & mask).reshape(signatures.shape[:-1]
+                                    + (k // per_word, per_word))
+    shifts = (jnp.arange(per_word, dtype=jnp.int32) * bits)
+    return jnp.sum(s << shifts, axis=-1).astype(jnp.int32)
+
+
+def packed_collisions(query_packed: jnp.ndarray, db_packed: jnp.ndarray,
+                      bits: int = 8) -> jnp.ndarray:
+    """Agreement counts over b-bit lanes. query (W,), db (N, W) -> (N,)."""
+    per_word = 32 // bits
+    mask = jnp.int32((1 << bits) - 1)
+    x = jnp.bitwise_xor(db_packed, query_packed[None, :])     # (N, W)
+    total = jnp.zeros(db_packed.shape[:-1], jnp.int32)
+    for i in range(per_word):                                 # static unroll
+        lane = (x >> (i * bits)) & mask
+        total = total + jnp.sum((lane == 0).astype(jnp.int32), axis=-1)
+    return total

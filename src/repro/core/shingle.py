@@ -1,0 +1,90 @@
+"""Step 2 of SSH — shingle (n-gram) generation over the bit-profile (§4.2).
+
+The bit string B_X is turned into a *weighted set* S_X: every length-n
+substring (shingle), with its occurrence count as weight.  Shift-invariance
+of the final similarity comes from this step: a motif occurring at a
+different offset contributes the same shingles.
+
+TPU adaptation: a hash-map of n-gram counts is replaced by a dense
+histogram over the full shingle space 2^n (n=15 → 32768 bins — a few KB of
+VMEM per series).  Shingle ids are bit-packed with static rolling shifts;
+counting is a ``segment_sum``-style scatter-add, the canonical TPU
+reduction-by-key.
+
+With a filter bank (F > 1), each filter column produces its own bit string
+and histogram; the weighted set is the concatenation (size F · 2^n), which
+preserves the per-filter n-gram statistics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def shingle_space(n: int, num_filters: int = 1) -> int:
+    return num_filters * (1 << n)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def pack_ngrams(bits: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Bit-pack all length-n windows of a bit string.
+
+    bits: (..., N_B) uint8 in {0,1} -> ids (..., N_B - n + 1) int32,
+    id_i = sum_j bits[i+j] << j.
+    """
+    n_b = bits.shape[-1]
+    if n_b < n:
+        raise ValueError(f"bit string length {n_b} < shingle length {n}")
+    out = n_b - n + 1
+    acc = jnp.zeros(bits.shape[:-1] + (out,), jnp.int32)
+    for j in range(n):  # static unroll: n is a hyper-parameter (~15)
+        acc = acc + (bits[..., j:j + out].astype(jnp.int32) << j)
+    return acc
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def shingle_histogram(bits: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Weighted set S_X as a dense histogram.
+
+    bits: (N_B, F) uint8 -> counts (F * 2^n,) int32.
+    """
+    n_b, f = bits.shape
+    ids = pack_ngrams(bits.T, n)                      # (F, N_B - n + 1)
+    offsets = (jnp.arange(f, dtype=jnp.int32) << n)[:, None]
+    flat = (ids + offsets).reshape(-1)
+    counts = jnp.zeros((f << n,), jnp.int32).at[flat].add(1)
+    return counts
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def shingle_histogram_batch(bits: jnp.ndarray, n: int) -> jnp.ndarray:
+    """(B, N_B, F) -> (B, F * 2^n) via one batched 2-D scatter-add.
+
+    Batch-parallel (B stays a shardable leading axis) — the building block
+    of the distributed index build.
+    """
+    b, n_b, f = bits.shape
+    ids = pack_ngrams(bits.transpose(0, 2, 1), n)          # (B, F, out)
+    offsets = (jnp.arange(f, dtype=jnp.int32) << n)[None, :, None]
+    flat = (ids + offsets).reshape(b, -1)                  # (B, F*out)
+    # vmapped 1-D scatter-add: the batch dim is an explicit scatter batch
+    # dim, so GSPMD keeps the histogram shard-local (a flat 2-D scatter
+    # with iota row indices all-reduced the full (B, 2^n) matrix — 8.6 GB
+    # per build step at the paper's scale; EXPERIMENTS.md §Perf).
+    dim = f << n
+
+    def row_hist(row_ids):
+        return jnp.zeros((dim,), jnp.int32).at[row_ids].add(1)
+
+    return jax.vmap(row_hist)(flat)
+
+
+def weighted_jaccard(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Generalised weighted Jaccard J(a,b) = Σ min / Σ max (paper eq. 2)."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    num = jnp.sum(jnp.minimum(a, b), axis=-1)
+    den = jnp.sum(jnp.maximum(a, b), axis=-1)
+    return jnp.where(den > 0, num / den, 0.0)

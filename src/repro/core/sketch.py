@@ -1,0 +1,64 @@
+"""Step 1 of SSH — sliding-window bit-profile (sketch) extraction (§4.1).
+
+A random Gaussian filter ``r`` (length W) slides over the series with step
+δ; each window contributes ``sign(<window, r>)`` — one bit.  This is a
+signed random projection of every local window, i.e. a 1-bit LSH of the
+local profile.
+
+TPU adaptation (DESIGN.md §3): the windows×filter product is a strided
+matvec; generalised to a bank of F filters it becomes a (N_B, W) x (W, F)
+matmul that feeds the MXU — ``repro.kernels.sketch_conv`` implements the
+tiled Pallas version.  F=1 reproduces the paper exactly.
+
+Bits are stored as uint8 in {0, 1} (1 ⇔ projection >= 0, matching the
+paper's +1; 0 ⇔ the paper's -1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def num_sketch_bits(m: int, window: int, step: int) -> int:
+    """N_B = floor((m - W) / δ) + 1 (number of full windows)."""
+    if m < window:
+        raise ValueError(f"series length {m} < filter window {window}")
+    return (m - window) // step + 1
+
+
+def make_filter(key: jax.Array, window: int, num_filters: int = 1
+                ) -> jnp.ndarray:
+    """Spherically-symmetric random filter bank r ~ N(0,1), (W, F)."""
+    return jax.random.normal(key, (window, num_filters), jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("step",))
+def sketch_projections(x: jnp.ndarray, filters: jnp.ndarray, step: int
+                       ) -> jnp.ndarray:
+    """Raw sliding-window projections (pre-sign). x: (..., m) -> (..., N_B, F).
+
+    Windows are gathered with a static index grid (strided im2col); the
+    contraction runs on the last axis.
+    """
+    window, _ = filters.shape
+    m = x.shape[-1]
+    n_b = num_sketch_bits(m, window, step)
+    idx = jnp.arange(n_b)[:, None] * step + jnp.arange(window)[None, :]
+    windows = x[..., idx]                     # (..., N_B, W)
+    return windows @ filters                  # (..., N_B, F)
+
+
+@functools.partial(jax.jit, static_argnames=("step",))
+def sketch_bits(x: jnp.ndarray, filters: jnp.ndarray, step: int
+                ) -> jnp.ndarray:
+    """Bit-profile B_X: (..., m) -> (..., N_B, F) uint8 in {0,1}."""
+    proj = sketch_projections(x, filters, step)
+    return (proj >= 0).astype(jnp.uint8)
+
+
+def sketch_shape(m: int, window: int, step: int, num_filters: int
+                 ) -> Tuple[int, int]:
+    return num_sketch_bits(m, window, step), num_filters

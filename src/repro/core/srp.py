@@ -1,0 +1,38 @@
+"""Signed Random Projection baseline (paper §5.2).
+
+The paper's sanity-check baseline: treat the whole series as one long
+vector and hash with K signed random projections (cosine-similarity LSH).
+SRP has no alignment mechanism, so it fails on warped series — reproduced
+in ``benchmarks/table2_precision.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def make_srp(key: jax.Array, num_hashes: int, dim: int) -> jnp.ndarray:
+    return jax.random.normal(key, (dim, num_hashes), jnp.float32)
+
+
+@jax.jit
+def srp_bits(x: jnp.ndarray, planes: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., m) -> (..., K) uint8 sign bits."""
+    return ((x @ planes) >= 0).astype(jnp.uint8)
+
+
+@jax.jit
+def hamming_similarity(query_bits: jnp.ndarray, db_bits: jnp.ndarray
+                       ) -> jnp.ndarray:
+    """Fraction of matching bits: (K,), (N, K) -> (N,)."""
+    return jnp.mean((query_bits[None, :] == db_bits).astype(jnp.float32),
+                    axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("topk",))
+def srp_topk(query_bits: jnp.ndarray, db_bits: jnp.ndarray, topk: int):
+    sim = hamming_similarity(query_bits, db_bits)
+    vals, idx = jax.lax.top_k(sim, topk)
+    return idx, vals

@@ -1,0 +1,6 @@
+from repro.data.timeseries import (random_walk, synthetic_ecg,
+                                   extract_subsequences, warp_series,
+                                   make_benchmark_db)
+
+__all__ = ["random_walk", "synthetic_ecg", "extract_subsequences",
+           "warp_series", "make_benchmark_db"]

@@ -1,0 +1,90 @@
+"""Fault tolerance + elasticity policies (host-level logic, unit-tested).
+
+On a real multi-pod deployment these run in the launcher/controller; the
+device-side counterparts are the atomic checkpoints (repro.checkpoint)
+and the deterministic seeded data pipeline (resume = same batches).
+
+* ``ShardPlan`` — deterministic assignment of data shards to workers with
+  hot-spare reassignment on failure (node-failure tolerance) and
+  re-balancing on resize (elastic scaling).
+* ``StragglerPolicy`` — EWMA step-time tracking; a worker is a straggler
+  when slower than ``threshold`` × fleet median for ``patience``
+  consecutive steps → its shards migrate to the fastest workers (backup-
+  task mitigation, MapReduce-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class ShardPlan:
+    n_shards: int
+    workers: List[str]
+    assignment: Dict[int, str] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if not self.assignment:
+            self.rebalance()
+
+    def rebalance(self) -> None:
+        """Deterministic round-robin over the sorted worker list."""
+        ws = sorted(self.workers)
+        self.assignment = {s: ws[s % len(ws)] for s in range(self.n_shards)}
+
+    def shards_of(self, worker: str) -> List[int]:
+        return [s for s, w in self.assignment.items() if w == worker]
+
+    def fail(self, worker: str) -> List[int]:
+        """Worker died: its shards move to the least-loaded survivors.
+        Returns the migrated shard ids."""
+        if worker not in self.workers:
+            return []
+        self.workers = [w for w in self.workers if w != worker]
+        if not self.workers:
+            raise RuntimeError("no workers left")
+        moved = [s for s, w in self.assignment.items() if w == worker]
+        for s in moved:
+            load = {w: len(self.shards_of(w)) for w in self.workers}
+            self.assignment[s] = min(sorted(load), key=lambda w: load[w])
+        return moved
+
+    def resize(self, new_workers: List[str]) -> int:
+        """Elastic scale up/down; returns number of shards that moved."""
+        old = dict(self.assignment)
+        self.workers = list(new_workers)
+        self.rebalance()
+        return sum(1 for s in old if old[s] != self.assignment[s])
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    threshold: float = 1.5         # × fleet median
+    patience: int = 3
+    alpha: float = 0.3             # EWMA smoothing
+    ewma: Dict[str, float] = dataclasses.field(default_factory=dict)
+    strikes: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def observe(self, worker: str, step_seconds: float) -> None:
+        prev = self.ewma.get(worker, step_seconds)
+        self.ewma[worker] = (1 - self.alpha) * prev + self.alpha * \
+            step_seconds
+
+    def median(self) -> float:
+        vals = sorted(self.ewma.values())
+        return vals[len(vals) // 2] if vals else 0.0
+
+    def check(self, worker: str) -> bool:
+        """True when the worker should be treated as a straggler."""
+        med = self.median()
+        if med <= 0:
+            return False
+        if self.ewma.get(worker, 0.0) > self.threshold * med:
+            self.strikes[worker] = self.strikes.get(worker, 0) + 1
+        else:
+            self.strikes[worker] = 0
+        return self.strikes.get(worker, 0) >= self.patience
+
+    def stragglers(self) -> List[str]:
+        return [w for w in list(self.ewma) if self.check(w)]

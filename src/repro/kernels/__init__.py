@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the SSH hot-spots (validated via interpret=True).
+
+  sketch_conv      — SSH step 1: sliding-window random projections
+  dtw_wavefront    — banded DTW re-rank (anti-diagonal wavefront)
+  collision_count  — LSH signature probe (agreement counting)
+
+``ops`` holds the dispatching wrappers, ``ref`` the pure-jnp oracles.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

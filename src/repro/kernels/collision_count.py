@@ -1,0 +1,58 @@
+"""Pallas TPU kernel — LSH signature collision counting (index probe).
+
+The device-side probe replaces hash-bucket pointer chasing (DESIGN.md §3):
+for a query signature (K int32 hashes) and the database signature matrix
+(N, K), count per-row agreements.  Bandwidth-bound: N·K int32 reads per
+probe, so the kernel keeps the query resident and streams the database
+through VMEM with candidates on the lane axis.
+
+Layout: the wrapper transposes signatures to (K, N) so each block is
+(K_pad, 128) — K on sublanes, candidates on lanes; the count is a sublane
+reduction.  Padding rows use disjoint sentinels so they never match.
+
+Grid: (N / 128,).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+_DB_SENTINEL = jnp.int32(-2147483648)
+_Q_SENTINEL = jnp.int32(2147483647)
+
+
+def _kernel(q_ref, db_ref, o_ref):
+    q = q_ref[...]                                   # (K_pad, 1)
+    db = db_ref[...]                                 # (K_pad, LANES)
+    eq = (db == q).astype(jnp.int32)
+    o_ref[...] = jnp.sum(eq, axis=0, keepdims=True)  # (1, LANES)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def collision_count(query_keys: jnp.ndarray, db_keys: jnp.ndarray,
+                    interpret: bool = False) -> jnp.ndarray:
+    """query (L,), db (N, L) int32 -> (N,) int32 match counts."""
+    n, k = db_keys.shape
+    kp = (-k) % 8
+    np_ = (-n) % LANES
+    db = jnp.pad(db_keys.astype(jnp.int32).T, ((0, kp), (0, np_)),
+                 constant_values=_DB_SENTINEL)         # (K_pad, N_pad)
+    q = jnp.pad(query_keys.astype(jnp.int32)[:, None], ((0, kp), (0, 0)),
+                constant_values=_Q_SENTINEL)           # (K_pad, 1)
+
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((1, n + np_), jnp.int32),
+        grid=((n + np_) // LANES,),
+        in_specs=[
+            pl.BlockSpec((k + kp, 1), lambda g: (0, 0)),
+            pl.BlockSpec((k + kp, LANES), lambda g: (0, g)),
+        ],
+        out_specs=pl.BlockSpec((1, LANES), lambda g: (0, g)),
+        interpret=interpret,
+    )(q, db)
+    return out[0, :n]

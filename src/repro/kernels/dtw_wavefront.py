@@ -1,0 +1,114 @@
+"""Pallas TPU kernel — banded DTW re-rank, anti-diagonal wavefront.
+
+The DTW re-rank (paper Alg. 2 line 10) is the compute hot-spot of an SSH
+query: O(C · m · band) after hashing prunes N → C.  GPU implementations
+assign one thread per DP cell along the wavefront; the TPU adaptation maps
+
+  * candidates → the 128-wide lane axis (one DTW per lane),
+  * the Sakoe-Chiba band offset → the sublane axis,
+  * anti-diagonals → a sequential fori_loop (2m-1 steps).
+
+All cells of an anti-diagonal depend only on the previous two diagonals,
+so every loop step is one dependence-free (B_w, 128) vector op — no
+scalar DP, no data-dependent control flow (early-abandoning is replaced
+by the band bound, see DESIGN.md §3).
+
+Index algebra (r = band radius, u ∈ [0, 2r+2) the band offset):
+  diagonal d holds cells (i, j = d - i); we store them at
+  u = i - offset_d with offset_d = floor(d/2) - r.  Then
+    D[i-1, j]   ← prev1[u]   (d even) / prev1[u-1] (d odd)
+    D[i, j-1]   ← prev1[u+1] (d even) / prev1[u]   (d odd)
+    D[i-1, j-1] ← prev2[u]   (always)
+  and the answer sits at u = r on the final diagonal d = 2m-2.
+
+To avoid in-kernel reversed loads, the wrapper passes candidates
+time-REVERSED (and transposed to (time, lane)): x[j] = x_rev[m-1-j] turns
+the j-descending gather into a contiguous ascending slice.
+
+VMEM per block: query (m_pad, 1) + candidates (m_pad, 128) + two carry
+tiles (B_w, 128)  ≈ 4·(m·129 + 2·B_w·128) bytes — ~1.2 MB at m=2048,
+r=128; well inside the ~16 MB v5e VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BIG = 1e30  # python float: pallas kernels must not capture device constants
+
+
+def _kernel(q_ref, x_ref, o_ref, *, m: int, r: int, b_w: int, pad: int):
+    u = jax.lax.broadcasted_iota(jnp.int32, (b_w, LANES), 0)
+
+    def shift_down(a):  # element u <- a[u-1]
+        return jnp.concatenate(
+            [jnp.full((1, LANES), BIG, a.dtype), a[:-1, :]], axis=0)
+
+    def shift_up(a):    # element u <- a[u+1]
+        return jnp.concatenate(
+            [a[1:, :], jnp.full((1, LANES), BIG, a.dtype)], axis=0)
+
+    def body(d, carry):
+        prev1, prev2 = carry
+        offset = d // 2 - r
+        i = offset + u                      # query index of cell u
+        j = d - i                           # candidate index of cell u
+        # q[i] for u ascending — contiguous slice of the padded query
+        q_vals = pl.load(q_ref, (pl.ds(offset + pad, b_w), slice(None)))
+        # x[j] = x_rev[m-1-j]; ascending in u — contiguous slice
+        x_vals = pl.load(x_ref, (pl.ds(m - 1 - d + offset + pad, b_w),
+                                 slice(None)))
+        cost = (q_vals - x_vals) ** 2       # (b_w, LANES)
+
+        even = (d % 2) == 0
+        top = jnp.where(even, prev1, shift_down(prev1))
+        left = jnp.where(even, shift_up(prev1), prev1)
+        best = jnp.minimum(jnp.minimum(top, left), prev2)
+        best = jnp.where((i == 0) & (j == 0), 0.0, best)
+        valid = (i >= 0) & (i < m) & (j >= 0) & (j < m) & \
+                (jnp.abs(i - j) <= r)
+        d_new = jnp.where(valid, jnp.minimum(cost + best, BIG), BIG)
+        return (d_new, prev1)
+
+    init = (jnp.full((b_w, LANES), BIG, jnp.float32),
+            jnp.full((b_w, LANES), BIG, jnp.float32))
+    final1, _ = jax.lax.fori_loop(0, 2 * m - 1, body, init)
+    o_ref[...] = final1[r, :][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("band", "interpret"))
+def dtw_wavefront(query: jnp.ndarray, candidates: jnp.ndarray,
+                  band: int, interpret: bool = False) -> jnp.ndarray:
+    """Banded squared-DTW: query (m,), candidates (C, m) -> (C,) float32.
+
+    ``band`` is the Sakoe-Chiba radius (use m-1 for unconstrained).
+    """
+    c, m = candidates.shape
+    assert query.shape[0] == m, "query/candidate lengths must match"
+    r = min(band, m - 1)
+    b_w = 2 * r + 2
+    b_w += (-b_w) % 8                       # sublane alignment
+    pad = b_w + 2                           # slack so every ds() is in-bounds
+
+    cp = (-c) % LANES
+    # time-reversed, (time, lane) layout, padded both ends
+    x_rev = candidates.astype(jnp.float32)[:, ::-1].T       # (m, C)
+    x_rev = jnp.pad(x_rev, ((pad, pad), (0, cp)))
+    q_pad = jnp.pad(query.astype(jnp.float32)[:, None], ((pad, pad), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, m=m, r=r, b_w=b_w, pad=pad),
+        out_shape=jax.ShapeDtypeStruct((1, c + cp), jnp.float32),
+        grid=((c + cp) // LANES,),
+        in_specs=[
+            pl.BlockSpec((m + 2 * pad, 1), lambda g: (0, 0)),
+            pl.BlockSpec((m + 2 * pad, LANES), lambda g: (0, g)),
+        ],
+        out_specs=pl.BlockSpec((1, LANES), lambda g: (0, g)),
+        interpret=interpret,
+    )(q_pad, x_rev)
+    return out[0, :c]

@@ -1,0 +1,76 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: ``use_pallas=None`` (default) picks the Pallas kernel on
+TPU backends and the pure-jnp reference elsewhere; tests force both paths
+(``interpret=True`` executes the kernel body in Python on CPU).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.collision_count import collision_count as _collision_pallas
+from repro.kernels.dtw_wavefront import dtw_wavefront as _dtw_pallas
+from repro.kernels.sketch_conv import sketch_conv as _sketch_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def sketch_conv(x: jnp.ndarray, filters: jnp.ndarray, step: int,
+                use_pallas: Optional[bool] = None,
+                interpret: bool = False) -> jnp.ndarray:
+    """Sliding-window projections (B, m) x (W, F) -> (B, N_B, F)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _sketch_pallas(x, filters, step,
+                              interpret=interpret or not _on_tpu())
+    return ref.sketch_conv_ref(x, filters, step)
+
+
+def sketch_bits(x: jnp.ndarray, filters: jnp.ndarray, step: int,
+                **kw) -> jnp.ndarray:
+    return (sketch_conv(x, filters, step, **kw) >= 0).astype(jnp.uint8)
+
+
+def dtw_rerank(query: jnp.ndarray, candidates: jnp.ndarray, band: int,
+               use_pallas: Optional[bool] = None,
+               interpret: bool = False) -> jnp.ndarray:
+    """Banded squared-DTW of query vs candidate batch -> (C,)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _dtw_pallas(query, candidates, band,
+                           interpret=interpret or not _on_tpu())
+    return ref.dtw_wavefront_ref(query, candidates, band=band)
+
+
+def collision_count(query_keys: jnp.ndarray, db_keys: jnp.ndarray,
+                    use_pallas: Optional[bool] = None,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Signature agreement counts (L,) x (N, L) -> (N,)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _collision_pallas(query_keys, db_keys,
+                                 interpret=interpret or not _on_tpu())
+    return ref.collision_count_ref(query_keys, db_keys)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True,
+                    use_pallas: Optional[bool] = None,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Fused attention (B, H, S, D) — Pallas on TPU, oracle elsewhere."""
+    from repro.kernels.flash_attention import flash_attention as _fa
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _fa(q, k, v, causal=causal,
+                   interpret=interpret or not _on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal)

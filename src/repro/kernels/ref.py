@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``<name>_ref`` is the semantic ground truth the kernels are tested
+against (tests sweep shapes/dtypes and assert_allclose).  They are also
+the CPU/GPU fallback used when ``use_pallas=False``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dtw import dtw_batch as _dtw_batch
+from repro.core.sketch import sketch_projections as _sketch_projections
+
+
+@functools.partial(jax.jit, static_argnames=("step",))
+def sketch_conv_ref(x: jnp.ndarray, filters: jnp.ndarray, step: int
+                    ) -> jnp.ndarray:
+    """Sliding-window projections. x (B, m), filters (W, F) -> (B, N_B, F)."""
+    return _sketch_projections(x, filters, step)
+
+
+@functools.partial(jax.jit, static_argnames=("band",))
+def dtw_wavefront_ref(query: jnp.ndarray, candidates: jnp.ndarray,
+                      band: Optional[int] = None) -> jnp.ndarray:
+    """Banded squared-DTW. query (m,), candidates (C, m) -> (C,)."""
+    return _dtw_batch(query, candidates, band=band)
+
+
+@jax.jit
+def collision_count_ref(query_keys: jnp.ndarray, db_keys: jnp.ndarray
+                        ) -> jnp.ndarray:
+    """query (L,), db (N, L) int32 -> (N,) int32 per-row match counts."""
+    return jnp.sum((db_keys == query_keys[None, :]).astype(jnp.int32),
+                   axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = False) -> jnp.ndarray:
+    """Plain softmax attention. q (B,H,S,D), k/v (B,H,T,D) -> (B,H,S,D)."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k) * scale
+    if causal:
+        s, t = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs.astype(v.dtype), v)

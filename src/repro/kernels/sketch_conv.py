@@ -1,0 +1,75 @@
+"""Pallas TPU kernel — SSH step 1: sliding-window random projections.
+
+The paper slides one Gaussian filter r (length W, stride δ) over each
+series and keeps sign bits.  On TPU we tile the series batch over the
+sublane axis and the output (window) positions over the lane axis.
+
+Stride-δ windows would need strided VMEM loads (hostile to Mosaic), so the
+wrapper performs a **phase decomposition**: the series is laid out as
+(B, δ, L) with ``xp[b, p, i] = x[b, i*δ + p]``.  Filter tap w = a·δ + p of
+output position t then reads the *contiguous* lane slice
+``xp[:, p, t + a : t + a + TN]`` — every tap becomes a shifted
+fused-multiply-add on a (TB, TN) tile, unrolled over the W taps (W is a
+hyper-parameter, ~30–80).  Arithmetic intensity: W FLOPs per output
+element, all operands VMEM-resident.
+
+Grid: (B / TB, N_B / TN).  Blocks:
+  xp      (TB, δ, L)     — whole phase-decomposed row, index (i, 0, 0)
+  filters (W, F)         — resident, index (0, 0)
+  out     (F, TB, TN)    — index (0, i, j)   (transposed back by wrapper)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TB = 8     # series rows per tile (sublane)
+TN = 128   # window positions per tile (lane)
+
+
+def _kernel(x_ref, f_ref, o_ref, *, step: int, window: int, num_f: int):
+    j = pl.program_id(1)
+    base = j * TN
+    filt = f_ref[...]                          # (W, F)
+    acc = jnp.zeros((num_f, TB, TN), jnp.float32)
+    for w in range(window):                    # static unroll over taps
+        a, p = divmod(w, step)
+        taps = pl.load(x_ref, (slice(None), p, pl.ds(base + a, TN)))
+        acc = acc + filt[w][:, None, None] * taps[None, :, :]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("step", "interpret"))
+def sketch_conv(x: jnp.ndarray, filters: jnp.ndarray, step: int,
+                interpret: bool = False) -> jnp.ndarray:
+    """Sliding-window projections via Pallas. x (B, m), filters (W, F).
+
+    Returns (B, N_B, F) float32 with N_B = (m - W)//step + 1.
+    """
+    b, m = x.shape
+    window, num_f = filters.shape
+    n_b = (m - window) // step + 1
+
+    bp = (-b) % TB
+    n_bp = n_b + ((-n_b) % TN)
+    # phase decomposition: xp[b, p, i] = x[b, i*step + p]
+    l = n_bp + (window - 1) // step + 1
+    xflat = jnp.pad(x.astype(jnp.float32),
+                    ((0, bp), (0, l * step - m)))
+    xp = xflat.reshape(b + bp, l, step).transpose(0, 2, 1)   # (B, δ, L)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, step=step, window=window, num_f=num_f),
+        out_shape=jax.ShapeDtypeStruct((num_f, b + bp, n_bp), jnp.float32),
+        grid=((b + bp) // TB, n_bp // TN),
+        in_specs=[
+            pl.BlockSpec((TB, step, l), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((window, num_f), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_f, TB, TN), lambda i, j: (0, i, j)),
+        interpret=interpret,
+    )(xp, filters.astype(jnp.float32))
+    return out.transpose(1, 2, 0)[:b, :n_b, :]

@@ -1,0 +1,107 @@
+"""Post-SPMD HLO analysis: collective bytes, op census, roofline terms.
+
+``cost_analysis()`` has FLOPs and memory traffic but NOT collective bytes
+— we parse the partitioned HLO text and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+Parsing is line-streamed (compiled dbrx HLO runs to ~100 MB).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Iterable
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  "bf16[16,512,128]{2,1,0:T(8,128)}"  or  "f32[] "
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\([^=]*\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?)\s+([a-z0-9\-]+)")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(line: str) -> int:
+    """Bytes of the op RESULT (the '=' left side shapes)."""
+    lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1]
+    # take shapes appearing before the op name's '(' — i.e. result shapes
+    head = line.split("(", 1)[0]
+    return sum(shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+
+
+def collective_stats(hlo_text_lines: Iterable[str]) -> Dict[str, Dict]:
+    """Per-collective-kind {count, bytes} from partitioned HLO lines.
+
+    Bytes = result-shape bytes (the payload each device receives) — the
+    standard convention for link-bandwidth roofline accounting.
+    """
+    out: Dict[str, Dict] = {k: {"count": 0, "bytes": 0}
+                            for k in _COLLECTIVES}
+    for line in hlo_text_lines:
+        s = line.lstrip()
+        if "=" not in s:
+            continue
+        m = _OP_RE.match(s)
+        if not m:
+            continue
+        op = m.group(1)
+        for kind in _COLLECTIVES:
+            if op == kind or op.startswith(kind + "-"):
+                b = _result_bytes(s)
+                out[kind]["count"] += 1
+                out[kind]["bytes"] += b
+                break
+    return out
+
+
+def op_census(hlo_text_lines: Iterable[str], ops=("fusion", "custom-call",
+                                                  "while", "dot",
+                                                  "convolution")) -> Dict:
+    counts: Dict[str, int] = {}
+    for line in hlo_text_lines:
+        s = line.lstrip()
+        m = _OP_RE.match(s)
+        if m:
+            op = m.group(1)
+            if op in ops:
+                counts[op] = counts.get(op, 0) + 1
+    return counts
+
+
+# --------------------------------------------------------------------------
+# roofline terms (TPU v5e constants, per chip)
+# --------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link (≈ aggregate per chip per dir)
+
+
+def roofline_terms(total_flops: float, total_bytes: float,
+                   collective_bytes: float, n_chips: int) -> Dict[str, float]:
+    """The three roofline times (seconds) for one step, whole mesh.
+
+    FLOPs/bytes from cost_analysis are whole-program (all devices); the
+    collective bytes from the partitioned HLO are per-device payloads.
+    """
+    compute_t = total_flops / (n_chips * PEAK_FLOPS_BF16)
+    memory_t = total_bytes / (n_chips * HBM_BW)
+    collective_t = collective_bytes / ICI_BW
+    dominant = max(("compute", compute_t), ("memory", memory_t),
+                   ("collective", collective_t), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute_t, "memory_s": memory_t,
+            "collective_s": collective_t, "dominant": dominant}

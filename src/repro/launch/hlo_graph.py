@@ -1,0 +1,230 @@
+"""Executed-cost analysis of partitioned HLO text.
+
+XLA's ``cost_analysis()`` counts every ``while`` body ONCE and reports
+per-device numbers — useless for a roofline over scanned layers.  This
+module parses the HLO text into its computation graph, extracts loop trip
+counts from ``while`` conditions, and propagates costs bottom-up:
+
+    cost(comp) = Σ own ops + Σ_{while} trip · cost(body)
+               + Σ_{fusion/call/cond} cost(callee)
+
+Costs tracked per computation:
+  * dot FLOPs    = 2 · |result| · ∏(lhs contracting dims)   (exact)
+  * collective payload bytes per kind (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute)
+  * elementwise-ish FLOPs are ignored (dot-dominated workloads; noted in
+    EXPERIMENTS.md)
+
+Everything is *per device*; multiply FLOPs by n_chips for the whole mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# params may be tuple-typed (nested parens) — match only the name
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+"
+    r"\[[0-9,]*\](?:\{[^}]*\})?))\s+([a-z0-9\-]+)\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _bytes_of(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_shape: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op]
+    order: List[str]
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and "->" in stripped:
+                m = _HEADER_RE.match(stripped)
+                if m:
+                    cur = Computation(m.group(1), {}, [])
+                    if stripped.startswith("ENTRY"):
+                        entry = cur.name
+            continue
+        if stripped.startswith("}"):        # may carry a trailing comment
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, shape, opcode = m.group(1), m.group(2), m.group(3)
+        rest = line[m.end() - 1:]
+        ops_m = _OPERANDS_RE.match(rest)
+        operands = []
+        if ops_m:
+            for tok in ops_m.group(1).split(","):
+                tok = tok.strip().lstrip("%")
+                if tok:
+                    operands.append(tok)
+        # attrs keeps the FULL rest (incl. operand text) — constants like
+        # `constant(40)` live inside the "operand" parens
+        attrs = rest
+        cur.ops[name] = Op(name, opcode, shape, operands, attrs)
+        cur.order.append(name)
+    return comps, entry
+
+
+_REF_ATTRS = re.compile(
+    r"(?:to_apply|body|condition|true_computation|false_computation|calls)="
+    r"%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _trip_count(cond: Computation) -> int:
+    """Max integer constant in the loop condition ≈ the trip count
+    (jax scans compare an s32 counter LT bound)."""
+    best = 1
+    for op in cond.ops.values():
+        if op.opcode == "constant" and op.result_shape.startswith("s32"):
+            m = re.search(r"\((\d+)\)", op.attrs)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class Cost:
+    dot_flops: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.dot_flops += other.dot_flops * mult
+        for k in COLLECTIVES:
+            self.coll_bytes[k] += other.coll_bytes[k] * mult
+            self.coll_counts[k] += other.coll_counts[k] * mult
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    res = _shape_dims(op.result_shape)
+    if not res:
+        return 0.0
+    n_out = 1
+    for d in res[0][1]:
+        n_out *= d
+    lhs_name = op.operands[0] if op.operands else None
+    lhs = comp.ops.get(lhs_name)
+    if lhs is None:
+        return 0.0
+    lhs_dims = _shape_dims(lhs.result_shape)
+    if not lhs_dims:
+        return 0.0
+    m = _LHS_CDIMS.search(op.attrs)
+    k = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            di = int(idx)
+            if di < len(lhs_dims[0][1]):
+                k *= lhs_dims[0][1][di]
+    return 2.0 * n_out * k
+
+
+def executed_costs(text: str) -> Cost:
+    comps, entry = parse_hlo(text)
+    memo: Dict[str, Cost] = {}
+
+    def cost_of(name: str, stack=()) -> Cost:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        c = Cost()
+        if comp is None or name in stack:
+            return c
+        for op in comp.ops.values():
+            if op.opcode == "dot":
+                c.dot_flops += _dot_flops(op, comp)
+            elif op.opcode in COLLECTIVES or any(
+                    op.opcode.startswith(k + "-") for k in COLLECTIVES):
+                kind = next(k for k in COLLECTIVES
+                            if op.opcode == k or op.opcode.startswith(k + "-"))
+                b = _bytes_of(op.result_shape)
+                c.coll_bytes[kind] += b
+                c.coll_counts[kind] += 1
+            if op.opcode == "while":
+                refs = dict(re.findall(
+                    r"(body|condition)=%?([\w.\-]+)", op.attrs))
+                body, cond = refs.get("body"), refs.get("condition")
+                # XLA annotates scans with a known trip count; fall back to
+                # the max s32 constant in the condition computation.
+                m = re.search(r'"known_trip_count":\s*\{"n":"?(\d+)',
+                              op.attrs)
+                if m:
+                    trip = int(m.group(1))
+                elif cond in comps:
+                    trip = _trip_count(comps[cond])
+                else:
+                    trip = 1
+                if body:
+                    c.add(cost_of(body, stack + (name,)), trip)
+            else:
+                for ref in _REF_ATTRS.findall(op.attrs):
+                    if ref in comps and ref != name:
+                        c.add(cost_of(ref, stack + (name,)))
+                bm = _BRANCHES.search(op.attrs)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        b = b.strip().lstrip("%")
+                        if b in comps:
+                            c.add(cost_of(b, stack + (name,)))
+        memo[name] = c
+        return c
+
+    if entry is None:
+        return Cost()
+    return cost_of(entry)

@@ -1,0 +1,54 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax
+initialisation and only then builds meshes.
+
+Topology: TPU v5e pods of 16×16 = 256 chips; the multi-pod mesh prepends a
+``pod`` axis (2 pods = 512 chips) used for an outer data-parallel replica
+group (cross-pod traffic = gradient all-reduce only, matching DCN-class
+bandwidth between pods).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
+    """Mesh over whatever devices exist (tests / single host)."""
+    n = jax.device_count()
+    mp = max(1, min(model_parallel, n))
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def dp_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """The data-parallel axes of a mesh ('pod' folds into DP)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def mp_axis(mesh: jax.sharding.Mesh) -> Optional[str]:
+    return "model" if "model" in mesh.axis_names else None
+
+
+def axis_size(mesh: jax.sharding.Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def describe(mesh: jax.sharding.Mesh) -> str:
+    return (f"mesh axes={dict(mesh.shape)} devices={mesh.devices.size} "
+            f"dp={axis_size(mesh, dp_axes(mesh))} "
+            f"mp={axis_size(mesh, mp_axis(mesh))}")

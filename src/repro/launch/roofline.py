@@ -1,0 +1,106 @@
+"""Roofline aggregation: merge dry-run reports + analytic MODEL_FLOPS into
+the §Roofline table (markdown -> reports/roofline.md).
+
+Terms (TPU v5e: 197 TF/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI):
+  compute_s    = HLO_executed_FLOPs / (chips · peak)
+  memory_s     = HLO bytes-accessed / (chips · HBM_bw)   [see caveat]
+  collective_s = per-device collective payload bytes / link_bw
+
+Caveats recorded in EXPERIMENTS.md:
+  * executed FLOPs = dot FLOPs × loop trip counts (parser validated exact);
+    elementwise FLOPs excluded (dot-dominated cells; SSH query is the
+    exception — its DTW is min/add, covered by MODEL_FLOPS).
+  * bytes-accessed comes from XLA's CPU-backend cost analysis (per device,
+    loop bodies once) × a trip-count correction is NOT applied — treat the
+    memory term as a lower bound; the dominant-term call is made on the
+    corrected compute/collective terms vs this bound.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List
+
+from repro.configs import get_arch, list_archs
+from repro.launch.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+REPORT_DIR = Path(__file__).resolve().parents[3] / "reports" / "dryrun"
+OUT = Path(__file__).resolve().parents[3] / "reports" / "roofline.md"
+
+
+def load_reports(report_dir: Path = REPORT_DIR) -> List[Dict]:
+    out = []
+    for p in sorted(report_dir.glob("*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def enrich(rep: Dict) -> Dict:
+    from repro.launch.analytic import model_flops
+    arch = get_arch(rep["arch"])
+    mf = model_flops(arch, rep["shape"])
+    n = rep["n_chips"]
+    compute_s = rep["flops"] / (n * PEAK_FLOPS_BF16)
+    memory_s = (rep["bytes_accessed_per_device"]) / HBM_BW
+    collective_s = rep["collective_bytes"] / ICI_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])
+    step_s = max(compute_s, memory_s, collective_s)
+    rep.update({
+        "model_flops": mf,
+        "useful_ratio": mf / rep["flops"] if rep["flops"] else float("nan"),
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant[0],
+        # fraction of peak FLOP/s the step would sustain if it ran at the
+        # max(term) time — the roofline score
+        "roofline_frac": (mf / (n * PEAK_FLOPS_BF16)) / step_s
+        if step_s > 0 else 0.0,
+    })
+    return rep
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def table(reports: List[Dict], mesh: str = "single") -> str:
+    rows = [r for r in reports if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    lines = [
+        f"### Roofline — {mesh}-pod mesh "
+        f"({'512' if mesh == 'multi' else '256'} chips, v5e)",
+        "",
+        "| arch | shape | kind | HLO FLOPs | MODEL FLOPs | useful | "
+        "compute | memory* | collective | dominant | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {r['flops']:.2e} | {r['model_flops']:.2e} "
+            f"| {min(r['useful_ratio'], 9.99):.2f} "
+            f"| {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+            f"| {fmt_s(r['collective_s'])} | {r['dominant']} "
+            f"| {r['roofline_frac']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report-dir", default=str(REPORT_DIR))
+    ap.add_argument("--out", default=str(OUT))
+    args = ap.parse_args()
+    reports = [enrich(r) for r in load_reports(Path(args.report_dir))]
+    md = [table(reports, "single"), "", table(reports, "multi")]
+    Path(args.out).write_text("\n".join(md) + "\n")
+    print("\n".join(md))
+    print(f"\nwrote {args.out} ({len(reports)} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Serving launcher — SSH query serving (paper Alg. 2) or LM decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch ssh-ecg --requests 8
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.launch import steps as steps_mod
+
+
+def serve_ssh(arch, requests: int):
+    from repro.core import SSHParams, SSHIndex, ssh_search
+    from repro.data.timeseries import extract_subsequences, synthetic_ecg
+    params = arch.smoke_config
+    stream = synthetic_ecg(8000, seed=5)
+    db = jnp.asarray(extract_subsequences(stream, 128, stride=1,
+                                          znorm=True))
+    index = SSHIndex.build(db, params)
+    rng = np.random.default_rng(0)
+    lat = []
+    for i in rng.integers(0, db.shape[0], requests):
+        t0 = time.time()
+        res = ssh_search(db[int(i)], index, topk=10, top_c=256, band=6,
+                         multiprobe_offsets=params.step)
+        lat.append(time.time() - t0)
+        print(f"req {i}: top1={res.ids[0]} pruned="
+              f"{res.pruned_total_frac:.1%} {lat[-1]*1e3:.0f}ms")
+    lat = sorted(lat)
+    print(f"p50={lat[len(lat)//2]*1e3:.0f}ms "
+          f"p99={lat[-1]*1e3:.0f}ms over {requests} requests")
+
+
+def serve_lm(arch, requests: int, smoke: bool):
+    from repro.models.transformer import decode_step, init_cache, prefill
+    cfg = arch.smoke_config if smoke else arch.config
+    params = steps_mod.init_fn(arch, "decode_32k", smoke=smoke)()
+    b, prompt_len, gen_len = 2, 16, 8
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, prompt_len)),
+                       jnp.int32)
+    cache = init_cache(cfg, b, prompt_len + gen_len)
+    decode = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
+    # prefill by stepping (simple serving loop; batched prefill also works)
+    t0 = time.time()
+    for i in range(prompt_len):
+        logits, cache = decode(params, cache, toks[:, i:i + 1])
+    out = []
+    for _ in range(gen_len):
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        out.append(nxt)
+        logits, cache = decode(params, cache, nxt)
+    gen = jnp.concatenate(out, axis=1)
+    dt = time.time() - t0
+    print(f"generated {gen.shape} tokens in {dt:.2f}s "
+          f"({b * (prompt_len + gen_len) / dt:.1f} tok/s); "
+          f"sample: {np.asarray(gen[0])}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    args = ap.parse_args()
+    arch = get_arch(args.arch)
+    if arch.family == "ssh":
+        serve_ssh(arch, args.requests)
+    elif arch.family == "lm":
+        serve_lm(arch, args.requests, args.smoke)
+    else:
+        raise SystemExit(f"serving loop not defined for {arch.family}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""Step-function builders — one lowering target per (family × kind).
+
+``abstract_state`` builds the full argument pytree as ShapeDtypeStructs
+(params via jax.eval_shape — zero allocation), and ``make_step`` returns
+the jit-able callable.  Used by the dry-run, the trainers and the tests,
+so there is exactly one definition of every step in the codebase.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchDef
+from repro.train.optimizer import AdamW, AdamWState
+
+PyTree = Any
+
+
+def make_optimizer(family: str) -> AdamW:
+    if family == "lm":
+        return AdamW(lr=3e-4, weight_decay=0.1)
+    return AdamW(lr=1e-3, weight_decay=1e-4)
+
+
+# --------------------------------------------------------------------------
+# init / abstract state
+# --------------------------------------------------------------------------
+
+def init_fn(arch: ArchDef, shape: str, smoke: bool = False) -> Callable:
+    """Returns a () -> params initialiser for the cell's config."""
+    cfg = (arch.smoke_config if smoke else arch.cell_config(shape))
+    if arch.family == "lm":
+        from repro.models.transformer import init_params
+        return lambda key=jax.random.PRNGKey(0): init_params(cfg, key)
+    if arch.family == "gnn":
+        from repro.models.nequip import init_params
+        return lambda key=jax.random.PRNGKey(0): init_params(cfg, key)
+    if arch.family == "recsys":
+        from repro.models import recsys as R
+        init = {"dlrm": R.dlrm_init, "bst": R.bst_init, "mind": R.mind_init,
+                "dien": R.dien_init}[cfg.name.split("-")[0]]
+        return lambda key=jax.random.PRNGKey(0): init(cfg, key)
+    if arch.family == "ssh":
+        from repro.core.index import SSHFunctions
+        def make():
+            fns = SSHFunctions.create(cfg)
+            return {"filters": fns.filters,
+                    "cws": fns.cws._asdict()}
+        return make
+    raise ValueError(arch.family)
+
+
+def abstract_params(arch: ArchDef, shape: str, smoke: bool = False):
+    return jax.eval_shape(init_fn(arch, shape, smoke))
+
+
+def abstract_opt_state(arch: ArchDef, params_spec) -> AdamWState:
+    opt = make_optimizer(arch.family)
+    return jax.eval_shape(opt.init, params_spec)
+
+
+def abstract_state(arch: ArchDef, shape: str
+                   ) -> Tuple[str, Tuple[PyTree, ...]]:
+    """(kind, full argument tuple of ShapeDtypeStructs) for a cell."""
+    kind, batch = arch.input_specs(shape)
+    params = abstract_params(arch, shape)
+    if kind == "train":
+        opt = abstract_opt_state(arch, params)
+        return kind, (params, opt, batch)
+    if kind == "decode":
+        return kind, (params, batch["cache"], batch["tokens"])
+    if kind in ("prefill", "serve", "retrieval"):
+        return kind, (params, batch)
+    if kind == "build":
+        return kind, (params, batch)
+    if kind == "query":
+        return kind, (params, batch)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# step functions
+# --------------------------------------------------------------------------
+
+def _loss_for(arch: ArchDef, shape: str, smoke: bool) -> Callable:
+    cfg = arch.smoke_config if smoke else arch.cell_config(shape)
+    if arch.family == "lm":
+        from repro.models.transformer import loss_fn
+        return lambda p, b: loss_fn(p, b, cfg)
+    if arch.family == "gnn":
+        from repro.models.nequip import loss_fn
+        meta = arch.shapes[shape].meta
+        n_graphs = meta.get("n_graphs")
+        return lambda p, b: loss_fn(p, b, cfg, n_graphs=n_graphs)
+    if arch.family == "recsys":
+        from repro.models import recsys as R
+        fwd = _recsys_forward(cfg)
+        def loss(p, b):
+            feats = {k: v for k, v in b.items() if k != "labels"}
+            logits = fwd(p, feats)
+            l = R.bce_loss(logits, b["labels"])
+            return l, {"bce": l}
+        return loss
+    raise ValueError(arch.family)
+
+
+def _recsys_forward(cfg) -> Callable:
+    from repro.models import recsys as R
+    fwd = {"dlrm": R.dlrm_forward, "bst": R.bst_forward,
+           "mind": R.mind_forward,
+           "dien": R.dien_forward}[cfg.name.split("-")[0]]
+    return functools.partial(fwd, cfg=cfg)
+
+
+def _recsys_retrieval(cfg) -> Callable:
+    from repro.models import recsys as R
+    return functools.partial(
+        {"dlrm": R.dlrm_retrieval, "bst": R.bst_retrieval,
+         "mind": R.mind_retrieval,
+         "dien": R.dien_retrieval}[cfg.name.split("-")[0]], cfg=cfg)
+
+
+def make_step(arch: ArchDef, shape: str, kind: str, smoke: bool = False
+              ) -> Callable:
+    cfg = arch.smoke_config if smoke else arch.cell_config(shape)
+
+    if kind == "train":
+        loss = _loss_for(arch, shape, smoke)
+        opt = make_optimizer(arch.family)
+
+        def train_step(params, opt_state, batch):
+            (l, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(params, batch)
+            params, opt_state, opt_metrics = opt.update(
+                params, opt_state, grads)
+            metrics = dict(metrics, loss=l, **opt_metrics)
+            return params, opt_state, metrics
+        return train_step
+
+    if arch.family == "lm":
+        from repro.models import transformer as T
+        if kind == "prefill":
+            return lambda params, batch: T.prefill(params, batch["tokens"],
+                                                   cfg)
+        if kind == "decode":
+            return lambda params, cache, tokens: T.decode_step(
+                params, cache, tokens, cfg)
+
+    if arch.family == "recsys":
+        if kind == "serve":
+            fwd = _recsys_forward(cfg)
+            return lambda params, batch: fwd(params, batch)
+        if kind == "retrieval":
+            ret = _recsys_retrieval(cfg)
+            return lambda params, batch: ret(params, batch)
+
+    if arch.family == "ssh":
+        if kind == "build":
+            return _make_ssh_build(cfg)
+        if kind == "query":
+            meta = arch.shapes[shape].meta
+            return _make_ssh_query(cfg, top_c=meta["top_c"],
+                                   band=meta["band"], topk=10)
+
+    raise ValueError(f"no step for {arch.family}/{kind}")
+
+
+# --------------------------------------------------------------------------
+# SSH distributed steps (the paper's technique as a serving workload)
+# --------------------------------------------------------------------------
+
+def _make_ssh_build(cfg):
+    from repro.core import minhash, shingle, sketch
+
+    def build_step(params, batch):
+        """Hash a shard of the database: series (B, m) -> signatures (B, K).
+
+        Fully batch-parallel (§Perf iteration: the original per-series
+        lax.map lowered to an unshardable while loop — 255× replicated
+        compute at 256 chips).
+        """
+        from repro.distributed.constraints import constrain
+        cws = minhash.CWSParams(**params["cws"])
+        bits = sketch.sketch_bits(batch["series"], params["filters"],
+                                  cfg.step)                   # (B, N_B, F)
+        counts = shingle.shingle_histogram_batch(bits, cfg.ngram)
+        # keep the histogram row-sharded into the CWS scan — otherwise the
+        # partitioner all-gathers the full (B, 2^n) matrix (8.6 GB/step)
+        counts = constrain(counts, "batch_all", None)
+        sigs = minhash.cws_hash_dense_batch(counts, cws)
+        return constrain(sigs, "batch_all", None)
+    return build_step
+
+
+def _make_ssh_query(cfg, top_c: int, band: int, topk: int):
+    from repro.core import minhash, shingle, sketch
+    from repro.core.dtw import dtw_batch
+
+    def query_step(params, batch):
+        """Probe sharded signatures, gather candidates, banded-DTW re-rank."""
+        cws = minhash.CWSParams(**params["cws"])
+        q = batch["query"]
+        bits = sketch.sketch_bits(q, params["filters"], cfg.step)
+        counts = shingle.shingle_histogram(bits, cfg.ngram)
+        sig = minhash.cws_hash(counts, cws)                   # (K,)
+
+        collisions = jnp.sum(
+            (batch["db_sigs"] == sig[None, :]).astype(jnp.int32), axis=-1)
+        _, cand_ids = jax.lax.top_k(collisions,
+                                    min(top_c, collisions.shape[0]))
+        cands = jnp.take(batch["db_series"], cand_ids, axis=0)
+        d = dtw_batch(q, cands, band=band)
+        vals, idx = jax.lax.top_k(-d, topk)
+        return jnp.take(cand_ids, idx), -vals
+    return query_step

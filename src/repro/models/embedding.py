@@ -1,0 +1,49 @@
+"""Sparse-embedding substrate (JAX has no native EmbeddingBag — built here).
+
+* ``embedding_lookup`` — hashed ("quotient" trick) row gather; tables shard
+  row-wise over the `model` mesh axis, GSPMD turns the gather into the
+  standard all-gather-free distributed lookup.
+* ``embedding_bag`` — multi-hot gather + ``segment_sum`` reduce (sum/mean),
+  the jnp.take + segment-reduce formulation from kernel_taxonomy §RecSys.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Hashed row gather: table (V, d), ids (...,) any int -> (..., d)."""
+    v = table.shape[0]
+    idx = jnp.remainder(ids.astype(jnp.int32), v)
+    return jnp.take(table, idx, axis=0)
+
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
+                  segment_ids: jnp.ndarray, num_segments: int,
+                  mode: str = "sum",
+                  weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """EmbeddingBag: gather rows for ``ids`` and reduce by ``segment_ids``.
+
+    ids (L,), segment_ids (L,) sorted-or-not bag assignment in
+    [0, num_segments) -> (num_segments, d).
+    """
+    rows = embedding_lookup(table, ids)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    bags = jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+    if mode == "sum":
+        return bags
+    if mode == "mean":
+        counts = jax.ops.segment_sum(jnp.ones_like(ids, rows.dtype),
+                                     segment_ids,
+                                     num_segments=num_segments)
+        return bags / jnp.maximum(counts, 1.0)[:, None]
+    raise ValueError(f"mode {mode}")
+
+
+def positional_embedding(table: jnp.ndarray, length: int) -> jnp.ndarray:
+    """table (max_len, d) -> (length, d)."""
+    return table[:length]

@@ -1,0 +1,188 @@
+"""Shared neural-net layers (pure jnp; everything shards under GSPMD).
+
+The attention here is the *memory-efficient chunked (flash-style)
+online-softmax* implementation — `lax.map` over query chunks with an inner
+`lax.scan` over KV chunks — so a 32k-token prefill never materialises the
+(S, T) logits matrix (peak is (q_chunk, kv_chunk) per head).  This is the
+form the multi-pod dry-run lowers; on real TPU the same API can dispatch
+to a Pallas flash kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6
+             ) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dtype) * weight
+
+
+def rope_frequencies(head_dim: int, theta: float = 1e4) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 1e4) -> jnp.ndarray:
+    """Rotary embedding. x (B, S, H, D), positions (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                     # (D/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU MLP: (..., d) @ (d, ff) pair -> (..., d)."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def _attend_block(q_blk, k_blk, v_blk, scale, mask):
+    """One (q_chunk, kv_chunk) attention tile with explicit f32 softmax stats.
+
+    q_blk (B, qc, H, D), k_blk (B, kc, H, D), v_blk (B, kc, H, Dv),
+    mask (B, qc, kc) or broadcastable. Returns logits-stats tuple.
+
+    GQA note: K/V arrive pre-expanded to the full H query heads (a local
+    repeat of the kv heads).  Keeping ONE head axis lets the `model`
+    sharding of q heads flow through the whole tile — factoring heads as
+    (Hk, g) forced GSPMD to all-gather every K/V chunk when Hk < TP
+    (3.4e11 B/step on granite prefill_32k; EXPERIMENTS.md §Perf).
+    """
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask[:, None, :, :], logits, -1e30)
+    m = jnp.max(logits, axis=-1)                       # (B,H,qc)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhqk,bkhd->bhqd", p.astype(v_blk.dtype), v_blk,
+                     preferred_element_type=jnp.float32)
+    return m, l, acc
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_chunk",
+                                             "kv_chunk", "scale"))
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool = True,
+                      q_chunk: int = 512, kv_chunk: int = 1024,
+                      scale: Optional[float] = None,
+                      kv_valid: Optional[jnp.ndarray] = None
+                      ) -> jnp.ndarray:
+    """Flash-style attention with GQA.
+
+    q (B, S, H, D); k (B, T, Hk, D); v (B, T, Hk, Dv); H % Hk == 0.
+    ``kv_valid``: optional (B,) number of valid KV positions (decode).
+    Returns (B, S, H, Dv).
+    """
+    b, s, h, d = q.shape
+    t, hk, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = h // hk
+    scale = scale if scale is not None else d ** -0.5
+
+    qc = min(q_chunk, s)
+    kc = min(kv_chunk, t)
+    sp, tp = (-s) % qc, (-t) % kc
+    qp = jnp.pad(q, ((0, 0), (0, sp), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, tp), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, tp), (0, 0), (0, 0)))
+    nq, nk = (s + sp) // qc, (t + tp) // kc
+
+    q_r = qp.reshape(b, nq, qc, h, d).transpose(1, 0, 2, 3, 4)
+    k_r = kp.reshape(b, nk, kc, hk, d)
+    v_r = vp.reshape(b, nk, kc, hk, dv)
+    iq = jnp.arange(qc)
+    ik = jnp.arange(kc)
+
+    def per_q_chunk(args):
+        q_blk, q_idx = args
+        q_pos = q_idx * qc + iq                              # (qc,)
+
+        def kv_step(carry, k_idx):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_index_in_dim(k_r, k_idx, 1,
+                                                 keepdims=False)
+            v_blk = jax.lax.dynamic_index_in_dim(v_r, k_idx, 1,
+                                                 keepdims=False)
+            if g > 1:   # expand kv heads locally (GQA)
+                k_blk = jnp.repeat(k_blk, g, axis=2)
+                v_blk = jnp.repeat(v_blk, g, axis=2)
+            k_pos = k_idx * kc + ik
+            mask = jnp.ones((b, qc, kc), bool)
+            if causal:
+                # decode (s < t): query i sits at absolute pos T - S + i
+                q_abs = q_pos + (t - s)
+                mask &= (q_abs[:, None] >= k_pos[None, :])[None]
+            mask &= (k_pos < t)[None, None, :]
+            if kv_valid is not None:
+                mask &= (k_pos[None, :] < kv_valid[:, None])[:, None, :]
+            m2, l2, a2 = _attend_block(q_blk, k_blk, v_blk, scale, mask)
+            m_new = jnp.maximum(m, m2)
+            c1 = jnp.exp(m - m_new)
+            c2 = jnp.exp(m2 - m_new)
+            l_new = l * c1 + l2 * c2
+            acc_new = acc * c1[..., None] + a2 * c2[..., None]
+            return (m_new, l_new, acc_new), ()
+
+        init = (jnp.full((b, h, qc), -1e30, jnp.float32),
+                jnp.zeros((b, h, qc), jnp.float32),
+                jnp.zeros((b, h, qc, dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out                                          # (b,h,qc,dv)
+
+    outs = jax.lax.map(per_q_chunk, (q_r, jnp.arange(nq)))  # (nq,b,h,qc,dv)
+    outs = outs.transpose(1, 0, 3, 2, 4).reshape(b, nq * qc, h, dv)
+    return outs[:, :s].astype(v.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     kv_valid: jnp.ndarray,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-step decode attention over a (possibly huge) KV cache.
+
+    q (B, 1, H, D); k (B, T, Hk, D); v (B, T, Hk, Dv); kv_valid (B,).
+    One query token ⇒ logits are (B, H, T) — linear in T, no chunking
+    needed (the cache's T axis may be sharded; GSPMD inserts the partial
+    softmax collectives).
+    """
+    b, _, h, d = q.shape
+    t, hk, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = h // hk
+    scale = scale if scale is not None else d ** -0.5
+    qr = q.reshape(b, hk, g, d)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qr, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(t)[None, :] < kv_valid[:, None]        # (B, T)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, dv).astype(v.dtype)
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token-mean cross entropy. logits (..., V) f32-upcast internally."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,132 @@
+"""GShard-style capacity-based Mixture-of-Experts (einsum dispatch).
+
+Why einsum dispatch: under GSPMD the (groups, tokens, experts, capacity)
+one-hot einsum pattern is the battle-tested lowering (GShard/T5X/MaxText)
+— the partitioner turns it into all-to-alls along the expert axis instead
+of replicating token state.  Sort/scatter dispatch is leaner on FLOPs but
+shards unpredictably at 512 devices.
+
+Tokens are viewed as (G groups, N_g tokens) with G aligned to the data
+shards; capacity C = N_g · top_k / E · capacity_factor is *per group*, so
+the dispatch tensors stay bounded per device no matter the global batch.
+
+FLOPs accounting (for §Roofline): dispatch+combine cost 2·G·N_g·E·C·d MACs
+≈ (2·k·cf/1) · tokens·E_frac… — reported separately by
+``moe_dispatch_flops`` so the MODEL_FLOPS/HLO ratio can attribute it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int                      # per-expert hidden
+    n_shared: int = 0              # shared (always-on) experts
+    capacity_factor: float = 1.25
+    group_size: int = 2048         # tokens per dispatch group
+
+
+def capacity(cfg: MoEConfig, n_g: int) -> int:
+    c = int(n_g * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(c, cfg.top_k)
+
+
+def gating(logits: jnp.ndarray, cfg: MoEConfig, n_g: int
+           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Top-k gating with per-group capacity (GShard §3.2, aux-loss included).
+
+    logits (G, N_g, E) -> dispatch (G, N_g, E, C) bool,
+                          combine  (G, N_g, E, C) f32,
+                          aux_loss scalar.
+    """
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(cfg, n_g)
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+    topv, topi = jax.lax.top_k(gates, k)                     # (G, N, k)
+    topv = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert queue
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.int32)        # (G, N, k, E)
+    flat = onehot.reshape(onehot.shape[0], -1, e)            # (G, N*k, E)
+    pos = jnp.cumsum(flat, axis=1) - 1                       # (G, N*k, E)
+    pos = pos.reshape(onehot.shape)                          # (G, N, k, E)
+    pos = jnp.sum(pos * onehot, axis=-1)                     # (G, N, k)
+    expert = topi
+    keep = pos < c
+
+    disp = (jax.nn.one_hot(expert, e, dtype=jnp.float32)
+            * keep[..., None].astype(jnp.float32))           # (G,N,k,E)
+    pos_onehot = jax.nn.one_hot(jnp.where(keep, pos, 0), c,
+                                dtype=jnp.float32)           # (G,N,k,C)
+    # (G, N, k, E) x (G, N, k, C) -> (G, N, E, C)
+    dispatch = jnp.einsum("gnke,gnkc->gnec", disp, pos_onehot)
+    combine = jnp.einsum("gnke,gnkc->gnec", disp * topv[..., None],
+                         pos_onehot)
+
+    # load-balance auxiliary loss (GShard eq. 4 / Switch §2.2)
+    density = jnp.mean(onehot.astype(jnp.float32).sum(2), axis=1)  # (G, E)
+    density_proxy = jnp.mean(gates, axis=1)                        # (G, E)
+    aux = jnp.mean(density * density_proxy) * (e * e)
+    return dispatch, combine, aux
+
+
+def moe_ffn(x: jnp.ndarray, router_w: jnp.ndarray,
+            w_gate: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray,
+            cfg: MoEConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Routed expert SwiGLU FFN.
+
+    x (B, S, d); router_w (d, E); experts w_gate/w_up (E, d, ff),
+    w_down (E, ff, d).  Returns (out (B, S, d), aux_loss).
+    """
+    b, s, d = x.shape
+    tokens = x.reshape(-1, d)
+    n = tokens.shape[0]
+    n_g = min(cfg.group_size, n)
+    g = n // n_g
+    xt = constrain(tokens[: g * n_g].reshape(g, n_g, d),
+                   "batch", None, None)
+
+    logits = jnp.einsum("gnd,de->gne", xt, router_w)
+    dispatch, combine, aux = gating(logits, cfg, n_g)
+
+    xe = jnp.einsum("gnec,gnd->gecd", dispatch.astype(x.dtype), xt)
+    xe = constrain(xe, "batch", "experts", None, None)
+    h = (jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, w_gate))
+         * jnp.einsum("gecd,edf->gecf", xe, w_up))
+    ye = jnp.einsum("gecf,efd->gecd", h, w_down)
+    ye = constrain(ye, "batch", "experts", None, None)
+    y = jnp.einsum("gnec,gecd->gnd", combine.astype(x.dtype), ye)
+
+    out = y.reshape(g * n_g, d)
+    if g * n_g < n:   # ragged tail (decode batches): route through expert 0
+        tail = tokens[g * n_g:]
+        th = (jax.nn.silu(tail @ w_gate[0]) * (tail @ w_up[0])) @ w_down[0]
+        out = jnp.concatenate([out, th], axis=0)
+    return out.reshape(b, s, d), aux
+
+
+def moe_dispatch_flops(cfg: MoEConfig, n_tokens: int) -> int:
+    """MACs spent on the dispatch/combine einsums (overhead accounting)."""
+    n_g = min(cfg.group_size, n_tokens)
+    g = max(1, n_tokens // n_g)
+    c = capacity(cfg, n_g)
+    return 2 * g * n_g * cfg.n_experts * c * cfg.d_model
+
+
+def moe_expert_flops(cfg: MoEConfig, n_tokens: int) -> int:
+    """MACs in the expert FFNs actually applied (active-expert compute)."""
+    n_g = min(cfg.group_size, n_tokens)
+    g = max(1, n_tokens // n_g)
+    c = capacity(cfg, n_g)
+    return 3 * g * cfg.n_experts * c * cfg.d_model * cfg.d_ff

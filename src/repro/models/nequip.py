@@ -1,0 +1,262 @@
+"""NequIP — E(3)-equivariant interatomic potential (arXiv:2101.03164).
+
+TPU-native message passing (DESIGN.md §3 + kernel_taxonomy §GNN): JAX has
+no CSR SpMM, so edges are explicit (src, dst) index lists; gathers are
+``jnp.take`` and the aggregation is ``jax.ops.segment_sum`` — this IS the
+message-passing substrate, not a stub.
+
+Features are direct sums of l = 0..l_max irreps with a common channel
+multiplicity: ``{l: (N, C, 2l+1)}``.  An interaction layer does, per
+allowed path (l_in, l_f, l_out):
+
+    msg[e, c, m3] = Σ_{m1 m2} CG[m3,m1,m2] · x_{l_in}[src_e, c, m1]
+                                           · Y_{l_f}(r̂_e)[m2] · w_path[e, c]
+
+with w_path = MLP(radial Bessel basis · smooth cutoff) — then
+segment-sums messages into nodes, mixes channels per l (self-interaction),
+gates l > 0 irreps by scalars, and adds the residual.
+
+Equivariance holds by construction against `repro.models.equivariant`'s
+numerically-derived real-basis CG/Wigner tables (tested by rotating
+inputs).  Parity (O(3) vs SO(3)) is not tracked — see DESIGN.md
+§Arch-applicability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.equivariant import allowed_paths, real_cg
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    channels: int = 32           # d_hidden — multiplicity per l
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_feat: int = 16             # input node feature dim (species embed)
+    radial_hidden: int = 64
+    readout_hidden: int = 32
+    dtype: str = "float32"
+
+    @property
+    def paths(self) -> List[Tuple[int, int, int]]:
+        return allowed_paths(self.l_max)
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+# --------------------------------------------------------------------------
+# geometry: spherical harmonics (jnp mirror of equivariant.real_sh) + RBF
+# --------------------------------------------------------------------------
+
+def sh_l(l: int, xyz: jnp.ndarray) -> jnp.ndarray:
+    x, y, z = xyz[..., 0], xyz[..., 1], xyz[..., 2]
+    if l == 0:
+        return jnp.ones(xyz.shape[:-1] + (1,), xyz.dtype)
+    if l == 1:
+        return jnp.stack([x, y, z], axis=-1)
+    if l == 2:
+        s3 = jnp.sqrt(3.0).astype(xyz.dtype)
+        return jnp.stack([
+            x * y, y * z, (3 * z * z - 1.0) / (2 * s3), x * z,
+            (x * x - y * y) / 2.0], axis=-1) * s3
+    raise NotImplementedError(f"l={l}")
+
+
+def bessel_rbf(r: jnp.ndarray, n_rbf: int, cutoff: float) -> jnp.ndarray:
+    """sin(nπ r / r_c) / r Bessel basis with a smooth polynomial envelope."""
+    n = jnp.arange(1, n_rbf + 1, dtype=r.dtype)
+    rr = jnp.maximum(r, 1e-6)[..., None]
+    basis = jnp.sin(n * jnp.pi * rr / cutoff) / rr
+    u = jnp.clip(r / cutoff, 0.0, 1.0)
+    env = 1.0 - 10.0 * u ** 3 + 15.0 * u ** 4 - 6.0 * u ** 5  # C² cutoff
+    return basis * env[..., None]
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def init_params(cfg: NequIPConfig, key: jax.Array) -> Params:
+    dt = cfg.jdtype
+    c = cfg.channels
+    n_paths = len(cfg.paths)
+    keys = jax.random.split(key, 4 + cfg.n_layers)
+
+    def dense(k, shape, scale=None):
+        scale = scale if scale is not None else (1.0 / np.sqrt(shape[0]))
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dt)
+
+    layers_p = []
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[4 + i], 8)
+        layers_p.append({
+            "radial_w1": dense(lk[0], (cfg.n_rbf, cfg.radial_hidden)),
+            "radial_b1": jnp.zeros((cfg.radial_hidden,), dt),
+            "radial_w2": dense(lk[1], (cfg.radial_hidden, n_paths * c)),
+            "self_mix": {str(l): dense(lk[2 + l], (c, c))
+                         for l in range(cfg.l_max + 1)},
+            "gate_w": dense(lk[6], (c, cfg.l_max * c)),
+            "gate_b": jnp.zeros((cfg.l_max * c,), dt),
+        })
+    # stack layers for lax.scan
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers_p)
+    return {
+        "embed_w": dense(keys[0], (cfg.d_feat, c)),
+        "readout_w1": dense(keys[1], (c, cfg.readout_hidden)),
+        "readout_b1": jnp.zeros((cfg.readout_hidden,), dt),
+        "readout_w2": dense(keys[2], (cfg.readout_hidden, 1)),
+        "layers": stacked,
+    }
+
+
+# --------------------------------------------------------------------------
+# model
+# --------------------------------------------------------------------------
+
+def _interaction(layer_p: Params, feats: Dict[str, jnp.ndarray],
+                 src: jnp.ndarray, dst: jnp.ndarray,
+                 sh: Dict[str, jnp.ndarray], rbf: jnp.ndarray,
+                 edge_mask: jnp.ndarray, n_nodes: int,
+                 cfg: NequIPConfig) -> Dict[str, jnp.ndarray]:
+    c = cfg.channels
+    h = jax.nn.silu(rbf @ layer_p["radial_w1"] + layer_p["radial_b1"])
+    w = (h @ layer_p["radial_w2"]).reshape(h.shape[0], len(cfg.paths), c)
+    # zero-length edges (self-loops / padding) have no geometry: Y_{l>0}(0)
+    # is basis-anisotropic and would silently break equivariance.
+    w = w * edge_mask[:, None, None]
+
+    agg = {str(l): jnp.zeros((n_nodes, c, 2 * l + 1), feats["0"].dtype)
+           for l in range(cfg.l_max + 1)}
+    for p_idx, (l1, l2, l3) in enumerate(cfg.paths):
+        cg = jnp.asarray(real_cg(l1, l2, l3), feats["0"].dtype)
+        x_src = jnp.take(feats[str(l1)], src, axis=0)       # (E, C, 2l1+1)
+        msg = jnp.einsum("oab,eca,eb,ec->eco", cg, x_src, sh[str(l2)],
+                         w[:, p_idx, :])
+        agg[str(l3)] = agg[str(l3)] + jax.ops.segment_sum(
+            msg, dst, num_segments=n_nodes)
+
+    # self-interaction (channel mix per l) + gated nonlinearity + residual
+    out = {}
+    gates = jax.nn.sigmoid(
+        feats["0"][..., 0] @ layer_p["gate_w"] + layer_p["gate_b"])
+    gates = gates.reshape(-1, cfg.l_max, c)
+    for l in range(cfg.l_max + 1):
+        mixed = jnp.einsum("nca,cd->nda", agg[str(l)],
+                           layer_p["self_mix"][str(l)])
+        if l == 0:
+            upd = jax.nn.silu(mixed)
+        else:
+            upd = mixed * gates[:, l - 1, :, None]
+        out[str(l)] = feats[str(l)] + upd
+    return out
+
+
+def forward(params: Params, batch: Dict[str, jnp.ndarray],
+            cfg: NequIPConfig, n_graphs: Optional[int] = None
+            ) -> jnp.ndarray:
+    """Energy prediction.
+
+    batch: node_feat (N, d_feat), positions (N, 3),
+           edge_src/edge_dst (E,) int32,
+           optional graph_ids (N,) int32 + n_graphs for batched molecules.
+    Returns per-graph energies (n_graphs,) or global scalar energy (1,).
+    """
+    pos = batch["positions"].astype(cfg.jdtype)
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    n_nodes = pos.shape[0]
+
+    vec = jnp.take(pos, dst, axis=0) - jnp.take(pos, src, axis=0)
+    r = jnp.linalg.norm(vec + 1e-12, axis=-1)
+    unit = vec / jnp.maximum(r, 1e-6)[..., None]
+    sh = {str(l): sh_l(l, unit) for l in range(cfg.l_max + 1)}
+    rbf = bessel_rbf(r, cfg.n_rbf, cfg.cutoff)
+    edge_mask = (r > 1e-6).astype(cfg.jdtype)
+
+    feats = {
+        "0": (batch["node_feat"].astype(cfg.jdtype)
+              @ params["embed_w"])[..., None],             # (N, C, 1)
+    }
+    for l in range(1, cfg.l_max + 1):
+        feats[str(l)] = jnp.zeros((n_nodes, cfg.channels, 2 * l + 1),
+                                  cfg.jdtype)
+
+    def body(feats, layer_p):
+        return _interaction(layer_p, feats, src, dst, sh, rbf, edge_mask,
+                            n_nodes, cfg), ()
+
+    feats, _ = jax.lax.scan(body, feats, params["layers"])
+    node_e = _readout(params, feats)
+    if n_graphs is not None and "graph_ids" in batch:
+        return jax.ops.segment_sum(node_e, batch["graph_ids"],
+                                   num_segments=n_graphs)
+    return jnp.sum(node_e, keepdims=True)
+
+
+def _readout(params: Params, feats: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    scalars = feats["0"][..., 0]                            # (N, C)
+    h = jax.nn.silu(scalars @ params["readout_w1"] + params["readout_b1"])
+    return (h @ params["readout_w2"])[..., 0]               # (N,)
+
+
+def node_energies(params: Params, batch: Dict[str, jnp.ndarray],
+                  cfg: NequIPConfig) -> jnp.ndarray:
+    """Per-node energies (node-level regression targets)."""
+    pos = batch["positions"].astype(cfg.jdtype)
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    n_nodes = pos.shape[0]
+    vec = jnp.take(pos, dst, axis=0) - jnp.take(pos, src, axis=0)
+    r = jnp.linalg.norm(vec + 1e-12, axis=-1)
+    unit = vec / jnp.maximum(r, 1e-6)[..., None]
+    sh = {str(l): sh_l(l, unit) for l in range(cfg.l_max + 1)}
+    rbf = bessel_rbf(r, cfg.n_rbf, cfg.cutoff)
+    edge_mask = (r > 1e-6).astype(cfg.jdtype)
+    feats = {
+        "0": (batch["node_feat"].astype(cfg.jdtype)
+              @ params["embed_w"])[..., None],
+    }
+    for l in range(1, cfg.l_max + 1):
+        feats[str(l)] = jnp.zeros((n_nodes, cfg.channels, 2 * l + 1),
+                                  cfg.jdtype)
+
+    def body(feats, layer_p):
+        return _interaction(layer_p, feats, src, dst, sh, rbf, edge_mask,
+                            n_nodes, cfg), ()
+
+    feats, _ = jax.lax.scan(body, feats, params["layers"])
+    return _readout(params, feats)
+
+
+def loss_fn(params: Params, batch: Dict[str, jnp.ndarray],
+            cfg: NequIPConfig, n_graphs: Optional[int] = None
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    if "node_targets" in batch:   # node-level regression (full-graph cells)
+        node_e = node_energies(params, batch, cfg)
+        err = node_e - batch["node_targets"].astype(node_e.dtype)
+    else:                         # per-graph energies (molecule cell)
+        energies = forward(params, batch, cfg, n_graphs=n_graphs)
+        err = energies - batch["energy"].astype(energies.dtype)
+    loss = jnp.mean(err * err)
+    return loss, {"mse": loss}
+
+
+def forces(params: Params, batch: Dict[str, jnp.ndarray],
+           cfg: NequIPConfig) -> jnp.ndarray:
+    """F = -∂E/∂positions (the physically meaningful gradient)."""
+    def energy_of(pos):
+        b = dict(batch)
+        b["positions"] = pos
+        return jnp.sum(forward(params, b, cfg))
+    return -jax.grad(energy_of)(batch["positions"])

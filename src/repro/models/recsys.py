@@ -1,0 +1,357 @@
+"""Recsys architectures: DLRM-RM2, BST, MIND, DIEN.
+
+Common structure (kernel_taxonomy §RecSys): huge hashed embedding tables →
+a feature-interaction op (dot / transformer / capsule routing / AUGRU) →
+a small MLP head.  Embedding lookups go through
+``repro.models.embedding`` (take + segment_sum — built, not stubbed).
+
+Every model exposes  init_params / forward(params, batch) -> logits  and
+loss_fn (binary cross-entropy on click labels), plus
+``retrieval_scores`` for the ``retrieval_cand`` shape (1 user vs 10⁶
+candidates — a single batched dot, never a loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.embedding import embedding_lookup
+
+Params = Dict[str, Any]
+
+
+def _dense(key, shape, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype) * scale
+
+
+def _mlp_params(key, dims, dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": _dense(ks[i], (dims[i], dims[i + 1]), dtype),
+             "b": jnp.zeros((dims[i + 1],), dtype)}
+            for i in range(len(dims) - 1)]
+
+
+def _mlp(params, x, final_act=False):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def bce_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+# ==========================================================================
+# DLRM (arXiv:1906.00091) — RM2 sizing
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    vocab: int = 1_000_000           # rows per table (hashed)
+    bot_mlp: Tuple[int, ...] = (13, 512, 256, 64)
+    top_mlp: Tuple[int, ...] = (512, 512, 256, 1)
+    dtype: str = "float32"
+
+
+def dlrm_init(cfg: DLRMConfig, key: jax.Array) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    tables = _dense(k1, (cfg.n_sparse, cfg.vocab, cfg.embed_dim),
+                    jnp.dtype(cfg.dtype), scale=0.01)
+    n_pairs = (cfg.n_sparse + 1) * cfg.n_sparse // 2
+    top_in = cfg.embed_dim + n_pairs
+    return {
+        "tables": tables,
+        "bot": _mlp_params(k2, list(cfg.bot_mlp)),
+        "top": _mlp_params(k3, [top_in] + list(cfg.top_mlp)[1:]),
+    }
+
+
+def dlrm_forward(params: Params, batch: Dict[str, jnp.ndarray],
+                 cfg: DLRMConfig) -> jnp.ndarray:
+    """batch: dense (B, 13) f32, sparse (B, 26) int32 -> logits (B,)."""
+    x_d = _mlp(params["bot"], batch["dense"])                 # (B, d)
+    # per-field lookup: tables (F, V, d), ids (B, F)
+    emb = jax.vmap(embedding_lookup, in_axes=(0, 1), out_axes=1)(
+        params["tables"], batch["sparse"])                    # (B, F, d)
+    feats = jnp.concatenate([x_d[:, None, :], emb], axis=1)   # (B, F+1, d)
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    iu, ju = jnp.triu_indices(feats.shape[1], k=1)
+    flat = inter[:, iu, ju]                                   # (B, n_pairs)
+    top_in = jnp.concatenate([x_d, flat], axis=-1)
+    return _mlp(params["top"], top_in)[:, 0]
+
+
+def dlrm_retrieval(params: Params, batch: Dict[str, jnp.ndarray],
+                   cfg: DLRMConfig) -> jnp.ndarray:
+    """retrieval_cand shape: one user vs n_candidates item ids.
+
+    batch: dense (1, 13), sparse (1, 26), cand_ids (n_cand,) -> (n_cand,).
+    User tower = bottom MLP + mean of field embeddings; item tower = row of
+    table 0 (standard two-tower projection of DLRM for candidate gen).
+    """
+    x_d = _mlp(params["bot"], batch["dense"])                 # (1, d)
+    emb = jax.vmap(embedding_lookup, in_axes=(0, 1), out_axes=1)(
+        params["tables"], batch["sparse"])                    # (1, F, d)
+    user = x_d + jnp.mean(emb, axis=1)                        # (1, d)
+    items = embedding_lookup(params["tables"][0], batch["cand_ids"])
+    return (items @ user[0])                                  # (n_cand,)
+
+
+# ==========================================================================
+# BST — Behavior Sequence Transformer (arXiv:1905.06874)
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    embed_dim: int = 32
+    seq_len: int = 20
+    n_heads: int = 8
+    n_blocks: int = 1
+    d_ff: int = 128
+    mlp: Tuple[int, ...] = (1024, 512, 256)
+    vocab: int = 2_000_000
+    n_profile: int = 8              # user-profile categorical fields
+    dtype: str = "float32"
+
+
+def bst_init(cfg: BSTConfig, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 8)
+    d = cfg.embed_dim
+    blocks = []
+    for i in range(cfg.n_blocks):
+        bk = jax.random.split(ks[3 + i], 6)
+        blocks.append({
+            "wq": _dense(bk[0], (d, d)), "wk": _dense(bk[1], (d, d)),
+            "wv": _dense(bk[2], (d, d)), "wo": _dense(bk[3], (d, d)),
+            "ff1": _dense(bk[4], (d, cfg.d_ff)),
+            "ff2": _dense(bk[5], (cfg.d_ff, d)),
+            "ln1": jnp.ones((d,)), "ln2": jnp.ones((d,)),
+        })
+    mlp_in = (cfg.seq_len + 1) * d + cfg.n_profile * d
+    return {
+        "items": _dense(ks[0], (cfg.vocab, d), scale=0.01),
+        "pos": _dense(ks[1], (cfg.seq_len + 1, d), scale=0.01),
+        "profile": _dense(ks[2], (cfg.n_profile * 1000, d), scale=0.01),
+        "blocks": blocks,
+        "head": _mlp_params(ks[7], [mlp_in] + list(cfg.mlp) + [1]),
+    }
+
+
+def _bst_block(p, x, n_heads):
+    b, s, d = x.shape
+    hd = d // n_heads
+
+    def heads(t):
+        return t.reshape(b, s, n_heads, hd)
+    from repro.models.layers import rms_norm
+    xn = rms_norm(x, p["ln1"])
+    q, k, v = heads(xn @ p["wq"]), heads(xn @ p["wk"]), heads(xn @ p["wv"])
+    logits = jnp.einsum("bshd,bthd->bhst", q, k) / np.sqrt(hd)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(b, s, d)
+    x = x + o @ p["wo"]
+    xn = rms_norm(x, p["ln2"])
+    return x + jax.nn.relu(xn @ p["ff1"]) @ p["ff2"]
+
+
+def bst_forward(params: Params, batch: Dict[str, jnp.ndarray],
+                cfg: BSTConfig) -> jnp.ndarray:
+    """batch: history (B, S) int32, target (B,) int32, profile (B, P) int32."""
+    hist = embedding_lookup(params["items"], batch["history"])
+    tgt = embedding_lookup(params["items"], batch["target"])[:, None, :]
+    seq = jnp.concatenate([hist, tgt], axis=1) + params["pos"][None]
+    for blk in params["blocks"]:
+        seq = _bst_block(blk, seq, cfg.n_heads)
+    prof = embedding_lookup(params["profile"], batch["profile"])
+    b = seq.shape[0]
+    feats = jnp.concatenate([seq.reshape(b, -1), prof.reshape(b, -1)],
+                            axis=-1)
+    return _mlp(params["head"], feats)[:, 0]
+
+
+def bst_retrieval(params: Params, batch: Dict[str, jnp.ndarray],
+                  cfg: BSTConfig) -> jnp.ndarray:
+    """One user history vs candidate ids: mean-pooled history · item."""
+    hist = embedding_lookup(params["items"], batch["history"])
+    user = jnp.mean(hist, axis=1)                              # (1, d)
+    items = embedding_lookup(params["items"], batch["cand_ids"])
+    return items @ user[0]
+
+
+# ==========================================================================
+# MIND — multi-interest capsule network (arXiv:1904.08030)
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    name: str = "mind"
+    embed_dim: int = 64
+    seq_len: int = 50
+    n_interests: int = 4
+    capsule_iters: int = 3
+    vocab: int = 2_000_000
+    mlp: Tuple[int, ...] = (256, 64)
+    dtype: str = "float32"
+
+
+def mind_init(cfg: MINDConfig, key: jax.Array) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    return {
+        "items": _dense(k1, (cfg.vocab, d), scale=0.01),
+        "s_matrix": _dense(k2, (d, d)),      # shared bilinear map (B2I)
+        "head": _mlp_params(k3, [d] + list(cfg.mlp) + [d]),
+    }
+
+
+def _squash(x, axis=-1):
+    n2 = jnp.sum(x * x, axis=axis, keepdims=True)
+    return (n2 / (1 + n2)) * x / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_interests(params: Params, history: jnp.ndarray,
+                   cfg: MINDConfig) -> jnp.ndarray:
+    """Dynamic-routing (B2I) capsules: history (B, S) -> (B, K, d)."""
+    beh = embedding_lookup(params["items"], history)           # (B, S, d)
+    beh_hat = beh @ params["s_matrix"]                         # (B, S, d)
+    b, s, d = beh.shape
+    k = cfg.n_interests
+    logits0 = jnp.zeros((b, k, s), beh.dtype)
+
+    def routing_iter(logits, _):
+        w = jax.nn.softmax(logits, axis=1)                     # over K
+        caps = _squash(jnp.einsum("bks,bsd->bkd", w,
+                                  jax.lax.stop_gradient(beh_hat)))
+        upd = jnp.einsum("bkd,bsd->bks", caps,
+                         jax.lax.stop_gradient(beh_hat))
+        return logits + upd, caps
+
+    logits, caps = jax.lax.scan(routing_iter, logits0,
+                                jnp.arange(cfg.capsule_iters))
+    caps = _squash(jnp.einsum("bks,bsd->bkd",
+                              jax.nn.softmax(logits, axis=1), beh_hat))
+    return _mlp(params["head"], caps)                          # (B, K, d)
+
+
+def mind_forward(params: Params, batch: Dict[str, jnp.ndarray],
+                 cfg: MINDConfig) -> jnp.ndarray:
+    """Label-aware scoring: max over interests of interest·target."""
+    interests = mind_interests(params, batch["history"], cfg)  # (B, K, d)
+    tgt = embedding_lookup(params["items"], batch["target"])   # (B, d)
+    scores = jnp.einsum("bkd,bd->bk", interests, tgt)
+    return jnp.max(scores, axis=-1)
+
+
+def mind_retrieval(params: Params, batch: Dict[str, jnp.ndarray],
+                   cfg: MINDConfig) -> jnp.ndarray:
+    interests = mind_interests(params, batch["history"], cfg)  # (1, K, d)
+    items = embedding_lookup(params["items"], batch["cand_ids"])
+    return jnp.max(items @ interests[0].T, axis=-1)            # (n_cand,)
+
+
+# ==========================================================================
+# DIEN — GRU + AUGRU interest evolution (arXiv:1809.03672)
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class DIENConfig:
+    name: str = "dien"
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp: Tuple[int, ...] = (200, 80)
+    vocab: int = 2_000_000
+    dtype: str = "float32"
+
+
+def _gru_params(key, d_in, d_h):
+    ks = jax.random.split(key, 3)
+    return {
+        "wz": _dense(ks[0], (d_in + d_h, d_h)), "bz": jnp.zeros((d_h,)),
+        "wr": _dense(ks[1], (d_in + d_h, d_h)), "br": jnp.zeros((d_h,)),
+        "wh": _dense(ks[2], (d_in + d_h, d_h)), "bh": jnp.zeros((d_h,)),
+    }
+
+
+def _gru_cell(p, h, x, att: Optional[jnp.ndarray] = None):
+    hx = jnp.concatenate([x, h], axis=-1)
+    z = jax.nn.sigmoid(hx @ p["wz"] + p["bz"])
+    r = jax.nn.sigmoid(hx @ p["wr"] + p["br"])
+    hh = jnp.tanh(jnp.concatenate([x, r * h], axis=-1) @ p["wh"] + p["bh"])
+    if att is not None:             # AUGRU: attention scales the update gate
+        z = z * att[:, None]
+    return (1 - z) * h + z * hh
+
+
+def dien_init(cfg: DIENConfig, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 5)
+    d, g = cfg.embed_dim, cfg.gru_dim
+    mlp_in = g + 2 * d
+    return {
+        "items": _dense(ks[0], (cfg.vocab, d), scale=0.01),
+        "gru1": _gru_params(ks[1], d, g),
+        "gru2": _gru_params(ks[2], g, g),
+        "att_w": _dense(ks[3], (g + d, 1)),
+        "head": _mlp_params(ks[4], [mlp_in] + list(cfg.mlp) + [1]),
+    }
+
+
+def dien_forward(params: Params, batch: Dict[str, jnp.ndarray],
+                 cfg: DIENConfig) -> jnp.ndarray:
+    """batch: history (B, S) int32, target (B,) int32 -> logits (B,)."""
+    beh = embedding_lookup(params["items"], batch["history"])  # (B, S, d)
+    tgt = embedding_lookup(params["items"], batch["target"])   # (B, d)
+    b, s, d = beh.shape
+    g = cfg.gru_dim
+
+    # interest extraction GRU
+    def step1(h, x):
+        h = _gru_cell(params["gru1"], h, x)
+        return h, h
+    _, states = jax.lax.scan(step1, jnp.zeros((b, g), beh.dtype),
+                             beh.transpose(1, 0, 2))           # (S, B, g)
+
+    # attention of each interest state vs target
+    att_in = jnp.concatenate(
+        [states, jnp.broadcast_to(tgt[None], (s, b, d))], axis=-1)
+    att = jax.nn.softmax(
+        (att_in @ params["att_w"])[..., 0], axis=0)            # (S, B)
+
+    # interest evolution AUGRU
+    def step2(h, inp):
+        x, a = inp
+        h = _gru_cell(params["gru2"], h, x, att=a)
+        return h, ()
+    h_final, _ = jax.lax.scan(step2, jnp.zeros((b, g), beh.dtype),
+                              (states, att))
+
+    feats = jnp.concatenate([h_final, tgt, jnp.mean(beh, axis=1)], axis=-1)
+    return _mlp(params["head"], feats)[:, 0]
+
+
+def dien_retrieval(params: Params, batch: Dict[str, jnp.ndarray],
+                   cfg: DIENConfig) -> jnp.ndarray:
+    beh = embedding_lookup(params["items"], batch["history"])
+    b, s, d = beh.shape
+    def step1(h, x):
+        h = _gru_cell(params["gru1"], h, x)
+        return h, ()
+    h, _ = jax.lax.scan(step1, jnp.zeros((b, cfg.gru_dim), beh.dtype),
+                        beh.transpose(1, 0, 2))
+    items = embedding_lookup(params["items"], batch["cand_ids"])
+    user = h[0, :d] + jnp.mean(beh[0], axis=0)
+    return items @ user

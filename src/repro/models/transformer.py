@@ -1,0 +1,386 @@
+"""Decoder-only transformer family covering the assigned LM architectures.
+
+One implementation parameterised to produce:
+  * dense SwiGLU + GQA  (phi3-mini, granite-3-8b, granite-3-2b)
+  * MoE (GShard capacity dispatch) + GQA (dbrx-132b)
+  * MoE + MLA compressed-KV attention (deepseek-v2-lite)
+
+Layers are *stacked* (leading L axis) and executed with ``lax.scan`` so
+the traced HLO contains one layer body regardless of depth — required for
+the 512-device dry-run to compile on this container, and the right
+production choice (constant compile time, remat-friendly).
+
+Decode uses an explicit KV cache:
+  * GQA: (L, B, T, Hk, Dh) K/V
+  * MLA: (L, B, T, r) latent + (L, B, T, dr) shared rope key — the paper's
+    compressed cache — with the **absorbed-matrix** decode path
+    (q·W_uk folded into the query) so decode never expands K/V.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import constrain
+from repro.models import layers
+from repro.models.moe import MoEConfig, moe_ffn
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    # dispatch-mask memory/FLOPs are quadratic in group size (mask is
+    # N_g × E×C with C ∝ N_g) — keep groups small (see repro.models.moe)
+    moe_group_size: int = 512
+    # MLA
+    mla: bool = False
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # attention / misc
+    rope_theta: float = 1e4
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    dtype: str = "bfloat16"
+    remat: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def moe_cfg(self) -> MoEConfig:
+        return MoEConfig(n_experts=self.n_experts, top_k=self.top_k,
+                         d_model=self.d_model, d_ff=self.moe_d_ff,
+                         n_shared=self.n_shared,
+                         capacity_factor=self.capacity_factor,
+                         group_size=self.moe_group_size)
+
+    def param_count(self) -> int:
+        leaves = jax.tree.leaves(jax.eval_shape(
+            lambda: init_params(self, jax.random.PRNGKey(0))))
+        return sum(int(jnp.prod(jnp.asarray(l.shape))) for l in leaves)
+
+
+# --------------------------------------------------------------------------
+# parameter init (stacked layers)
+# --------------------------------------------------------------------------
+
+def _dense_init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_layer_params(cfg: LMConfig, key: jax.Array) -> Params:
+    """One layer's params, *without* the leading L axis."""
+    d, hd = cfg.d_model, cfg.hd
+    dt = cfg.jdtype
+    s = 0.02
+    so = 0.02 / max(1.0, (2 * cfg.n_layers) ** 0.5)
+    ks = jax.random.split(key, 16)
+    p: Params = {
+        "ln_attn": jnp.ones((d,), dt),
+        "ln_mlp": jnp.ones((d,), dt),
+    }
+    if cfg.mla:
+        dn, dr, dv, r = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                         cfg.kv_lora_rank)
+        p["wq"] = _dense_init(ks[0], (d, cfg.n_heads, dn + dr), s, dt)
+        p["w_dkv"] = _dense_init(ks[1], (d, r + dr), s, dt)
+        p["w_uk"] = _dense_init(ks[2], (r, cfg.n_heads, dn), s, dt)
+        p["w_uv"] = _dense_init(ks[3], (r, cfg.n_heads, dv), s, dt)
+        p["wo"] = _dense_init(ks[4], (cfg.n_heads, dv, d), so, dt)
+    else:
+        p["wq"] = _dense_init(ks[0], (d, cfg.n_heads, hd), s, dt)
+        p["wk"] = _dense_init(ks[1], (d, cfg.n_kv_heads, hd), s, dt)
+        p["wv"] = _dense_init(ks[2], (d, cfg.n_kv_heads, hd), s, dt)
+        p["wo"] = _dense_init(ks[4], (cfg.n_heads, hd, d), so, dt)
+    if cfg.moe:
+        e, ff = cfg.n_experts, cfg.moe_d_ff
+        p["router"] = _dense_init(ks[5], (d, e), s, jnp.float32)
+        p["we_gate"] = _dense_init(ks[6], (e, d, ff), s, dt)
+        p["we_up"] = _dense_init(ks[7], (e, d, ff), s, dt)
+        p["we_down"] = _dense_init(ks[8], (e, ff, d), so, dt)
+        if cfg.n_shared:
+            sf = cfg.n_shared * ff
+            p["ws_gate"] = _dense_init(ks[9], (d, sf), s, dt)
+            p["ws_up"] = _dense_init(ks[10], (d, sf), s, dt)
+            p["ws_down"] = _dense_init(ks[11], (sf, d), so, dt)
+    else:
+        p["w_gate"] = _dense_init(ks[6], (d, cfg.d_ff), s, dt)
+        p["w_up"] = _dense_init(ks[7], (d, cfg.d_ff), s, dt)
+        p["w_down"] = _dense_init(ks[8], (cfg.d_ff, d), so, dt)
+    return p
+
+
+def init_params(cfg: LMConfig, key: jax.Array) -> Params:
+    k_emb, k_head, k_layers = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer_params(cfg, k))(layer_keys)
+    return {
+        "embed": _dense_init(k_emb, (cfg.vocab, cfg.d_model), 0.02,
+                             cfg.jdtype),
+        "head": _dense_init(k_head, (cfg.d_model, cfg.vocab), 0.02,
+                            cfg.jdtype),
+        "ln_f": jnp.ones((cfg.d_model,), cfg.jdtype),
+        "layers": stacked,
+    }
+
+
+# --------------------------------------------------------------------------
+# attention variants
+# --------------------------------------------------------------------------
+
+def _gqa_attention(p: Params, x: jnp.ndarray, cfg: LMConfig,
+                   positions: jnp.ndarray) -> jnp.ndarray:
+    q = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"]),
+                  "batch", None, "heads", None)
+    # K/V replicate across the model axis when kv_heads < TP: the chunked
+    # attention repeats them to full heads locally, so q's head sharding
+    # flows end-to-end (sharding K/V on head_dim forced per-chunk
+    # all-gathers — see EXPERIMENTS.md §Perf granite prefill iteration)
+    k = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wk"]),
+                  "batch", None, "heads", None)
+    v = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wv"]),
+                  "batch", None, "heads", None)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    o = layers.chunked_attention(q, k, v, causal=True,
+                                 q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    o = constrain(o, "batch", None, "heads", None)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def _mla_attention(p: Params, x: jnp.ndarray, cfg: LMConfig,
+                   positions: jnp.ndarray) -> jnp.ndarray:
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    r = cfg.kv_lora_rank
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = jnp.einsum("bsd,dk->bsk", x, p["w_dkv"])
+    c, k_rope = ckv[..., :r], ckv[..., r:]
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], positions,
+                               cfg.rope_theta)             # (B,S,1,dr)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c, p["w_uv"])
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:-1] + (dr,))],
+        axis=-1)
+    o = layers.chunked_attention(
+        q_full, k_full, v, causal=True, q_chunk=cfg.q_chunk,
+        kv_chunk=cfg.kv_chunk, scale=(dn + dr) ** -0.5)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+# --------------------------------------------------------------------------
+# layer body / full forward
+# --------------------------------------------------------------------------
+
+def _ffn(p: Params, x: jnp.ndarray, cfg: LMConfig
+         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if not cfg.moe:
+        return (layers.swiglu(x, p["w_gate"], p["w_up"], p["w_down"]),
+                jnp.zeros((), jnp.float32))
+    y, aux = moe_ffn(x, p["router"], p["we_gate"], p["we_up"],
+                     p["we_down"], cfg.moe_cfg)
+    if cfg.n_shared:
+        y = y + layers.swiglu(x, p["ws_gate"], p["ws_up"], p["ws_down"])
+    return y, aux
+
+
+def _layer(p: Params, x: jnp.ndarray, cfg: LMConfig,
+           positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    attn = _mla_attention if cfg.mla else _gqa_attention
+    x = constrain(x, "batch", None, None)
+    h = x + attn(p, layers.rms_norm(x, p["ln_attn"]), cfg, positions)
+    h = constrain(h, "batch", None, None)
+    y, aux = _ffn(p, layers.rms_norm(h, p["ln_mlp"]), cfg)
+    out = constrain(h + y, "batch", None, None)
+    return out, aux
+
+
+def forward(params: Params, tokens: jnp.ndarray, cfg: LMConfig
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, S) -> (logits (B, S, V), aux_loss)."""
+    x = params["embed"][tokens].astype(cfg.jdtype)
+    x = constrain(x, "batch", None, None)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(carry, layer_p):
+        x = carry
+        fn = _layer
+        if cfg.remat:
+            fn = jax.checkpoint(
+                _layer, policy=jax.checkpoint_policies.nothing_saveable,
+                static_argnums=(2,))
+        x, aux = fn(layer_p, x, cfg, positions)
+        return x, aux
+
+    x, auxs = jax.lax.scan(lambda c, p: body(c, p), x, params["layers"])
+    x = layers.rms_norm(x, params["ln_f"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    logits = constrain(logits, "batch", None, "vocab")
+    return logits, jnp.sum(auxs)
+
+
+def loss_fn(params: Params, batch: Dict[str, jnp.ndarray], cfg: LMConfig
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, aux = forward(params, batch["tokens"], cfg)
+    ce = layers.cross_entropy_loss(logits, batch["labels"])
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> Params:
+    dt = cfg.jdtype
+    if cfg.mla:
+        return {
+            "c": jnp.zeros((cfg.n_layers, batch, max_len,
+                            cfg.kv_lora_rank), dt),
+            "k_rope": jnp.zeros((cfg.n_layers, batch, max_len,
+                                 cfg.qk_rope_dim), dt),
+            "length": jnp.zeros((batch,), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                        cfg.hd), dt),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                        cfg.hd), dt),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _cache_insert(cache_l: jnp.ndarray, new: jnp.ndarray,
+                  lengths: jnp.ndarray) -> jnp.ndarray:
+    """Insert one new timestep at per-row position ``lengths``.
+
+    cache_l (B, T, ...), new (B, 1, ...), lengths (B,).
+    """
+    def one(row_cache, row_new, pos):
+        return jax.lax.dynamic_update_slice_in_dim(row_cache, row_new,
+                                                   pos, axis=0)
+    return jax.vmap(one)(cache_l, new, lengths)
+
+
+def _gqa_decode_layer(p: Params, x: jnp.ndarray, k_c, v_c, lengths, cfg):
+    positions = lengths[:, None]                         # (B, 1)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    k_c = _cache_insert(k_c, k, lengths)
+    v_c = _cache_insert(v_c, v, lengths)
+    o = layers.decode_attention(q, k_c, v_c, kv_valid=lengths + 1)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), k_c, v_c
+
+
+def _mla_decode_layer(p: Params, x: jnp.ndarray, c_c, kr_c, lengths, cfg):
+    """Absorbed-matrix MLA decode: attention runs in the latent space."""
+    dn, dr, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.kv_lora_rank
+    positions = lengths[:, None]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = jnp.einsum("bsd,dk->bsk", x, p["w_dkv"])
+    c_new, kr_new = ckv[..., :r], ckv[..., r:]
+    kr_new = layers.apply_rope(kr_new[:, :, None, :], positions,
+                               cfg.rope_theta)[:, :, 0, :]
+    c_c = _cache_insert(c_c, c_new, lengths)
+    kr_c = _cache_insert(kr_c, kr_new, lengths)
+
+    # fold W_uk into the query: q_lat = q_nope @ W_uk  (B,1,H,r)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
+    scale = (dn + dr) ** -0.5
+    logits = (jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                         c_c.astype(jnp.float32))
+              + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                           kr_c.astype(jnp.float32))) * scale
+    t = c_c.shape[1]
+    mask = jnp.arange(t)[None, :] < (lengths + 1)[:, None]
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", probs.astype(c_c.dtype), c_c)
+    o = jnp.einsum("bshr,rhk->bshk", o_lat, p["w_uv"])
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), c_c, kr_c
+
+
+def decode_step(params: Params, cache: Params, tokens: jnp.ndarray,
+                cfg: LMConfig) -> Tuple[jnp.ndarray, Params]:
+    """One decode step: tokens (B, 1) -> (logits (B, 1, V), new cache)."""
+    x = params["embed"][tokens].astype(cfg.jdtype)
+    lengths = cache["length"]
+
+    if cfg.mla:
+        def body(carry, inputs):
+            x = carry
+            layer_p, c_l, kr_l = inputs
+            h = x
+            a, c_l, kr_l = _mla_decode_layer(
+                layer_p, layers.rms_norm(x, layer_p["ln_attn"]), c_l, kr_l,
+                lengths, cfg)
+            h = h + a
+            y, _ = _ffn(layer_p, layers.rms_norm(h, layer_p["ln_mlp"]), cfg)
+            return h + y, (c_l, kr_l)
+
+        x, (c_new, kr_new) = jax.lax.scan(
+            body, x, (params["layers"], cache["c"], cache["k_rope"]))
+        new_cache = {"c": c_new, "k_rope": kr_new, "length": lengths + 1}
+    else:
+        def body(carry, inputs):
+            x = carry
+            layer_p, k_l, v_l = inputs
+            h = x
+            a, k_l, v_l = _gqa_decode_layer(
+                layer_p, layers.rms_norm(x, layer_p["ln_attn"]), k_l, v_l,
+                lengths, cfg)
+            h = h + a
+            y, _ = _ffn(layer_p, layers.rms_norm(h, layer_p["ln_mlp"]), cfg)
+            return h + y, (k_l, v_l)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": k_new, "v": v_new, "length": lengths + 1}
+
+    x = layers.rms_norm(x, params["ln_f"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    return logits, new_cache
+
+
+def prefill(params: Params, tokens: jnp.ndarray, cfg: LMConfig
+            ) -> jnp.ndarray:
+    """Prefill serve step: full forward, returns last-position logits."""
+    logits, _ = forward(params, tokens, cfg)
+    return logits[:, -1:, :]

@@ -1,0 +1,69 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+Two schemes, both with *error feedback* (residual accumulation) so the
+compression bias vanishes over steps (Karimireddy et al., 2019):
+
+  * top-k sparsification — keep the k largest-|g| entries per tensor,
+    all-reduce only those (dense emulation via masking under SPMD; on a
+    real fabric the sparse payload is k indices + k values).
+  * int8 stochastic quantisation — per-tensor scale, stochastic rounding.
+
+Used by the ``shard_map`` DDP trainer (`repro.train.ddp`) where the
+all-reduce is explicit; the pjit path leaves gradients uncompressed (XLA
+owns that collective).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_compress(g: jnp.ndarray, frac: float) -> jnp.ndarray:
+    """Zero out all but the largest-|g| ``frac`` of entries."""
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def int8_quantize(g: jnp.ndarray, key: jax.Array
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    noise = jax.random.uniform(key, g.shape, g.dtype, -0.5, 0.5)
+    q = jnp.clip(jnp.round(g / scale + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads: Any, residual: Any, *, scheme: str,
+                           topk_frac: float = 0.01,
+                           key: jax.Array | None = None
+                           ) -> Tuple[Any, Any]:
+    """Returns (compressed grads to all-reduce, new residual)."""
+    corrected = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r,
+                             grads, residual)
+    if scheme == "topk":
+        sent = jax.tree.map(
+            functools.partial(topk_compress, frac=topk_frac), corrected)
+    elif scheme == "int8":
+        leaves, treedef = jax.tree.flatten(corrected)
+        keys = jax.random.split(key, len(leaves))
+        sent = treedef.unflatten(
+            [int8_dequantize(*int8_quantize(g, k))
+             for g, k in zip(leaves, keys)])
+    elif scheme == "none":
+        sent = corrected
+    else:
+        raise ValueError(scheme)
+    new_residual = jax.tree.map(lambda c, s: c - s, corrected, sent)
+    return sent, new_residual
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

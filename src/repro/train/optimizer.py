@@ -1,0 +1,76 @@
+"""AdamW with mixed-precision state (built here — no optax dependency).
+
+State: fp32 first/second moments + fp32 master params when the model
+weights are bf16 (the production mixed-precision recipe).  The state tree
+mirrors the parameter tree, so parameter sharding rules apply verbatim —
+i.e. the optimizer is automatically ZeRO-sharded wherever params are
+FSDP-sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+    master: Any          # fp32 params (or None-like empty dict if fp32 model)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+    warmup_steps: int = 100
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                          v=jax.tree.map(jnp.copy, zeros), master=master)
+
+    def schedule(self, step: jnp.ndarray) -> jnp.ndarray:
+        warm = jnp.minimum(1.0, (step + 1) / max(self.warmup_steps, 1))
+        return self.lr * warm
+
+    def update(self, params: Any, state: AdamWState, grads: Any
+               ) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.vdot(g, g).real
+                             for g in jax.tree.leaves(grads)) + 1e-20)
+        if self.grad_clip is not None:
+            scale = jnp.minimum(1.0, self.grad_clip / gnorm)
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        step = state.step + 1
+        lr = self.schedule(step)
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        new_m = jax.tree.map(
+            lambda m, g: self.b1 * m + (1 - self.b1) * g, state.m, grads)
+        new_v = jax.tree.map(
+            lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+            state.v, grads)
+
+        def upd(master, m, v):
+            mh = m / b1c
+            vh = v / b2c
+            return master - lr * (mh / (jnp.sqrt(vh) + self.eps)
+                                  + self.weight_decay * master)
+
+        new_master = jax.tree.map(upd, state.master, new_m, new_v)
+        new_params = jax.tree.map(
+            lambda mp, p: mp.astype(p.dtype), new_master, params)
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, AdamWState(step, new_m, new_v, new_master), metrics

@@ -1,0 +1,15 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single CPU device; only the dry-run (separate process) forces
+512 host devices."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

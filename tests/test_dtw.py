@@ -1,0 +1,84 @@
+"""DTW oracle tests: the (min,+) column-scan vs the O(m^2) DP, plus
+metric properties under hypothesis."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dtw import (dtw, dtw_batch, dtw_dp_reference, dtw_pairwise,
+                            znormalize)
+
+
+@pytest.mark.parametrize("mx,my,band", [
+    (8, 8, None), (16, 16, None), (16, 16, 3), (33, 47, 6),
+    (20, 16, None), (64, 64, 8), (5, 5, 1),
+])
+def test_matches_dp_reference(mx, my, band, rng):
+    x = rng.normal(size=mx).astype(np.float32)
+    y = rng.normal(size=my).astype(np.float32)
+    got = float(dtw(jnp.asarray(x), jnp.asarray(y), band=band))
+    want = dtw_dp_reference(x, y, band=band)
+    assert got == pytest.approx(want, rel=1e-4)
+
+
+def test_self_distance_zero(rng):
+    x = jnp.asarray(rng.normal(size=32).astype(np.float32))
+    assert float(dtw(x, x)) == pytest.approx(0.0, abs=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 24), st.integers(4, 24), st.integers(0, 2 ** 31 - 1))
+def test_symmetry(mx, my, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=mx).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=my).astype(np.float32))
+    assert float(dtw(x, y)) == pytest.approx(float(dtw(y, x)), rel=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(8, 32), st.integers(0, 2 ** 31 - 1))
+def test_band_monotone(m, seed):
+    """Widening the Sakoe-Chiba band can only lower the cost."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=m).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=m).astype(np.float32))
+    costs = [float(dtw(x, y, band=b)) for b in (1, 3, m - 1)]
+    assert costs[0] >= costs[1] - 1e-4
+    assert costs[1] >= costs[2] - 1e-4
+
+
+def test_unbanded_below_euclidean(rng):
+    """DTW (free alignment) <= squared Euclidean (the identity alignment)."""
+    x = rng.normal(size=40).astype(np.float32)
+    y = rng.normal(size=40).astype(np.float32)
+    assert float(dtw(jnp.asarray(x), jnp.asarray(y))) <= \
+        float(np.sum((x - y) ** 2)) + 1e-4
+
+
+def test_batch_and_pairwise(rng):
+    q = jnp.asarray(rng.normal(size=16).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(5, 16)).astype(np.float32))
+    d = dtw_batch(q, c, band=4)
+    assert d.shape == (5,)
+    for i in range(5):
+        assert float(d[i]) == pytest.approx(float(dtw(q, c[i], band=4)),
+                                            rel=1e-5)
+    pw = dtw_pairwise(c[:2], c, band=4)
+    assert pw.shape == (2, 5)
+
+
+def test_shift_invariance_vs_euclidean(rng):
+    """The motivating property (paper Fig. 1): a shifted copy stays close
+    in DTW while Euclidean blows up."""
+    base = np.sin(np.linspace(0, 12 * np.pi, 128)).astype(np.float32)
+    shifted = np.roll(base, 3)
+    d_dtw = float(dtw(jnp.asarray(base), jnp.asarray(shifted), band=8))
+    d_euc = float(np.sum((base - shifted) ** 2))
+    assert d_dtw < 0.1 * d_euc
+
+
+def test_znormalize(rng):
+    x = jnp.asarray(rng.normal(2.0, 5.0, size=(3, 64)).astype(np.float32))
+    z = znormalize(x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(z, -1)), 0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(jnp.std(z, -1)), 1, atol=1e-3)

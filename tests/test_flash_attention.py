@@ -1,0 +1,44 @@
+"""Flash-attention Pallas kernel vs the plain softmax oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref
+
+
+@pytest.mark.parametrize("b,h,s,t,d,causal,qb,kvb", [
+    (1, 2, 32, 32, 16, True, 16, 16),
+    (2, 4, 64, 64, 32, True, 32, 16),
+    (1, 1, 40, 40, 16, True, 16, 8),       # padded q blocks
+    (2, 2, 32, 32, 16, False, 16, 16),
+    (1, 2, 16, 64, 16, True, 16, 16),      # decode-ish: s < t
+])
+def test_flash_vs_ref(b, h, s, t, d, causal, qb, kvb, rng):
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, h, t, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, h, t, d)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, q_block=qb, kv_block=kvb,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal)
+    if causal and s < t:
+        # kernel uses absolute positions 0..s for q; ref aligns q at the
+        # END of the kv window — compare only the overlapping lower rows
+        got = got[:, :, : min(s, t)]
+        want = flash_attention_ref(q, k[:, :, :s], v[:, :, :s],
+                                   causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_bf16(rng):
+    q = jnp.asarray(rng.normal(size=(1, 2, 32, 16)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 32, 16)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 32, 16)), jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, q_block=16, kv_block=16,
+                          interpret=True)
+    want = flash_attention_ref(q.astype(jnp.float32),
+                               k.astype(jnp.float32),
+                               v.astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=3e-2, atol=3e-2)

@@ -1,0 +1,91 @@
+"""End-to-end SSH index + search behaviour (paper Alg. 1 + 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SSHParams, SSHIndex, brute_force_topk, ndcg_at_k,
+                        precision_at_k, srp_search, ssh_search, ucr_search)
+from repro.core.srp import make_srp, srp_bits
+from repro.data import make_benchmark_db
+from repro.data.timeseries import extract_subsequences, synthetic_ecg
+
+PARAMS = SSHParams(window=24, step=3, ngram=8, num_hashes=40, num_tables=20)
+
+
+@pytest.fixture(scope="module")
+def db():
+    stream = synthetic_ecg(4000, seed=5)
+    d = extract_subsequences(stream, 128, stride=1, znorm=True)
+    return jnp.asarray(d)
+
+
+@pytest.fixture(scope="module")
+def index(db):
+    return SSHIndex.build(db, PARAMS, with_host_buckets=True)
+
+
+def test_self_query_returns_self(db, index):
+    res = ssh_search(db[100], index, topk=5, top_c=128, band=8,
+                     multiprobe_offsets=PARAMS.step)
+    assert res.ids[0] == 100
+    assert res.dists[0] == pytest.approx(0.0, abs=1e-4)
+
+
+def test_precision_against_gold(db, index):
+    precs = []
+    for qid in (50, 500, 1500):
+        res = ssh_search(db[qid], index, topk=10, top_c=256, band=8,
+                         multiprobe_offsets=PARAMS.step)
+        gold, _ = brute_force_topk(db[qid], db, 10, band=8)
+        precs.append(precision_at_k(res.ids, gold, 10))
+    assert np.mean(precs) >= 0.5      # small-db bound; benchmarks use full
+
+
+def test_pruning_fraction(db, index):
+    res = ssh_search(db[700], index, topk=10, top_c=256, band=8)
+    assert res.pruned_by_hash_frac > 0.9          # paper Table 4 behaviour
+    assert res.n_candidates <= 256
+
+
+def test_host_buckets_agree_with_device_scan(db, index):
+    r1 = ssh_search(db[42], index, topk=5, top_c=256, band=8,
+                    use_host_buckets=True, rank_by_signature=False)
+    r2 = ssh_search(db[42], index, topk=5, top_c=256, band=8,
+                    rank_by_signature=False)
+    assert r1.ids[0] == r2.ids[0] == 42
+
+
+def test_streaming_insert(db, index):
+    n0 = int(index.signatures.shape[0])
+    new = db[:7] * 1.01
+    index.insert(new)
+    assert index.signatures.shape[0] == n0 + 7
+    res = ssh_search(db[3], index, topk=3, top_c=64, band=8)
+    assert res.n_database == n0 + 7
+
+
+def test_ucr_search_is_exact(db):
+    q = db[321]
+    res = ucr_search(q, db, topk=5, band=8)
+    gold, gd = brute_force_topk(q, db, 5, band=8)
+    assert precision_at_k(res.ids, gold, 5) == 1.0
+    np.testing.assert_allclose(res.dists, gd, rtol=1e-4)
+
+
+def test_srp_fails_on_warping(db):
+    """Paper Table 2: SRP (no alignment) ranks far worse than SSH."""
+    q = db[800]
+    planes = make_srp(jax.random.PRNGKey(0), 64, db.shape[1])
+    dbits = srp_bits(db, planes)
+    res = srp_search(q, db, planes, dbits, topk=10)
+    gold, _ = brute_force_topk(q, db, 10, band=8)
+    # SRP finds the exact self-match but misses warped neighbours
+    assert precision_at_k(res.ids, gold, 10) <= 0.9
+
+
+def test_ndcg_metric():
+    gold = np.arange(10)
+    assert ndcg_at_k(gold, gold, 10) == pytest.approx(1.0)
+    assert ndcg_at_k(gold[::-1], gold, 10) < 1.0
+    assert ndcg_at_k(np.arange(100, 110), gold, 10) == 0.0

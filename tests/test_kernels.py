@@ -1,0 +1,98 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps in interpret
+mode (kernel bodies execute in Python on CPU; same code paths as TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.collision_count import collision_count
+from repro.kernels.dtw_wavefront import dtw_wavefront
+from repro.kernels.sketch_conv import sketch_conv
+
+
+@pytest.mark.parametrize("b,m,w,f,step", [
+    (4, 256, 40, 1, 3),      # paper ECG-ish
+    (3, 130, 30, 2, 5),      # paper random-walk-ish, 2 filters
+    (9, 515, 80, 4, 7),      # ragged sizes, filter bank
+    (1, 64, 16, 1, 1),       # stride 1
+    (8, 128, 128, 3, 2),     # window == tile
+])
+def test_sketch_conv_vs_ref(b, m, w, f, step, rng):
+    x = jnp.asarray(rng.normal(size=(b, m)).astype(np.float32))
+    filt = jnp.asarray(rng.normal(size=(w, f)).astype(np.float32))
+    got = sketch_conv(x, filt, step, interpret=True)
+    want = ref.sketch_conv_ref(x, filt, step)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sketch_conv_dtypes(dtype, rng):
+    x = jnp.asarray(rng.normal(size=(2, 96)), dtype)
+    filt = jnp.asarray(rng.normal(size=(16, 1)), dtype)
+    got = sketch_conv(x, filt, 4, interpret=True)
+    want = ref.sketch_conv_ref(x.astype(jnp.float32),
+                               filt.astype(jnp.float32), 4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("c,m,band", [
+    (5, 32, 4), (130, 48, 8), (3, 40, 39), (7, 33, 5), (1, 16, 2),
+    (256, 24, 3),
+])
+def test_dtw_wavefront_vs_ref(c, m, band, rng):
+    q = jnp.asarray(rng.normal(size=m).astype(np.float32))
+    cands = jnp.asarray(rng.normal(size=(c, m)).astype(np.float32))
+    got = dtw_wavefront(q, cands, band, interpret=True)
+    want = ref.dtw_wavefront_ref(q, cands, band=band)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 40), st.integers(8, 40), st.integers(1, 8),
+       st.integers(0, 2 ** 31 - 1))
+def test_dtw_wavefront_property(c, m, band, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=m).astype(np.float32))
+    cands = jnp.asarray(rng.normal(size=(c, m)).astype(np.float32))
+    got = dtw_wavefront(q, cands, band, interpret=True)
+    want = ref.dtw_wavefront_ref(q, cands, band=band)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,k", [(300, 20), (128, 7), (1000, 40), (64, 64)])
+def test_collision_count_vs_ref(n, k, rng):
+    db = jnp.asarray(rng.integers(0, 5, size=(n, k)), jnp.int32)
+    qk = jnp.asarray(rng.integers(0, 5, size=(k,)), jnp.int32)
+    got = collision_count(qk, db, interpret=True)
+    want = ref.collision_count_ref(qk, db)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ops_dispatch_cpu_uses_ref(rng):
+    """On CPU backend the default path must be the jnp reference."""
+    x = jnp.asarray(rng.normal(size=(2, 64)).astype(np.float32))
+    filt = jnp.asarray(rng.normal(size=(16, 1)).astype(np.float32))
+    out = ops.sketch_conv(x, filt, 4)              # use_pallas=None on CPU
+    want = ref.sketch_conv_ref(x, filt, 4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)
+    bits = ops.sketch_bits(x, filt, 4)
+    assert set(np.unique(np.asarray(bits))) <= {0, 1}
+
+
+def test_ops_dtw_and_collision_dispatch(rng):
+    q = jnp.asarray(rng.normal(size=32).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(ops.dtw_rerank(q, c, 4)),
+        np.asarray(ref.dtw_wavefront_ref(q, c, band=4)), rtol=1e-5)
+    db = jnp.asarray(rng.integers(0, 3, (50, 8)), jnp.int32)
+    qk = jnp.asarray(rng.integers(0, 3, (8,)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.collision_count(qk, db)),
+        np.asarray(ref.collision_count_ref(qk, db)))

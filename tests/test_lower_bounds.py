@@ -1,0 +1,61 @@
+"""Lower-bound soundness: every LB must lower-bound banded DTW (that is
+what makes the UCR cascade exact)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lower_bounds as lb
+from repro.core.dtw import dtw
+
+
+def _naive_envelope(x, r):
+    m = len(x)
+    u = np.array([x[max(0, i - r):i + r + 1].max() for i in range(m)])
+    l = np.array([x[max(0, i - r):i + r + 1].min() for i in range(m)])
+    return u, l
+
+
+def test_envelope_matches_naive(rng):
+    x = rng.normal(size=64).astype(np.float32)
+    for r in (1, 4, 9):
+        u, l = lb.envelope(jnp.asarray(x), r)
+        nu, nl = _naive_envelope(x, r)
+        np.testing.assert_allclose(np.asarray(u), nu, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(l), nl, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(8, 48), st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+def test_bounds_below_dtw(m, r, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=m).astype(np.float32)
+    x = rng.normal(size=m).astype(np.float32)
+    d = float(dtw(jnp.asarray(q), jnp.asarray(x), band=r))
+    u, low = lb.envelope(jnp.asarray(q), r)
+    assert float(lb.lb_kim(jnp.asarray(q), jnp.asarray(x))) <= d + 1e-3
+    assert float(lb.lb_keogh(u, low, jnp.asarray(x))) <= d + 1e-3
+    assert float(lb.lb_keogh2(jnp.asarray(q), jnp.asarray(x)[None], r)[0]) \
+        <= d + 1e-3
+
+
+def test_cascade_never_prunes_true_topk(rng):
+    """Exactness: survivors of the cascade (vs kth-best bound) must contain
+    the true top-k."""
+    from repro.core.dtw import dtw_batch
+    q = jnp.asarray(rng.normal(size=32).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    r, k = 4, 5
+    d = dtw_batch(q, c, band=r)
+    kth = jnp.sort(d)[k - 1]
+    keep = lb.cascade(q, c, r, kth + 1e-6)
+    true_topk = set(np.argsort(np.asarray(d))[:k].tolist())
+    survivors = set(np.nonzero(np.asarray(keep))[0].tolist())
+    assert true_topk <= survivors
+
+
+def test_cascade_stats_fractions(rng):
+    q = jnp.asarray(rng.normal(size=32).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(32, 32)).astype(np.float32))
+    stats = lb.cascade_stats(q, c, 4, jnp.asarray(1.0))
+    for v in stats.values():
+        assert 0.0 <= float(v) <= 1.0

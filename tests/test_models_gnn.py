@@ -1,0 +1,147 @@
+"""NequIP: exact SE(3) equivariance (the paper's defining property),
+permutation invariance, CG table validity, sampler shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.graph import (CSRGraph, molecule_batch, random_graph,
+                              sample_neighbors, sampled_subgraph_shape)
+from repro.models import nequip as NQ
+from repro.models.equivariant import (allowed_paths, random_rotation,
+                                      real_cg, real_sh, wigner_d)
+
+CFG = NQ.NequIPConfig(n_layers=2, channels=8, d_feat=4)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(0)
+    params = NQ.init_params(CFG, jax.random.PRNGKey(0))
+    n, e = 14, 48
+    batch = {
+        "node_feat": jnp.asarray(rng.normal(size=(n, 4)), jnp.float32),
+        "positions": jnp.asarray(rng.normal(size=(n, 3)) * 2, jnp.float32),
+        "edge_src": jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        "edge_dst": jnp.asarray(rng.integers(0, n, e), jnp.int32),
+    }
+    return params, batch
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_wigner_d_is_representation(seed):
+    r1 = random_rotation(seed)
+    r2 = random_rotation(seed + 1)
+    for l in (1, 2):
+        d12 = wigner_d(l, r1 @ r2)
+        np.testing.assert_allclose(d12, wigner_d(l, r1) @ wigner_d(l, r2),
+                                   atol=1e-10)
+
+
+def test_cg_intertwiner_property():
+    rot = random_rotation(3)
+    for (l1, l2, l3) in allowed_paths(2):
+        t = real_cg(l1, l2, l3)
+        lhs = np.einsum("cab,ax,by->cxy", t, wigner_d(l1, rot),
+                        wigner_d(l2, rot))
+        rhs = np.einsum("cd,dxy->cxy", wigner_d(l3, rot), t)
+        np.testing.assert_allclose(lhs, rhs, atol=1e-10)
+
+
+def test_sh_jnp_matches_numpy(rng):
+    pts = rng.normal(size=(10, 3))
+    pts /= np.linalg.norm(pts, axis=-1, keepdims=True)
+    for l in (0, 1, 2):
+        np.testing.assert_allclose(
+            np.asarray(NQ.sh_l(l, jnp.asarray(pts, jnp.float32))),
+            real_sh(l, pts), atol=1e-5)
+
+
+def test_energy_invariance(setup):
+    params, batch = setup
+    e1 = NQ.forward(params, batch, CFG)
+    rot = jnp.asarray(random_rotation(7), jnp.float32)
+    b2 = dict(batch)
+    b2["positions"] = batch["positions"] @ rot.T + 5.0
+    e2 = NQ.forward(params, b2, CFG)
+    assert float(jnp.abs(e1 - e2)[0]) < 5e-5 * (1 + abs(float(e1[0])))
+
+
+def test_force_equivariance(setup):
+    params, batch = setup
+    rot = jnp.asarray(random_rotation(11), jnp.float32)
+    f1 = NQ.forces(params, batch, CFG)
+    b2 = dict(batch)
+    b2["positions"] = batch["positions"] @ rot.T - 2.0
+    f2 = NQ.forces(params, b2, CFG)
+    np.testing.assert_allclose(np.asarray(f2), np.asarray(f1 @ rot.T),
+                               atol=2e-5)
+
+
+def test_permutation_invariance(setup):
+    params, batch = setup
+    n = batch["positions"].shape[0]
+    perm = np.random.default_rng(5).permutation(n)
+    inv = np.argsort(perm)
+    b2 = {
+        "node_feat": batch["node_feat"][perm],
+        "positions": batch["positions"][perm],
+        "edge_src": jnp.asarray(inv)[batch["edge_src"]],
+        "edge_dst": jnp.asarray(inv)[batch["edge_dst"]],
+    }
+    e1 = NQ.forward(params, batch, CFG)
+    e2 = NQ.forward(params, b2, CFG)
+    assert float(jnp.abs(e1 - e2)[0]) < 1e-4
+
+
+def test_self_loop_edges_are_inert(setup):
+    """Padding edges (self-loops) must not change the energy — the padded
+    sampled-subgraph contract."""
+    params, batch = setup
+    e1 = NQ.forward(params, batch, CFG)
+    b2 = dict(batch)
+    b2["edge_src"] = jnp.concatenate(
+        [batch["edge_src"], jnp.zeros(16, jnp.int32)])
+    b2["edge_dst"] = jnp.concatenate(
+        [batch["edge_dst"], jnp.zeros(16, jnp.int32)])
+    e2 = NQ.forward(params, b2, CFG)
+    assert float(jnp.abs(e1 - e2)[0]) < 1e-5
+
+
+def test_molecule_batch_readout():
+    mb = molecule_batch(5, 6, 12, d_feat=4, seed=1)
+    batch = {k: jnp.asarray(v) for k, v in mb.items()}
+    params = NQ.init_params(CFG, jax.random.PRNGKey(0))
+    e = NQ.forward(params, batch, CFG, n_graphs=5)
+    assert e.shape == (5,)
+    loss, _ = NQ.loss_fn(params, batch, CFG, n_graphs=5)
+    assert np.isfinite(float(loss))
+
+
+def test_node_targets_loss():
+    g = random_graph(20, 60, 4, seed=2)
+    batch = {k: jnp.asarray(v) for k, v in g.items()}
+    params = NQ.init_params(CFG, jax.random.PRNGKey(0))
+    loss, _ = NQ.loss_fn(params, batch, CFG)
+    grads = jax.grad(lambda p: NQ.loss_fn(p, batch, CFG)[0])(params)
+    assert np.isfinite(float(loss))
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(grads))
+
+
+def test_neighbor_sampler_shapes():
+    rng = np.random.default_rng(0)
+    n, e = 200, 2000
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    g = CSRGraph.from_edges(src, dst, n)
+    seeds = rng.integers(0, n, 16).astype(np.int32)
+    sub = sample_neighbors(g, seeds, (5, 3), seed=1)
+    want_nodes, want_edges = sampled_subgraph_shape(16, (5, 3))
+    assert sub["nodes"].shape == (want_nodes,)
+    assert sub["edge_src"].shape == (want_edges,)
+    assert sub["edge_dst"].shape == (want_edges,)
+    # edge indices point inside the node array
+    assert sub["edge_src"].max() < want_nodes
+    assert sub["edge_dst"].max() < want_nodes

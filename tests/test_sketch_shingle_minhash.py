@@ -1,0 +1,131 @@
+"""SSH stages 1-3 unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import minhash, shingle, sketch
+
+
+def test_sketch_shapes(rng):
+    x = jnp.asarray(rng.normal(size=(3, 100)).astype(np.float32))
+    filt = sketch.make_filter(jax.random.PRNGKey(0), 20, 2)
+    bits = sketch.sketch_bits(x, filt, 4)
+    assert bits.shape == (3, (100 - 20) // 4 + 1, 2)
+    assert set(np.unique(np.asarray(bits))) <= {0, 1}
+
+
+def test_sketch_scale_invariance(rng):
+    """sign(r·(a x)) == sign(r·x) for a > 0 — sketches ignore amplitude."""
+    x = jnp.asarray(rng.normal(size=(2, 64)).astype(np.float32))
+    filt = sketch.make_filter(jax.random.PRNGKey(1), 16, 1)
+    b1 = sketch.sketch_bits(x, filt, 2)
+    b2 = sketch.sketch_bits(3.7 * x, filt, 2)
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+
+
+def test_shift_by_step_shifts_bits(rng):
+    """Paper §4.2: a shift by δ produces the same bits, offset by one —
+    the mechanism behind shingle shift-invariance."""
+    step = 4
+    x = rng.normal(size=256).astype(np.float32)
+    filt = sketch.make_filter(jax.random.PRNGKey(2), 16, 1)
+    b = np.asarray(sketch.sketch_bits(jnp.asarray(x)[None], filt, step))[0, :, 0]
+    b_shift = np.asarray(sketch.sketch_bits(
+        jnp.asarray(x[step:])[None], filt, step))[0, :, 0]
+    np.testing.assert_array_equal(b[1:len(b_shift) + 1], b_shift)
+
+
+def test_pack_ngrams_known():
+    bits = jnp.asarray([[1, 0, 1, 1]], dtype=jnp.uint8)
+    ids = shingle.pack_ngrams(bits, 2)
+    # windows: (1,0)->1, (0,1)->2, (1,1)->3  (bit j contributes <<j)
+    np.testing.assert_array_equal(np.asarray(ids)[0], [1, 2, 3])
+
+
+def test_histogram_counts(rng):
+    bits = jnp.asarray(rng.integers(0, 2, (40, 1)), jnp.uint8)
+    h = shingle.shingle_histogram(bits, 3)
+    assert h.shape == (8,)
+    assert int(jnp.sum(h)) == 40 - 3 + 1
+
+
+def test_weighted_jaccard_props(rng):
+    a = jnp.asarray(rng.integers(0, 5, 32), jnp.float32)
+    assert float(shingle.weighted_jaccard(a, a)) == pytest.approx(1.0)
+    z = jnp.zeros_like(a)
+    assert float(shingle.weighted_jaccard(a, z)) == 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_cws_collision_estimates_jaccard(seed):
+    """Pr[h(x)=h(y)] ≈ J_w(x,y) (paper eq. 3) — the core LSH property."""
+    rng = np.random.default_rng(seed)
+    d = 64
+    x = rng.integers(0, 4, d).astype(np.float32)
+    y = np.where(rng.uniform(size=d) < 0.7, x,
+                 rng.integers(0, 4, d)).astype(np.float32)
+    true_j = float(np.minimum(x, y).sum() / np.maximum(x, y).sum())
+    params = minhash.make_cws(jax.random.PRNGKey(seed % 1000), 400, d)
+    hx = minhash.cws_hash(jnp.asarray(x), params)
+    hy = minhash.cws_hash(jnp.asarray(y), params)
+    est = float(jnp.mean((hx == hy).astype(jnp.float32)))
+    assert est == pytest.approx(true_j, abs=0.12)
+
+
+def test_cws_batch_matches_single(rng):
+    d, k = 32, 8
+    params = minhash.make_cws(jax.random.PRNGKey(3), k, d)
+    w = jnp.asarray(rng.integers(0, 3, (5, d)), jnp.float32)
+    batch = minhash.cws_hash_batch(w, params, chunk=2)
+    for i in range(5):
+        np.testing.assert_array_equal(
+            np.asarray(batch[i]), np.asarray(minhash.cws_hash(w[i], params)))
+
+
+def test_combine_bands(rng):
+    sigs = jnp.asarray(rng.integers(0, 100, (6, 8)), jnp.int32)
+    keys = minhash.combine_bands(sigs, 4)
+    assert keys.shape == (6, 4)
+    # deterministic + sensitive to any hash change
+    keys2 = minhash.combine_bands(sigs.at[0, 0].add(1), 4)
+    assert int(keys2[0, 0]) != int(keys[0, 0])
+    np.testing.assert_array_equal(np.asarray(keys[1:]), np.asarray(keys2[1:]))
+
+
+def test_bbit_packing_roundtrip(rng):
+    from repro.core.minhash import pack_signatures, packed_collisions
+    sigs = jnp.asarray(rng.integers(0, 1 << 15, (6, 8)), jnp.int32)
+    packed = pack_signatures(sigs, bits=8)
+    assert packed.shape == (6, 2)
+    # agreement counts under packing == agreement of low-8-bit lanes
+    q = sigs[0]
+    want = jnp.sum((sigs & 255) == (q & 255)[None, :], axis=-1)
+    got = packed_collisions(packed[0], packed, bits=8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(got[0]) == 8          # self-collision is full
+
+
+def test_bbit_ranking_quality(rng):
+    """b-bit packed agreement preserves the collision-count ranking well
+    enough for candidate generation (4x smaller index)."""
+    from repro.core.minhash import pack_signatures, packed_collisions
+    d, k, n = 64, 40, 200
+    params = minhash.make_cws(jax.random.PRNGKey(5), k, d)
+    base = rng.integers(0, 4, d).astype(np.float32)
+    sims, rows = [], []
+    for i in range(n):
+        keep = rng.uniform(size=d) < rng.uniform(0.2, 1.0)
+        w = np.where(keep, base, rng.integers(0, 4, d)).astype(np.float32)
+        rows.append(w)
+    sigs = minhash.cws_hash_batch(jnp.asarray(np.stack(rows)), params)
+    qsig = minhash.cws_hash(jnp.asarray(base), params)
+    full = np.asarray(jnp.sum(sigs == qsig[None, :], axis=-1))
+    packed = pack_signatures(sigs, bits=8)
+    qp = pack_signatures(qsig[None, :], bits=8)[0]
+    pk = np.asarray(packed_collisions(qp, packed, bits=8))
+    top_full = set(np.argsort(-full)[:20].tolist())
+    top_pack = set(np.argsort(-pk)[:20].tolist())
+    assert len(top_full & top_pack) >= 14     # >=70% overlap at top-20

@@ -1,0 +1,142 @@
+"""REQUIRED per-arch smoke tests: every assigned architecture instantiates
+its REDUCED config and runs one forward/train step on CPU, asserting
+output shapes + no NaNs.  (Full configs are exercised only by the dry-run.)
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.launch import steps
+
+LM_ARCHS = ["deepseek-v2-lite-16b", "dbrx-132b", "phi3-mini-3.8b",
+            "granite-3-8b", "granite-3-2b"]
+RECSYS_ARCHS = ["bst", "dlrm-rm2", "mind", "dien"]
+
+
+def _finite(tree) -> bool:
+    return all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(tree)
+               if jnp.issubdtype(l.dtype, jnp.floating))
+
+
+def test_registry_covers_assignment():
+    assigned = set(LM_ARCHS + RECSYS_ARCHS + ["nequip"])
+    assert assigned <= set(list_archs())
+
+
+@pytest.mark.parametrize("name", LM_ARCHS)
+def test_lm_smoke_train_step(name, rng):
+    arch = get_arch(name)
+    cfg = arch.smoke_config
+    params = steps.init_fn(arch, "train_4k", smoke=True)()
+    opt = steps.make_optimizer("lm")
+    opt_state = opt.init(params)
+    step = steps.make_step(arch, "train_4k", "train", smoke=True)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    new_params, new_opt, metrics = step(params, opt_state, batch)
+    assert float(metrics["loss"]) > 0 and np.isfinite(float(metrics["loss"]))
+    assert _finite(new_params)
+    assert jax.tree.structure(new_params) == jax.tree.structure(params)
+
+
+@pytest.mark.parametrize("name", LM_ARCHS)
+def test_lm_smoke_decode(name, rng):
+    from repro.models.transformer import decode_step, init_cache, prefill
+    arch = get_arch(name)
+    cfg = arch.smoke_config
+    params = steps.init_fn(arch, "decode_32k", smoke=True)()
+    cache = init_cache(cfg, 2, 16)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 1)), jnp.int32)
+    logits, cache = decode_step(params, cache, toks, cfg)
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert _finite(logits)
+    assert int(cache["length"][0]) == 1
+    pl = prefill(params, jnp.tile(toks, (1, 8)), cfg)
+    assert pl.shape == (2, 1, cfg.vocab)
+
+
+@pytest.mark.parametrize("name", RECSYS_ARCHS)
+def test_recsys_smoke_train_and_serve(name, rng):
+    arch = get_arch(name)
+    cfg = arch.smoke_config
+    params = steps.init_fn(arch, "train_batch", smoke=True)()
+    opt = steps.make_optimizer("recsys")
+    opt_state = opt.init(params)
+    step = steps.make_step(arch, "train_batch", "train", smoke=True)
+    b = 8
+    if name == "dlrm-rm2":
+        batch = {"dense": jnp.asarray(rng.normal(size=(b, 13)), jnp.float32),
+                 "sparse": jnp.asarray(rng.integers(0, 100, (b, 26)),
+                                       jnp.int32)}
+    elif name == "bst":
+        batch = {"history": jnp.asarray(rng.integers(0, 100, (b, cfg.seq_len)),
+                                        jnp.int32),
+                 "target": jnp.asarray(rng.integers(0, 100, b), jnp.int32),
+                 "profile": jnp.asarray(rng.integers(0, 100, (b, 8)),
+                                        jnp.int32)}
+    else:
+        batch = {"history": jnp.asarray(rng.integers(0, 100, (b, cfg.seq_len)),
+                                        jnp.int32),
+                 "target": jnp.asarray(rng.integers(0, 100, b), jnp.int32)}
+    batch["labels"] = jnp.asarray(rng.integers(0, 2, b), jnp.float32)
+    new_params, _, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert _finite(new_params)
+
+    serve = steps.make_step(arch, "serve_p99", "serve", smoke=True)
+    scores = serve(params, {k: v for k, v in batch.items() if k != "labels"})
+    assert scores.shape == (b,)
+    assert _finite(scores)
+
+    retr = steps.make_step(arch, "retrieval_cand", "retrieval", smoke=True)
+    seq_len = getattr(cfg, "seq_len", 8)
+    rb = {"dense": jnp.ones((1, 13)), "sparse": jnp.ones((1, 26), jnp.int32),
+          "history": jnp.ones((1, seq_len), jnp.int32),
+          "cand_ids": jnp.arange(97, dtype=jnp.int32)}
+    rb = {k: v for k, v in rb.items()
+          if k in dict(arch.input_specs("retrieval_cand")[1])}
+    out = retr(params, rb)
+    assert out.shape == (97,)
+
+
+def test_nequip_smoke_train_step(rng):
+    from repro.data.graph import random_graph
+    arch = get_arch("nequip")
+    cfg = arch.smoke_config
+    g = random_graph(24, 80, cfg.d_feat, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in g.items()}
+    params = steps.init_fn(arch, "full_graph_sm", smoke=True)()
+    opt = steps.make_optimizer("gnn")
+    opt_state = opt.init(params)
+    from repro.models.nequip import loss_fn
+    step_cfg = cfg
+
+    def train(params, opt_state, batch):
+        (l, m), grads = jax.value_and_grad(
+            lambda p, b: loss_fn(p, b, step_cfg), has_aux=True)(params, batch)
+        params, opt_state, _ = opt.update(params, opt_state, grads)
+        return params, opt_state, l
+
+    params2, _, loss = train(params, opt_state, batch)
+    assert np.isfinite(float(loss))
+    assert _finite(params2)
+
+
+def test_ssh_arch_smoke(rng):
+    arch = get_arch("ssh-ecg")
+    params = steps.init_fn(arch, "build_2048", smoke=True)()
+    build = steps.make_step(arch, "build_2048", "build", smoke=True)
+    series = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
+    sigs = build(params, {"series": series})
+    assert sigs.shape == (8, arch.smoke_config.num_hashes)
+    query = steps.make_step(arch, "query_2048", "query", smoke=True)
+    out_ids, out_d = query(params, {
+        "query": series[0],
+        "db_sigs": jnp.tile(sigs, (16, 1)),
+        "db_series": jnp.tile(series, (16, 1))})
+    assert out_ids.shape == (10,)
+    assert float(out_d[0]) == pytest.approx(0.0, abs=1e-3)
