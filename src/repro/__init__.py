@@ -1,0 +1,1 @@
+"""SSH reproduction — top-level package."""

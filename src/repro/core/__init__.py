@@ -9,15 +9,17 @@ from repro.core.dtw import (dtw, dtw_batch, dtw_pairwise, dtw_distance,
                             znormalize)
 from repro.core.index import (SSHParams, SSHFunctions, SSHIndex,
                               build_signatures, band_keys,
-                              signature_collisions, probe_topc)
-from repro.core.search import (SearchResult, ssh_search, ucr_search,
-                               srp_search, brute_force_topk,
+                              signature_collisions, probe_topc,
+                              signature_collisions_batch, probe_topc_batch)
+from repro.core.search import (SearchResult, hash_probe, ssh_search,
+                               ucr_search, srp_search, brute_force_topk,
                                precision_at_k, ndcg_at_k)
 
 __all__ = [
     "dtw", "dtw_batch", "dtw_pairwise", "dtw_distance", "znormalize",
     "SSHParams", "SSHFunctions", "SSHIndex", "build_signatures",
     "band_keys", "signature_collisions", "probe_topc",
-    "SearchResult", "ssh_search", "ucr_search", "srp_search",
+    "signature_collisions_batch", "probe_topc_batch",
+    "SearchResult", "hash_probe", "ssh_search", "ucr_search", "srp_search",
     "brute_force_topk", "precision_at_k", "ndcg_at_k",
 ]

@@ -74,6 +74,13 @@ def _signature_one(x, filters, cws, *, step: int, ngram: int):
     return minhash.cws_hash(counts, cws)                 # (K,)
 
 
+@functools.partial(jax.jit, static_argnames=("step", "ngram"))
+def _signature_batch(xs, filters, cws, *, step: int, ngram: int):
+    """(B, m) -> (B, K) — one fused dispatch for a query block."""
+    return jax.vmap(lambda x: _signature_one(x, filters, cws,
+                                             step=step, ngram=ngram))(xs)
+
+
 def build_signatures(series: jnp.ndarray, fns: SSHFunctions,
                      batch: int = 256) -> jnp.ndarray:
     """(N, m) -> (N, K) int32 CWS signatures, chunked over the database."""
@@ -109,6 +116,30 @@ def probe_topc(query_keys: jnp.ndarray, db_keys: jnp.ndarray, top_c: int
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Top-C candidates by collision count. Returns (ids, counts)."""
     counts = signature_collisions(query_keys, db_keys)
+    vals, idx = jax.lax.top_k(counts, top_c)
+    return idx, vals
+
+
+@jax.jit
+def signature_collisions_batch(query_keys: jnp.ndarray,
+                               db_keys: jnp.ndarray) -> jnp.ndarray:
+    """Batched collision counts: (B, L) x (N, L) -> (B, N) int32.
+
+    Readable jnp reference for the batched probe math.  The serving
+    engine does NOT route through here — it calls
+    ``repro.kernels.ops.collision_count_batch`` (Pallas on TPU, a
+    CPU-friendly fori_loop formulation in ``kernels.ref`` elsewhere);
+    ``tests/test_index_search.py``/``tests/test_kernels.py`` hold the
+    three implementations equal.
+    """
+    return jax.vmap(lambda q: signature_collisions(q, db_keys))(query_keys)
+
+
+@functools.partial(jax.jit, static_argnames=("top_c",))
+def probe_topc_batch(query_keys: jnp.ndarray, db_keys: jnp.ndarray,
+                     top_c: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-query top-C by collision count: (B, L) x (N, L) -> (B, top_c)."""
+    counts = signature_collisions_batch(query_keys, db_keys)
     vals, idx = jax.lax.top_k(counts, top_c)
     return idx, vals
 
@@ -185,6 +216,23 @@ class SSHIndex:
     def query_keys(self, q: jnp.ndarray) -> jnp.ndarray:
         sig = self.query_signature(q)
         return minhash.combine_bands(sig, self.fns.params.num_tables)
+
+    def query_signatures_batch(self, qs: jnp.ndarray) -> jnp.ndarray:
+        """(B, m) query block -> (B, K) signatures, one dispatch."""
+        p = self.fns.params
+        return _signature_batch(qs, self.fns.filters, self.fns.cws,
+                                step=p.step, ngram=p.ngram)
+
+    def query_signatures_batch_multiprobe(self, qs: jnp.ndarray,
+                                          offsets: int) -> jnp.ndarray:
+        """Batched multiprobe signatures: (B, m) -> (B, offsets, K).
+
+        Offset o hashes qs[:, o:] — same per-query semantics as
+        ``query_signatures_multiprobe`` (δ-residue alignment classes).
+        """
+        sigs = [self.query_signatures_batch(qs[:, o:])
+                for o in range(offsets)]
+        return jnp.stack(sigs, axis=1)
 
     def insert(self, series: jnp.ndarray) -> None:
         """Streaming insert (data-independent hashing ⇒ no retraining)."""

@@ -42,6 +42,51 @@ def _dtw_rerank(query: jnp.ndarray, cands: jnp.ndarray, topk: int,
     return idx, -vals
 
 
+def hash_probe(query: jnp.ndarray, index: SSHIndex, top_c: int,
+               rank_by_signature: bool = True,
+               multiprobe_offsets: int = 1,
+               use_host_buckets: bool = False,
+               topk: int = 10) -> jnp.ndarray:
+    """Stage 1 of Alg. 2: candidate ids ranked by hash collisions.
+
+    Returns at most ``top_c`` candidate ids with a positive collision
+    count, most-promising first; falls back to the first ``top_c`` ids when
+    nothing collides.  The batched counterpart lives in
+    ``repro.serving.batched`` (identical per-query decisions).
+    """
+    n = int(index.keys.shape[0])
+    if use_host_buckets and index.host_buckets is not None:
+        qkeys = index.query_keys(query)
+        cand_ids = index.host_buckets.probe(np.asarray(qkeys))
+        cand_ids = jnp.asarray(cand_ids[: max(top_c, topk)], jnp.int32)
+    elif multiprobe_offsets > 1:
+        # one probe row per δ-offset, combined by per-candidate max —
+        # same qk/db selection as the batched batch_probe
+        from repro.core import minhash
+        from repro.core.index import signature_collisions
+        qsigs = index.query_signatures_multiprobe(query, multiprobe_offsets)
+        if rank_by_signature:
+            qk, db = qsigs, index.signatures
+        else:
+            qk = minhash.combine_bands(qsigs, index.fns.params.num_tables)
+            db = index.keys
+        counts_max = jnp.max(jnp.stack(
+            [signature_collisions(row, db) for row in qk]), axis=0)
+        vals, ids = jax.lax.top_k(counts_max, min(top_c, n))
+        cand_ids = ids[vals > 0]
+    elif rank_by_signature:
+        qsig = index.query_signature(query)
+        ids, counts = probe_topc(qsig, index.signatures, min(top_c, n))
+        cand_ids = ids[counts > 0]
+    else:
+        qkeys = index.query_keys(query)
+        ids, counts = probe_topc(qkeys, index.keys, min(top_c, n))
+        cand_ids = ids[counts > 0]
+    if cand_ids.shape[0] == 0:           # degenerate: fall back to top_c ids
+        cand_ids = jnp.arange(min(top_c, n), dtype=jnp.int32)
+    return cand_ids
+
+
 def ssh_search(query: jnp.ndarray, index: SSHIndex, topk: int = 10,
                top_c: int = 256, band: Optional[int] = None,
                use_lb_cascade: bool = True,
@@ -59,30 +104,10 @@ def ssh_search(query: jnp.ndarray, index: SSHIndex, topk: int = 10,
     """
     t0 = time.perf_counter()
     n = int(index.keys.shape[0])
-    qkeys = index.query_keys(query)
-
-    if use_host_buckets and index.host_buckets is not None:
-        cand_ids = index.host_buckets.probe(np.asarray(qkeys))
-        cand_ids = jnp.asarray(cand_ids[: max(top_c, topk)], jnp.int32)
-    elif rank_by_signature:
-        if multiprobe_offsets > 1:
-            qsigs = index.query_signatures_multiprobe(query,
-                                                      multiprobe_offsets)
-            from repro.core.index import signature_collisions
-            counts_all = jnp.stack(
-                [signature_collisions(s, index.signatures) for s in qsigs])
-            counts_max = jnp.max(counts_all, axis=0)
-            vals, ids = jax.lax.top_k(counts_max, min(top_c, n))
-            cand_ids = ids[vals > 0]
-        else:
-            qsig = index.query_signature(query)
-            ids, counts = probe_topc(qsig, index.signatures, min(top_c, n))
-            cand_ids = ids[counts > 0]
-    else:
-        ids, counts = probe_topc(qkeys, index.keys, min(top_c, n))
-        cand_ids = ids[counts > 0]
-    if cand_ids.shape[0] == 0:           # degenerate: fall back to top_c ids
-        cand_ids = jnp.arange(min(top_c, n), dtype=jnp.int32)
+    cand_ids = hash_probe(query, index, top_c,
+                          rank_by_signature=rank_by_signature,
+                          multiprobe_offsets=multiprobe_offsets,
+                          use_host_buckets=use_host_buckets, topk=topk)
     n_hash = int(cand_ids.shape[0])
 
     cands = index.series[cand_ids]

@@ -1,0 +1,1 @@
+"""Distributed SSH index (shard_map fan-out)."""

@@ -25,6 +25,19 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.index import SSHParams
 
+try:                        # jax >= 0.6: public API, replication kw check_vma
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:      # jax 0.4.x: experimental module, kw check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map_nocheck(f, mesh: Mesh, in_specs, out_specs):
+    """shard_map with replication checking off, across jax versions."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: False})
+
 
 def _signature(series: jnp.ndarray, filters: jnp.ndarray, cws: dict,
                params: SSHParams) -> jnp.ndarray:
@@ -39,12 +52,11 @@ def build_sharded(series: jnp.ndarray, filters: jnp.ndarray, cws: dict,
                   params: SSHParams, mesh: Mesh) -> jnp.ndarray:
     """series (N, m) row-sharded -> signatures (N, K) row-sharded."""
     axes = tuple(mesh.axis_names)
-    fn = jax.shard_map(
+    fn = shard_map_nocheck(
         lambda s: _signature(s, filters, cws, params),
-        mesh=mesh,
+        mesh,
         in_specs=P(axes, None),
-        out_specs=P(axes, None),
-        check_vma=False)
+        out_specs=P(axes, None))
     return fn(series)
 
 
@@ -76,11 +88,10 @@ def make_query_fn(params: SSHParams, mesh: Mesh, *, top_c: int, band: int,
         vals, order = jax.lax.top_k(-all_d, topk)
         return jnp.take(all_i, order), -vals
 
-    return jax.shard_map(
-        local_query, mesh=mesh,
+    return shard_map_nocheck(
+        local_query, mesh,
         in_specs=(P(axes, None), P(axes, None), P(), P(), P()),
-        out_specs=(P(), P()),
-        check_vma=False)
+        out_specs=(P(), P()))
 
 
 def index_shardings(mesh: Mesh) -> Tuple[NamedSharding, NamedSharding]:

@@ -11,6 +11,12 @@ Layout: the wrapper transposes signatures to (K, N) so each block is
 reduction.  Padding rows use disjoint sentinels so they never match.
 
 Grid: (N / 128,).
+
+``collision_count_batch`` is the fused batched-probe variant for the
+serving engine (DESIGN.md §4): B query signatures against the same
+database in one kernel.  Grid: (N / 128, B) with queries innermost, so a
+database block stays VMEM-resident while every query row scans it — the
+database streams from HBM once per batch instead of once per query.
 """
 from __future__ import annotations
 
@@ -56,3 +62,36 @@ def collision_count(query_keys: jnp.ndarray, db_keys: jnp.ndarray,
         interpret=interpret,
     )(q, db)
     return out[0, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def collision_count_batch(query_keys: jnp.ndarray, db_keys: jnp.ndarray,
+                          interpret: bool = False) -> jnp.ndarray:
+    """queries (B, L), db (N, L) int32 -> (B, N) int32 match counts.
+
+    Same block layout as ``collision_count`` (keys on sublanes, candidates
+    on lanes); the batch adds a second grid axis that walks query columns
+    of the transposed (K_pad, B) query matrix.
+    """
+    b, k = query_keys.shape
+    n, k2 = db_keys.shape
+    assert k == k2, "query/db key widths must match"
+    kp = (-k) % 8
+    np_ = (-n) % LANES
+    db = jnp.pad(db_keys.astype(jnp.int32).T, ((0, kp), (0, np_)),
+                 constant_values=_DB_SENTINEL)          # (K_pad, N_pad)
+    q = jnp.pad(query_keys.astype(jnp.int32).T, ((0, kp), (0, 0)),
+                constant_values=_Q_SENTINEL)            # (K_pad, B)
+
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((b, n + np_), jnp.int32),
+        grid=((n + np_) // LANES, b),     # queries innermost: db block reused
+        in_specs=[
+            pl.BlockSpec((k + kp, 1), lambda g, i: (0, i)),
+            pl.BlockSpec((k + kp, LANES), lambda g, i: (0, g)),
+        ],
+        out_specs=pl.BlockSpec((1, LANES), lambda g, i: (i, g)),
+        interpret=interpret,
+    )(q, db)
+    return out[:, :n]

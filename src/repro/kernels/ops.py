@@ -13,6 +13,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.collision_count import collision_count as _collision_pallas
+from repro.kernels.collision_count import \
+    collision_count_batch as _collision_batch_pallas
 from repro.kernels.dtw_wavefront import dtw_wavefront as _dtw_pallas
 from repro.kernels.sketch_conv import sketch_conv as _sketch_pallas
 
@@ -60,6 +62,18 @@ def collision_count(query_keys: jnp.ndarray, db_keys: jnp.ndarray,
         return _collision_pallas(query_keys, db_keys,
                                  interpret=interpret or not _on_tpu())
     return ref.collision_count_ref(query_keys, db_keys)
+
+
+def collision_count_batch(query_keys: jnp.ndarray, db_keys: jnp.ndarray,
+                          use_pallas: Optional[bool] = None,
+                          interpret: bool = False) -> jnp.ndarray:
+    """Batched signature agreement counts (B, L) x (N, L) -> (B, N)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _collision_batch_pallas(query_keys, db_keys,
+                                       interpret=interpret or not _on_tpu())
+    return ref.collision_count_batch_ref(query_keys, db_keys)
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

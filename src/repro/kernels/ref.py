@@ -38,6 +38,27 @@ def collision_count_ref(query_keys: jnp.ndarray, db_keys: jnp.ndarray
                    axis=-1)
 
 
+@jax.jit
+def collision_count_batch_ref(query_keys: jnp.ndarray, db_keys: jnp.ndarray
+                              ) -> jnp.ndarray:
+    """queries (B, L), db (N, L) int32 -> (B, N) per-row match counts.
+
+    Accumulated key-by-key over the transposed database so each step is a
+    contiguous (B, N) broadcast compare — the database row streams once
+    for the whole query block (the vmap-of-rowwise-sum formulation
+    degrades with B on CPU instead of amortising).
+    """
+    db_t = db_keys.T                                      # (L, N)
+    b, n = query_keys.shape[0], db_keys.shape[0]
+
+    def body(l, acc):
+        hit = db_t[l][None, :] == query_keys[:, l][:, None]
+        return acc + hit.astype(jnp.int32)
+
+    return jax.lax.fori_loop(0, db_keys.shape[1], body,
+                             jnp.zeros((b, n), jnp.int32))
+
+
 @functools.partial(jax.jit, static_argnames=("causal",))
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         causal: bool = False) -> jnp.ndarray:

@@ -37,8 +37,10 @@ def _kernel(x_ref, f_ref, o_ref, *, step: int, window: int, num_f: int):
     acc = jnp.zeros((num_f, TB, TN), jnp.float32)
     for w in range(window):                    # static unroll over taps
         a, p = divmod(w, step)
-        taps = pl.load(x_ref, (slice(None), p, pl.ds(base + a, TN)))
-        acc = acc + filt[w][:, None, None] * taps[None, :, :]
+        # p as a length-1 ds slice: bare int indices are rejected by the
+        # interpret-mode discharge rule on current JAX
+        taps = pl.load(x_ref, (slice(None), pl.ds(p, 1), pl.ds(base + a, TN)))
+        acc = acc + filt[w][:, None, None] * taps[:, 0, :][None, :, :]
     o_ref[...] = acc
 
 

@@ -1,0 +1,1 @@
+"""Launchers: build, serve, train, dry-run."""

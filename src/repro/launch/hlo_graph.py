@@ -101,10 +101,12 @@ def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
         ops_m = _OPERANDS_RE.match(rest)
         operands = []
         if ops_m:
-            for tok in ops_m.group(1).split(","):
-                tok = tok.strip().lstrip("%")
-                if tok:
-                    operands.append(tok)
+            inner = ops_m.group(1)
+            # operands may carry a type prefix ("f32[2,3]{1,0} %x") whose
+            # shape commas break naive splitting — pull the %names directly
+            operands = re.findall(r"%([\w.\-]+)", inner)
+            if not operands:
+                operands = [t.strip() for t in inner.split(",") if t.strip()]
         # attrs keeps the FULL rest (incl. operand text) — constants like
         # `constant(40)` live inside the "operand" parens
         attrs = rest

@@ -1,6 +1,13 @@
 """Serving launcher — SSH query serving (paper Alg. 2) or LM decode.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch ssh-ecg --requests 8
+SSH arches run on the batched serving engine (``repro.serving``):
+requests stream through the dynamic batcher, which pads to bucketed batch
+sizes and serves each block via the fused batched probe + union DTW
+re-rank.  ``--sequential`` keeps the old one-query-at-a-time loop for
+comparison.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch ssh-ecg --requests 32
+    PYTHONPATH=src python -m repro.launch.serve --arch ssh-ecg --sequential
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke
 """
 from __future__ import annotations
@@ -16,26 +23,65 @@ from repro.configs import get_arch
 from repro.launch import steps as steps_mod
 
 
-def serve_ssh(arch, requests: int):
-    from repro.core import SSHParams, SSHIndex, ssh_search
+def _ssh_fixture(arch):
+    from repro.core import SSHIndex
     from repro.data.timeseries import extract_subsequences, synthetic_ecg
     params = arch.smoke_config
     stream = synthetic_ecg(8000, seed=5)
     db = jnp.asarray(extract_subsequences(stream, 128, stride=1,
                                           znorm=True))
-    index = SSHIndex.build(db, params)
+    return db, SSHIndex.build(db, params), params
+
+
+def serve_ssh(arch, requests: int, batch_size: int, wait_ms: float):
+    """Engine-based serving: dynamic batching + batched probe/re-rank."""
+    from repro.serving import EngineConfig, ServingEngine
+    db, index, params = _ssh_fixture(arch)
+    cfg = EngineConfig(topk=10, top_c=256, band=6,
+                       multiprobe_offsets=params.step,
+                       max_batch=batch_size, max_wait_ms=wait_ms)
+    engine = ServingEngine(index, cfg)
+    rng = np.random.default_rng(0)
+    qids = rng.integers(0, db.shape[0], requests)
+
+    # warm every padded bucket size outside the measured window (through
+    # the searcher directly so engine metrics only cover real requests) —
+    # the dynamic batcher may form any bucket depending on arrival timing
+    for size in cfg.buckets():
+        engine.searcher.search_batch(db[jnp.asarray(np.resize(qids, size))])
+
+    t0 = time.perf_counter()
+    with engine:
+        futs = [(int(i), engine.submit(db[int(i)])) for i in qids]
+        for i, fut in futs:
+            res = fut.result()
+            print(f"req {i}: top1={res.ids[0]} pruned="
+                  f"{res.pruned_total_frac:.1%}")
+    wall = time.perf_counter() - t0
+    snap = engine.metrics.snapshot()
+    print(f"engine: {engine.metrics.format()}")
+    print(f"served {requests} requests in {wall:.2f}s "
+          f"({requests / wall:.1f} qps end-to-end, "
+          f"avg batch {snap['batch_size_mean']:.1f})")
+
+
+def serve_ssh_sequential(arch, requests: int):
+    """Pre-engine baseline: one ssh_search per request."""
+    from repro.core import ssh_search
+    db, index, params = _ssh_fixture(arch)
     rng = np.random.default_rng(0)
     lat = []
     for i in rng.integers(0, db.shape[0], requests):
-        t0 = time.time()
+        t0 = time.perf_counter()
         res = ssh_search(db[int(i)], index, topk=10, top_c=256, band=6,
                          multiprobe_offsets=params.step)
-        lat.append(time.time() - t0)
+        lat.append(time.perf_counter() - t0)
         print(f"req {i}: top1={res.ids[0]} pruned="
               f"{res.pruned_total_frac:.1%} {lat[-1]*1e3:.0f}ms")
     lat = sorted(lat)
     print(f"p50={lat[len(lat)//2]*1e3:.0f}ms "
-          f"p99={lat[-1]*1e3:.0f}ms over {requests} requests")
+          f"p99={lat[-1]*1e3:.0f}ms over {requests} requests "
+          f"({requests / sum(lat):.1f} qps)")
 
 
 def serve_lm(arch, requests: int, smoke: bool):
@@ -49,7 +95,7 @@ def serve_lm(arch, requests: int, smoke: bool):
     cache = init_cache(cfg, b, prompt_len + gen_len)
     decode = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
     # prefill by stepping (simple serving loop; batched prefill also works)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(prompt_len):
         logits, cache = decode(params, cache, toks[:, i:i + 1])
     out = []
@@ -58,7 +104,7 @@ def serve_lm(arch, requests: int, smoke: bool):
         out.append(nxt)
         logits, cache = decode(params, cache, nxt)
     gen = jnp.concatenate(out, axis=1)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"generated {gen.shape} tokens in {dt:.2f}s "
           f"({b * (prompt_len + gen_len) / dt:.1f} tok/s); "
           f"sample: {np.asarray(gen[0])}")
@@ -68,11 +114,20 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--batch-size", type=int, default=8,
+                    help="dynamic batcher max batch (ssh only)")
+    ap.add_argument("--wait-ms", type=float, default=2.0,
+                    help="dynamic batcher max wait (ssh only)")
+    ap.add_argument("--sequential", action="store_true",
+                    help="bypass the engine; one ssh_search per request")
     ap.add_argument("--smoke", action="store_true", default=True)
     args = ap.parse_args()
     arch = get_arch(args.arch)
     if arch.family == "ssh":
-        serve_ssh(arch, args.requests)
+        if args.sequential:
+            serve_ssh_sequential(arch, args.requests)
+        else:
+            serve_ssh(arch, args.requests, args.batch_size, args.wait_ms)
     elif arch.family == "lm":
         serve_lm(arch, args.requests, args.smoke)
     else:

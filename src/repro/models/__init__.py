@@ -1,0 +1,1 @@
+"""Model zoo for the non-SSH arches."""

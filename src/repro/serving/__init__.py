@@ -1,0 +1,19 @@
+"""Batched query-serving engine for the SSH index (DESIGN.md §4).
+
+Public API:
+  ssh_search_batch / batch_probe / BatchSearchResult — batched primitives
+  ServingEngine / EngineConfig                       — dynamic batcher
+  BatchedSearcher / DistributedSearcher              — compute backends
+  ServingMetrics                                     — latency/throughput
+"""
+from repro.serving.batched import (BatchSearchResult, batch_probe,
+                                   ssh_search_batch)
+from repro.serving.engine import (BatchedSearcher, DistributedSearcher,
+                                  EngineConfig, ServingEngine)
+from repro.serving.metrics import ServingMetrics
+
+__all__ = [
+    "BatchSearchResult", "batch_probe", "ssh_search_batch",
+    "BatchedSearcher", "DistributedSearcher", "EngineConfig",
+    "ServingEngine", "ServingMetrics",
+]

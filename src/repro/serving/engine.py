@@ -1,0 +1,359 @@
+"""ServingEngine — dynamic batching on top of the batched SSH search.
+
+Request lifecycle (DESIGN.md §4):
+
+  client -> submit() -> request queue -> batcher thread -> ssh_search_batch
+                                           |                      |
+                                           +--- pending inserts --+-> futures
+
+The batcher pulls the first waiting request, then keeps draining the queue
+until either ``max_batch`` requests are in hand or ``max_wait_ms`` has
+elapsed since the batch opened — the standard latency/throughput knob.
+Batches are padded up to a *bucketed* size (powers of two ≤ ``max_batch``)
+so a steady stream of ragged batch sizes hits a handful of compiled
+programs instead of recompiling per size.
+
+Streaming inserts are routed through ``SSHIndex.insert`` on the batcher
+thread, between batches — queries never race an index mutation, and every
+query submitted after ``insert()`` returns is served by an index that
+contains the new series.
+
+Shard fan-out: ``DistributedSearcher`` answers the same ``search_batch``
+contract through ``repro.distributed.dist_index`` (shard_map collision
+scan + local DTW + one all_gather per query), so the engine can sit in
+front of a multi-chip index unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import SSHIndex
+from repro.core.search import SearchResult
+from repro.serving.batched import BatchSearchResult, ssh_search_batch
+from repro.serving.metrics import ServingMetrics
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Search parameters + batching policy for one engine instance."""
+    topk: int = 10
+    top_c: int = 256
+    band: Optional[int] = None
+    use_lb_cascade: bool = True
+    rank_by_signature: bool = True
+    multiprobe_offsets: int = 1
+    max_batch: int = 8
+    max_wait_ms: float = 2.0
+
+    def buckets(self) -> List[int]:
+        """Padded batch sizes: powers of two up to max_batch."""
+        out, b = [], 1
+        while b < self.max_batch:
+            out.append(b)
+            b *= 2
+        out.append(self.max_batch)
+        return out
+
+
+class BatchedSearcher:
+    """Default backend: the fused local batched path."""
+
+    def __init__(self, index: SSHIndex, config: EngineConfig):
+        self.index = index
+        self.config = config
+
+    def search_batch(self, queries: jnp.ndarray) -> BatchSearchResult:
+        c = self.config
+        return ssh_search_batch(
+            queries, self.index, topk=c.topk, top_c=c.top_c, band=c.band,
+            use_lb_cascade=c.use_lb_cascade,
+            rank_by_signature=c.rank_by_signature,
+            multiprobe_offsets=c.multiprobe_offsets)
+
+    def insert(self, series: jnp.ndarray) -> None:
+        self.index.insert(series)
+
+
+class DistributedSearcher:
+    """Shard fan-out backend over ``repro.distributed.dist_index``.
+
+    Signatures and series are row-sharded over the mesh; each query in a
+    batch runs the shard_map probe (local collision scan + local top-C/P +
+    local DTW, one all_gather of k·2 scalars).  Batching here amortises
+    the host dispatch loop; the per-query collective schedule is
+    unchanged from the dry-run path.
+    """
+
+    def __init__(self, index: SSHIndex, config: EngineConfig, mesh):
+        from repro.distributed import dist_index
+        if config.band is None:
+            raise ValueError("DistributedSearcher requires a band radius")
+        # the shard_map probe ranks by raw signatures, single probe —
+        # reject configs whose answers would silently differ from it
+        # (use_lb_cascade is a pruning-perf knob: results are unchanged)
+        if not config.rank_by_signature or config.multiprobe_offsets > 1:
+            raise ValueError(
+                "DistributedSearcher supports only rank_by_signature=True "
+                "and multiprobe_offsets=1")
+        self.index = index
+        self.config = config
+        self.mesh = mesh
+        p = index.fns.params
+        length = int(index.series.shape[1])
+        sig_sh, series_sh = dist_index.index_shardings(mesh)
+        import jax
+        self._series = jax.device_put(index.series, series_sh)
+        self._sigs = jax.device_put(index.signatures, sig_sh)
+        self._cws = index.fns.cws._asdict()
+        self._filters = index.fns.filters
+        self._query_fn = dist_index.make_query_fn(
+            p, mesh, top_c=config.top_c, band=config.band,
+            topk=config.topk, length=length)
+
+    def search_batch(self, queries: jnp.ndarray) -> BatchSearchResult:
+        t0 = time.perf_counter()
+        b = int(queries.shape[0])
+        n = int(self.index.signatures.shape[0])
+        ids, dists = [], []
+        for i in range(b):                       # fan-out per query row
+            gid, d = self._query_fn(self._series, self._sigs, self._filters,
+                                    self._cws, queries[i])
+            ids.append(np.asarray(gid))
+            dists.append(np.asarray(d))
+        top_c = self.config.top_c
+        return BatchSearchResult(
+            ids=np.stack(ids).astype(np.int64),
+            dists=np.stack(dists).astype(np.float32),
+            n_queries=b, n_database=n, n_union=min(top_c, n),
+            n_candidates=np.full(b, min(top_c, n), np.int64),
+            pruned_by_hash_frac=np.full(b, 1.0 - min(top_c, n) / n),
+            pruned_total_frac=np.full(b, 1.0 - min(top_c, n) / n),
+            wall_seconds=time.perf_counter() - t0)
+
+    def insert(self, series: jnp.ndarray) -> None:
+        raise NotImplementedError(
+            "streaming inserts into a sharded index require a reshard; "
+            "rebuild the DistributedSearcher instead")
+
+
+@dataclasses.dataclass
+class _Request:
+    query: jnp.ndarray
+    future: Future
+    t_enqueue: float
+
+
+class ServingEngine:
+    """Dynamic-batching query server over an SSHIndex.
+
+    Usage::
+
+        engine = ServingEngine(index, EngineConfig(band=8, max_batch=8))
+        with engine:                       # starts the batcher thread
+            fut = engine.submit(q)         # async
+            res = engine.search(q)         # sync convenience
+        engine.metrics.snapshot()
+
+    ``search_batch`` bypasses the queue entirely (one caller already holds
+    a full batch) but still records metrics — benchmarks use it to measure
+    the compute path without batcher timing noise.
+    """
+
+    _STOP = object()
+
+    def __init__(self, index: SSHIndex, config: EngineConfig = EngineConfig(),
+                 searcher=None, metrics: Optional[ServingMetrics] = None):
+        self.index = index
+        self.config = config
+        self.searcher = searcher or BatchedSearcher(index, config)
+        self.metrics = metrics or ServingMetrics()
+        self._queue: "queue.Queue" = queue.Queue()
+        self._inserts: "queue.Queue" = queue.Queue()
+        self._thread: Optional[threading.Thread] = None
+        # serializes index mutation vs. serving across the batcher thread
+        # and direct search_batch() callers
+        self._serve_lock = threading.Lock()
+        # serializes submit()/insert() enqueues against stop()'s final
+        # drain, so nothing enqueued concurrently with shutdown is lost.
+        # States: "new" (pre-start: submits enqueue and are batched once
+        # the worker starts), "running", "stopped" (submits serve on the
+        # caller's thread).
+        self._lifecycle_lock = threading.Lock()
+        self._state = "new"
+
+    # -- lifecycle --------------------------------------------------------
+    def start(self) -> "ServingEngine":
+        if self._thread is not None:
+            return self
+        with self._lifecycle_lock:
+            self._state = "running"
+        self.metrics.on_start()
+        self._thread = threading.Thread(target=self._worker,
+                                        name="ssh-serving-batcher",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._queue.put(self._STOP)
+        self._thread.join()
+        with self._lifecycle_lock:
+            self._state = "stopped"
+            self._thread = None
+            stragglers = []
+            while True:
+                try:
+                    item = self._queue.get_nowait()
+                except queue.Empty:
+                    break
+                if item is not self._STOP:
+                    stragglers.append(item)
+        # requests/inserts that raced shutdown: resolve every future
+        for lo in range(0, len(stragglers), self.config.max_batch):
+            chunk = stragglers[lo:lo + self.config.max_batch]
+            try:
+                results = self.search_batch(
+                    jnp.stack([r.query for r in chunk], axis=0))
+                for r, res in zip(chunk, results):
+                    r.future.set_result(res)
+            except Exception as exc:
+                for r in chunk:
+                    r.future.set_exception(exc)
+        if not stragglers:
+            with self._serve_lock:
+                self._drain_inserts()
+
+    def __enter__(self) -> "ServingEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- client API -------------------------------------------------------
+    def submit(self, query: jnp.ndarray) -> Future:
+        """Enqueue one query; resolves to a per-query SearchResult.
+
+        After stop() the query is served synchronously on the caller's
+        thread (the future returns already resolved) — submit() never
+        leaves a future dangling, even racing stop().
+        """
+        fut: Future = Future()
+        query = jnp.asarray(query)
+        with self._lifecycle_lock:
+            enqueue = self._state != "stopped"
+            if enqueue:
+                self._queue.put(_Request(query, fut, time.perf_counter()))
+        if enqueue:
+            self.metrics.on_enqueue(self._queue.qsize())
+        else:
+            try:
+                fut.set_result(self.search_batch(query[None, :])[0])
+            except Exception as exc:
+                fut.set_exception(exc)
+        return fut
+
+    def search(self, query: jnp.ndarray,
+               timeout: Optional[float] = None) -> SearchResult:
+        """Synchronous single query (through the batcher when running)."""
+        if self._state == "running":
+            return self.submit(query).result(timeout=timeout)
+        return self.search_batch(jnp.asarray(query)[None, :])[0]
+
+    def search_batch(self, queries: jnp.ndarray) -> List[SearchResult]:
+        """Serve a caller-assembled batch directly (no queue)."""
+        queries = jnp.asarray(queries)
+        t0 = time.perf_counter()
+        with self._serve_lock:
+            self._drain_inserts()
+            res = self.searcher.search_batch(queries)
+        wall = time.perf_counter() - t0
+        b = int(queries.shape[0])
+        self.metrics.on_batch(
+            b, [wall] * b, [0.0] * b,
+            list(res.pruned_by_hash_frac[:b]),
+            list(res.pruned_total_frac[:b]),
+            self._queue.qsize())
+        return [res.per_query(i) for i in range(b)]
+
+    def insert(self, series: jnp.ndarray) -> None:
+        """Streaming insert; visible to all queries submitted afterwards."""
+        series = jnp.asarray(series)
+        if series.ndim == 1:
+            series = series[None, :]
+        with self._lifecycle_lock:
+            running = self._state == "running"
+            if running:
+                self._inserts.put(series)
+        if not running:
+            with self._serve_lock:
+                self.searcher.insert(series)
+        self.metrics.on_insert(int(series.shape[0]))
+
+    # -- batcher internals ------------------------------------------------
+    def _drain_inserts(self) -> None:
+        while True:
+            try:
+                series = self._inserts.get_nowait()
+            except queue.Empty:
+                return
+            self.searcher.insert(series)
+
+    def _pad_batch(self, queries: List[jnp.ndarray]) -> jnp.ndarray:
+        """Pad to the next bucket size by repeating the first query."""
+        b = len(queries)
+        bucket = next(s for s in self.config.buckets() if s >= b)
+        block = list(queries) + [queries[0]] * (bucket - b)
+        return jnp.stack(block, axis=0)
+
+    def _collect(self, first: _Request) -> List[_Request]:
+        batch = [first]
+        deadline = time.perf_counter() + self.config.max_wait_ms / 1e3
+        while len(batch) < self.config.max_batch:
+            remaining = deadline - time.perf_counter()
+            try:
+                item = self._queue.get(timeout=max(remaining, 0.0)) \
+                    if remaining > 0 else self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if item is self._STOP:
+                self._queue.put(self._STOP)   # re-post for the outer loop
+                break
+            batch.append(item)
+        return batch
+
+    def _worker(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is self._STOP:
+                return
+            batch = self._collect(item)
+            t0 = time.perf_counter()
+            try:                 # a failing insert also fails the batch
+                with self._serve_lock:       # loudly (and keeps the worker
+                    self._drain_inserts()    # alive for later requests)
+                    block = self._pad_batch([r.query for r in batch])
+                    res = self.searcher.search_batch(block)
+            except Exception as exc:
+                for r in batch:
+                    r.future.set_exception(exc)
+                continue
+            done = time.perf_counter()
+            for i, r in enumerate(batch):
+                r.future.set_result(res.per_query(i))
+            self.metrics.on_batch(
+                len(batch),
+                [done - r.t_enqueue for r in batch],
+                [t0 - r.t_enqueue for r in batch],
+                list(res.pruned_by_hash_frac[:len(batch)]),
+                list(res.pruned_total_frac[:len(batch)]),
+                self._queue.qsize())

@@ -1,0 +1,166 @@
+"""Serving metrics — latency percentiles, queue depth, throughput, pruning.
+
+Single process, thread-safe, dependency-free.  The engine records into a
+``ServingMetrics`` instance; ``snapshot()`` renders a flat dict suitable
+for logging or a /metrics endpoint.  Latencies keep a bounded reservoir
+(most recent ``window`` samples) so percentiles track the live traffic
+rather than the whole process history.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Dict, Optional
+
+
+class LatencyTracker:
+    """Bounded reservoir of recent latencies with percentile readout."""
+
+    def __init__(self, window: int = 4096):
+        self._samples: deque = deque(maxlen=window)
+
+    def record(self, seconds: float) -> None:
+        self._samples.append(float(seconds))
+
+    def __len__(self) -> int:
+        return len(self._samples)
+
+    def percentile(self, p: float) -> float:
+        """Nearest-rank percentile over the reservoir (0 when empty)."""
+        if not self._samples:
+            return 0.0
+        xs = sorted(self._samples)
+        rank = min(len(xs) - 1, max(0, int(round(p / 100.0 * (len(xs) - 1)))))
+        return xs[rank]
+
+
+class ThroughputTracker:
+    """Completions-per-second over a sliding time window.
+
+    The denominator is the observation span — elapsed time since the
+    tracker was created, capped at the window — not the span between
+    stamps: a single burst of completions must not divide by the
+    near-zero gap to the snapshot and report absurd rates.
+    """
+
+    def __init__(self, window_seconds: float = 60.0):
+        self.window_seconds = window_seconds
+        self._stamps: deque = deque()
+        self._t0 = time.perf_counter()
+
+    def record(self, n: int = 1, now: Optional[float] = None) -> None:
+        now = time.perf_counter() if now is None else now
+        for _ in range(n):
+            self._stamps.append(now)
+        self._trim(now)
+
+    def _trim(self, now: float) -> None:
+        horizon = now - self.window_seconds
+        while self._stamps and self._stamps[0] < horizon:
+            self._stamps.popleft()
+
+    def restart_clock(self, now: Optional[float] = None) -> None:
+        """Restart the observation span (e.g. when serving begins, so
+        setup/warm-up time does not dilute the rate)."""
+        self._t0 = time.perf_counter() if now is None else now
+
+    def rate(self, now: Optional[float] = None) -> float:
+        now = time.perf_counter() if now is None else now
+        self._trim(now)
+        if not self._stamps:
+            return 0.0
+        span = max(min(now - self._t0, self.window_seconds), 1e-6)
+        return len(self._stamps) / span
+
+
+class RunningMean:
+    def __init__(self):
+        self.n = 0
+        self.total = 0.0
+
+    def record(self, x: float) -> None:
+        self.n += 1
+        self.total += float(x)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+
+class ServingMetrics:
+    """All engine counters behind one lock."""
+
+    def __init__(self, latency_window: int = 4096,
+                 throughput_window_seconds: float = 60.0):
+        self._lock = threading.Lock()
+        self.latency = LatencyTracker(latency_window)
+        self.queue_latency = LatencyTracker(latency_window)
+        self.throughput = ThroughputTracker(throughput_window_seconds)
+        self.batch_size = RunningMean()
+        self.pruned_by_hash = RunningMean()
+        self.pruned_total = RunningMean()
+        self.requests_total = 0
+        self.batches_total = 0
+        self.inserts_total = 0
+        self.queue_depth = 0
+
+    # -- recording hooks (called by the engine) ---------------------------
+    def on_start(self) -> None:
+        with self._lock:
+            self.throughput.restart_clock()
+
+    def on_enqueue(self, depth: int) -> None:
+        with self._lock:
+            self.queue_depth = depth
+
+    def on_batch(self, batch_size: int, latencies_s, queue_waits_s,
+                 pruned_by_hash_frac, pruned_total_frac,
+                 depth_after: int) -> None:
+        with self._lock:
+            self.batches_total += 1
+            self.requests_total += batch_size
+            self.batch_size.record(batch_size)
+            self.queue_depth = depth_after
+            self.throughput.record(batch_size)
+            for s in latencies_s:
+                self.latency.record(s)
+            for s in queue_waits_s:
+                self.queue_latency.record(s)
+            for f in pruned_by_hash_frac:
+                self.pruned_by_hash.record(f)
+            for f in pruned_total_frac:
+                self.pruned_total.record(f)
+
+    def on_insert(self, n_series: int) -> None:
+        with self._lock:
+            self.inserts_total += n_series
+
+    # -- readout ----------------------------------------------------------
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            return {
+                "requests_total": self.requests_total,
+                "batches_total": self.batches_total,
+                "inserts_total": self.inserts_total,
+                "queue_depth": self.queue_depth,
+                "batch_size_mean": self.batch_size.mean,
+                "latency_p50_ms": self.latency.percentile(50) * 1e3,
+                "latency_p95_ms": self.latency.percentile(95) * 1e3,
+                "latency_p99_ms": self.latency.percentile(99) * 1e3,
+                "queue_wait_p50_ms": self.queue_latency.percentile(50) * 1e3,
+                "throughput_qps": self.throughput.rate(),
+                "pruned_by_hash_frac_mean": self.pruned_by_hash.mean,
+                "pruned_total_frac_mean": self.pruned_total.mean,
+            }
+
+    def format(self) -> str:
+        s = self.snapshot()
+        return (f"req={s['requests_total']:.0f} "
+                f"batches={s['batches_total']:.0f} "
+                f"avg_batch={s['batch_size_mean']:.1f} "
+                f"p50={s['latency_p50_ms']:.1f}ms "
+                f"p95={s['latency_p95_ms']:.1f}ms "
+                f"p99={s['latency_p99_ms']:.1f}ms "
+                f"qps={s['throughput_qps']:.1f} "
+                f"pruned={s['pruned_total_frac_mean']:.1%}")

@@ -65,6 +65,83 @@ def test_streaming_insert(db, index):
     assert res.n_database == n0 + 7
 
 
+def test_streaming_insert_found_and_buckets_consistent(db):
+    """Post-insert queries find the new series; host buckets track the
+    device-side arrays exactly (ids, membership, table count)."""
+    from repro.core import band_keys, build_signatures
+    idx = SSHIndex.build(db[:400], PARAMS, with_host_buckets=True)
+    novel = jnp.asarray(np.cos(np.linspace(0, 23, db.shape[1])) ** 2,
+                        jnp.float32)
+    novel = (novel - novel.mean()) / (novel.std() + 1e-8)
+    idx.insert(novel[None, :])
+    new_id = 400
+    assert idx.signatures.shape[0] == idx.keys.shape[0] == 401
+    assert idx.series.shape[0] == 401
+
+    # device scan finds the inserted series as its own nearest neighbour
+    res = ssh_search(novel, idx, topk=3, top_c=64, band=8)
+    assert res.ids[0] == new_id
+    assert res.dists[0] == pytest.approx(0.0, abs=1e-4)
+
+    # host buckets agree: the new id is probeable and sits in exactly the
+    # buckets named by its key row
+    ranked = idx.host_buckets.probe(np.asarray(idx.query_keys(novel)))
+    assert ranked[0] == new_id
+    keys = np.asarray(idx.keys[new_id])
+    for t in range(PARAMS.num_tables):
+        assert new_id in idx.host_buckets.tables[t][int(keys[t])]
+    total_members = sum(len(v) for tab in idx.host_buckets.tables
+                        for v in tab.values())
+    assert total_members == 401 * PARAMS.num_tables
+
+    # inserted signatures match a from-scratch hash of the same series
+    want = build_signatures(novel[None, :], idx.fns)
+    np.testing.assert_array_equal(np.asarray(idx.signatures[new_id]),
+                                  np.asarray(want[0]))
+    np.testing.assert_array_equal(
+        np.asarray(idx.keys[new_id]),
+        np.asarray(band_keys(want, PARAMS)[0]))
+
+
+def test_query_signatures_multiprobe(db):
+    """Multiprobe returns one signature per δ-offset: row 0 is the plain
+    query signature, row o hashes q[o:], and probing with them can only
+    widen (never shrink) the candidate pool."""
+    idx = SSHIndex.build(db[:400], PARAMS)
+    q = db[37]
+    sigs = idx.query_signatures_multiprobe(q, PARAMS.step)
+    assert sigs.shape == (PARAMS.step, PARAMS.num_hashes)
+    np.testing.assert_array_equal(np.asarray(sigs[0]),
+                                  np.asarray(idx.query_signature(q)))
+    for o in range(1, PARAMS.step):
+        np.testing.assert_array_equal(np.asarray(sigs[o]),
+                                      np.asarray(idx.query_signature(q[o:])))
+    r1 = ssh_search(q, idx, topk=5, top_c=64, band=8, use_lb_cascade=False,
+                    multiprobe_offsets=1)
+    r3 = ssh_search(q, idx, topk=5, top_c=64, band=8, use_lb_cascade=False,
+                    multiprobe_offsets=PARAMS.step)
+    assert r3.n_candidates >= r1.n_candidates
+    assert r1.ids[0] == r3.ids[0] == 37
+
+
+def test_batched_signature_and_probe_match_single(db):
+    """Batch-friendly probe APIs agree with the per-query paths."""
+    from repro.core import probe_topc, probe_topc_batch
+    idx = SSHIndex.build(db[:400], PARAMS)
+    queries = db[jnp.asarray([5, 77, 200])]
+    sigs = idx.query_signatures_batch(queries)
+    for b, qid in enumerate([5, 77, 200]):
+        np.testing.assert_array_equal(
+            np.asarray(sigs[b]), np.asarray(idx.query_signature(db[qid])))
+    ids_b, vals_b = probe_topc_batch(sigs, idx.signatures, 32)
+    for b in range(3):
+        ids1, vals1 = probe_topc(sigs[b], idx.signatures, 32)
+        np.testing.assert_array_equal(np.asarray(ids_b[b]),
+                                      np.asarray(ids1))
+        np.testing.assert_array_equal(np.asarray(vals_b[b]),
+                                      np.asarray(vals1))
+
+
 def test_ucr_search_is_exact(db):
     q = db[321]
     res = ucr_search(q, db, topk=5, band=8)

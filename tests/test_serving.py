@@ -1,0 +1,212 @@
+"""Serving engine: batched-vs-sequential equality, dynamic batching,
+streaming inserts, metrics.  The equality contract (acceptance criterion)
+is held over a ~1k-series synthetic-ECG database."""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SSHParams, SSHIndex, ssh_search
+from repro.core.dtw import znormalize
+from repro.data.timeseries import extract_subsequences, synthetic_ecg
+from repro.serving import (EngineConfig, ServingEngine, ServingMetrics,
+                           batch_probe, ssh_search_batch)
+
+PARAMS = SSHParams(window=24, step=3, ngram=8, num_hashes=40, num_tables=20)
+
+
+@pytest.fixture(scope="module")
+def db():
+    stream = synthetic_ecg(4200, seed=5)
+    d = extract_subsequences(stream, 128, stride=4, znorm=True)
+    return jnp.asarray(d)                     # ~1k series
+
+
+@pytest.fixture(scope="module")
+def index(db):
+    return SSHIndex.build(db, PARAMS)
+
+
+QIDS = [3, 100, 250, 444, 512, 700, 801, 999]
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),
+    dict(use_lb_cascade=False),
+    dict(multiprobe_offsets=3),
+    dict(rank_by_signature=False),
+    dict(rank_by_signature=False, multiprobe_offsets=3),
+])
+def test_batched_identical_to_sequential(db, index, kw):
+    """Per-query top-k ids and distances match ssh_search exactly."""
+    queries = db[jnp.asarray(QIDS)]
+    res = ssh_search_batch(queries, index, topk=10, top_c=128, band=8, **kw)
+    for b, qid in enumerate(QIDS):
+        seq = ssh_search(db[qid], index, topk=10, top_c=128, band=8, **kw)
+        pq = res.per_query(b)
+        np.testing.assert_array_equal(pq.ids, seq.ids)
+        np.testing.assert_allclose(pq.dists, seq.dists, rtol=1e-5,
+                                   atol=1e-5)
+        assert pq.n_candidates == seq.n_candidates
+        assert pq.pruned_by_hash_frac == pytest.approx(
+            seq.pruned_by_hash_frac)
+
+
+def test_engine_batched_path_matches_sequential(db, index):
+    """Acceptance: the ServingEngine batched path == sequential ssh_search
+    (same params, rank_by_signature=True) over the synthetic-ECG db."""
+    cfg = EngineConfig(topk=10, top_c=128, band=8, max_batch=8)
+    engine = ServingEngine(index, cfg)
+    results = engine.search_batch(db[jnp.asarray(QIDS)])
+    for qid, got in zip(QIDS, results):
+        want = ssh_search(db[qid], index, topk=10, top_c=128, band=8)
+        np.testing.assert_array_equal(got.ids, want.ids)
+        np.testing.assert_allclose(got.dists, want.dists, rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_batch_probe_matches_single_probe(db, index):
+    """Batched collision top-C rows == per-query probe_topc."""
+    from repro.core.index import probe_topc
+    queries = db[jnp.asarray(QIDS[:4])]
+    ids, vals = batch_probe(queries, index, 64)
+    for b, qid in enumerate(QIDS[:4]):
+        sig = index.query_signature(db[qid])
+        want_ids, want_vals = probe_topc(sig, index.signatures, 64)
+        np.testing.assert_array_equal(np.asarray(ids[b]),
+                                      np.asarray(want_ids))
+        np.testing.assert_array_equal(np.asarray(vals[b]),
+                                      np.asarray(want_vals))
+
+
+def test_engine_threaded_dynamic_batching(db, index):
+    """Queued requests are served in batches; results match sequential."""
+    cfg = EngineConfig(topk=5, top_c=64, band=8, max_batch=4,
+                       max_wait_ms=50.0)
+    engine = ServingEngine(index, cfg)
+    # prefill the queue before starting the worker → deterministic batching
+    futs = [engine.submit(db[qid]) for qid in QIDS]
+    with engine:
+        results = [f.result(timeout=120) for f in futs]
+    for qid, got in zip(QIDS, results):
+        want = ssh_search(db[qid], index, topk=5, top_c=64, band=8)
+        assert got.ids[0] == want.ids[0] == qid
+    snap = engine.metrics.snapshot()
+    assert snap["requests_total"] == len(QIDS)
+    assert snap["batches_total"] <= len(QIDS) // 2   # actually batched
+    assert snap["batch_size_mean"] >= 2.0
+    assert snap["latency_p99_ms"] >= snap["latency_p50_ms"] >= 0.0
+
+
+def test_engine_insert_visible_to_later_queries(db, index):
+    """Streaming insert routes through SSHIndex.insert and is searchable."""
+    engine = ServingEngine(index, EngineConfig(topk=3, top_c=64, band=8,
+                                               max_batch=4))
+    n0 = int(index.signatures.shape[0])
+    novel = znormalize(jnp.asarray(
+        np.sin(np.linspace(0, 17, 128)) ** 3, jnp.float32))[None, :]
+    with engine:
+        engine.insert(novel)
+        res = engine.search(novel[0], timeout=120)
+    assert int(index.signatures.shape[0]) == n0 + 1
+    assert res.ids[0] == n0                       # finds the new series
+    assert res.dists[0] == pytest.approx(0.0, abs=1e-4)
+    assert res.n_database == n0 + 1
+
+
+def test_engine_concurrent_submitters(db, index):
+    """Many client threads sharing one engine all get correct answers."""
+    cfg = EngineConfig(topk=3, top_c=64, band=8, max_batch=4,
+                       max_wait_ms=5.0)
+    engine = ServingEngine(index, cfg)
+    out = {}
+
+    def client(qid):
+        out[qid] = engine.search(db[qid], timeout=120)
+
+    with engine:
+        threads = [threading.Thread(target=client, args=(q,))
+                   for q in QIDS]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    for qid in QIDS:
+        assert out[qid].ids[0] == qid
+
+
+def test_engine_survives_failing_insert(db, index):
+    """A backend insert error fails the affected batch loudly but leaves
+    the worker alive for later requests."""
+    cfg = EngineConfig(topk=3, top_c=64, band=8, max_batch=2)
+    engine = ServingEngine(index, cfg)
+
+    class Boom(RuntimeError):
+        pass
+
+    real_insert = engine.searcher.insert
+    engine.searcher.insert = lambda s: (_ for _ in ()).throw(Boom("nope"))
+    with engine:
+        engine.insert(db[0][None, :])
+        with pytest.raises(Boom):
+            engine.search(db[QIDS[0]], timeout=120)
+        engine.searcher.insert = real_insert        # backend recovers
+        res = engine.search(db[QIDS[1]], timeout=120)
+    assert res.ids[0] == QIDS[1]
+
+
+def test_submit_after_stop_and_straggler_drain(db, index):
+    """stop() resolves every queued future; submit() after stop serves on
+    the caller's thread — no request ever hangs around shutdown."""
+    cfg = EngineConfig(topk=3, top_c=64, band=8, max_batch=4)
+    engine = ServingEngine(index, cfg)
+    engine.start()
+    engine.stop()
+    fut = engine.submit(db[QIDS[0]])             # post-stop: pre-resolved
+    assert fut.done() and fut.result().ids[0] == QIDS[0]
+    # pre-start submits are queued; stop() without a served batch must
+    # still resolve them (straggler drain)
+    engine2 = ServingEngine(index, cfg)
+    futs = [engine2.submit(db[qid]) for qid in QIDS[:3]]
+    engine2.start()
+    engine2.stop()
+    for qid, f in zip(QIDS[:3], futs):
+        assert f.result(timeout=120).ids[0] == qid
+
+
+def test_distributed_searcher_rejects_unsupported_config(index):
+    from repro.serving.engine import DistributedSearcher
+    with pytest.raises(ValueError, match="band"):
+        DistributedSearcher(index, EngineConfig(band=None), mesh=None)
+    with pytest.raises(ValueError, match="rank_by_signature"):
+        DistributedSearcher(
+            index, EngineConfig(band=8, rank_by_signature=False), mesh=None)
+    with pytest.raises(ValueError, match="multiprobe"):
+        DistributedSearcher(
+            index, EngineConfig(band=8, multiprobe_offsets=3), mesh=None)
+
+
+def test_metrics_percentiles_and_throughput():
+    m = ServingMetrics()
+    m.on_batch(4, [0.010, 0.020, 0.030, 0.040], [0.001] * 4,
+               [0.9] * 4, [0.95] * 4, depth_after=0)
+    s = m.snapshot()
+    assert s["requests_total"] == 4
+    assert s["batches_total"] == 1
+    assert 10.0 <= s["latency_p50_ms"] <= 30.0
+    assert s["latency_p99_ms"] == pytest.approx(40.0)
+    assert s["throughput_qps"] > 0
+    assert s["pruned_total_frac_mean"] == pytest.approx(0.95)
+
+
+def test_engine_filler_rows_trimmed(db, index):
+    """Queries with fewer survivors than topk return short results, like
+    the sequential path (no -1 filler ids leak out)."""
+    res = ssh_search_batch(db[jnp.asarray(QIDS[:2])], index, topk=10,
+                           top_c=16, band=8)
+    for b in range(2):
+        pq = res.per_query(b)
+        assert np.all(pq.ids >= 0)
+        assert len(pq.ids) == len(pq.dists) <= 10

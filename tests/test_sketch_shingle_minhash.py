@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip below; the rest still run
+    given = settings = st = None
 
 from repro.core import minhash, shingle, sketch
 
@@ -58,21 +62,25 @@ def test_weighted_jaccard_props(rng):
     assert float(shingle.weighted_jaccard(a, z)) == 0.0
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(0, 2 ** 31 - 1))
-def test_cws_collision_estimates_jaccard(seed):
-    """Pr[h(x)=h(y)] ≈ J_w(x,y) (paper eq. 3) — the core LSH property."""
-    rng = np.random.default_rng(seed)
-    d = 64
-    x = rng.integers(0, 4, d).astype(np.float32)
-    y = np.where(rng.uniform(size=d) < 0.7, x,
-                 rng.integers(0, 4, d)).astype(np.float32)
-    true_j = float(np.minimum(x, y).sum() / np.maximum(x, y).sum())
-    params = minhash.make_cws(jax.random.PRNGKey(seed % 1000), 400, d)
-    hx = minhash.cws_hash(jnp.asarray(x), params)
-    hy = minhash.cws_hash(jnp.asarray(y), params)
-    est = float(jnp.mean((hx == hy).astype(jnp.float32)))
-    assert est == pytest.approx(true_j, abs=0.12)
+if st is None:
+    def test_cws_collision_estimates_jaccard():
+        pytest.importorskip("hypothesis")
+else:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_cws_collision_estimates_jaccard(seed):
+        """Pr[h(x)=h(y)] ≈ J_w(x,y) (paper eq. 3) — the core LSH property."""
+        rng = np.random.default_rng(seed)
+        d = 64
+        x = rng.integers(0, 4, d).astype(np.float32)
+        y = np.where(rng.uniform(size=d) < 0.7, x,
+                     rng.integers(0, 4, d)).astype(np.float32)
+        true_j = float(np.minimum(x, y).sum() / np.maximum(x, y).sum())
+        params = minhash.make_cws(jax.random.PRNGKey(seed % 1000), 400, d)
+        hx = minhash.cws_hash(jnp.asarray(x), params)
+        hy = minhash.cws_hash(jnp.asarray(y), params)
+        est = float(jnp.mean((hx == hy).astype(jnp.float32)))
+        assert est == pytest.approx(true_j, abs=0.12)
 
 
 def test_cws_batch_matches_single(rng):
