@@ -96,7 +96,10 @@ def _time_batched(queries, index, band):
                 t0 = time.perf_counter()
                 engine.search_batch(blk)
                 best[i] = min(best[i], time.perf_counter() - t0)
-    return {batch: sum(best) for batch, (_, _, best) in cells.items()}
+    times = {batch: sum(best) for batch, (_, _, best) in cells.items()}
+    lb_fracs = {batch: eng.metrics.snapshot()["lb_pruned_frac_mean"]
+                for batch, (eng, _, _) in cells.items()}
+    return times, lb_fracs
 
 
 def run() -> None:
@@ -115,7 +118,7 @@ def run() -> None:
         emit(f"serving/{kind}/len{length}/sequential_warm", t_warm / n * 1e6,
              {"qps": round(n / t_warm, 2), "n_queries": n})
 
-        times = _time_batched(queries, index, band)
+        times, lb_fracs = _time_batched(queries, index, band)
         prev_qps = 0.0
         for batch in BATCH_SIZES:
             qps = n / times[batch]
@@ -123,6 +126,7 @@ def run() -> None:
                  times[batch] / n * 1e6,
                  {"qps": round(qps, 2),
                   "speedup_vs_cold": round(qps / (n / t_cold), 2),
+                  "lb_pruned_frac": round(lb_fracs[batch], 3),
                   "monotone": bool(qps >= prev_qps)})
             prev_qps = qps
 

@@ -16,9 +16,11 @@ def run() -> None:
         for length in LENGTHS:
             db, queries = dataset(kind, length)
             band = band_for(length)
-            index = SSHIndex.build(db, params)
+            # envelope precompute at build time: LB_Keogh2 needs no
+            # per-query candidate envelopes (DESIGN.md §3)
+            index = SSHIndex.build(db, params, envelope_band=band)
             q = queries[0]
-            _, t_ssh = timed(
+            res, t_ssh = timed(
                 lambda: ssh_search(q, index, topk=10, top_c=512, band=band,
                                    multiprobe_offsets=params.step),
                 warmup=1, iters=2)
@@ -32,7 +34,9 @@ def run() -> None:
                  {"ssh_s": round(t_ssh, 4), "ucr_s": round(t_ucr, 4),
                   "brute_s": round(t_brute, 4),
                   "speedup_vs_ucr": round(t_ucr / t_ssh, 2),
-                  "speedup_vs_brute": round(t_brute / t_ssh, 2)})
+                  "speedup_vs_brute": round(t_brute / t_ssh, 2),
+                  "lb_pruned_frac": round(res.stats.lb_pruned_frac, 3),
+                  "rerank_backend": res.stats.backend})
 
 
 if __name__ == "__main__":

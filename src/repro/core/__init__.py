@@ -11,6 +11,9 @@ from repro.core.index import (SSHParams, SSHFunctions, SSHIndex,
                               build_signatures, band_keys,
                               signature_collisions, probe_topc,
                               signature_collisions_batch, probe_topc_batch)
+# NOTE: the rerank *functions* stay namespaced (repro.core.rerank.rerank)
+# so the submodule attribute isn't shadowed by a same-named function.
+from repro.core.rerank import SearchStats
 from repro.core.search import (SearchResult, hash_probe, ssh_search,
                                ucr_search, srp_search, brute_force_topk,
                                precision_at_k, ndcg_at_k)
@@ -20,6 +23,7 @@ __all__ = [
     "SSHParams", "SSHFunctions", "SSHIndex", "build_signatures",
     "band_keys", "signature_collisions", "probe_topc",
     "signature_collisions_batch", "probe_topc_batch",
+    "SearchStats",
     "SearchResult", "hash_probe", "ssh_search", "ucr_search", "srp_search",
     "brute_force_topk", "precision_at_k", "ndcg_at_k",
 ]

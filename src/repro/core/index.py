@@ -175,16 +175,28 @@ class HostBuckets:
 
 @dataclasses.dataclass
 class SSHIndex:
-    """End-to-end SSH index over a database of fixed-length series."""
+    """End-to-end SSH index over a database of fixed-length series.
+
+    ``env_upper``/``env_lower`` cache the Sakoe-Chiba envelopes of every
+    database series at radius ``env_radius`` (DESIGN.md §3): the re-rank
+    cascade's LB_Keogh2 needs *candidate* envelopes, and precomputing them
+    at build/insert time turns that bound from O(C·m·r) per query into an
+    O(C·m) gather+compare.  ``candidate_envelopes`` computes them lazily
+    (and re-computes on a radius change); ``insert`` keeps them aligned.
+    """
     fns: SSHFunctions
     signatures: jnp.ndarray            # (N, K)
     keys: jnp.ndarray                  # (N, L)
     series: Optional[jnp.ndarray]      # (N, m) — kept for re-ranking
     host_buckets: Optional[HostBuckets] = None
+    env_radius: Optional[int] = None
+    env_upper: Optional[jnp.ndarray] = None    # (N, m) at env_radius
+    env_lower: Optional[jnp.ndarray] = None
 
     @classmethod
     def build(cls, series: jnp.ndarray, params: SSHParams,
-              with_host_buckets: bool = False, batch: int = 256) -> "SSHIndex":
+              with_host_buckets: bool = False, batch: int = 256,
+              envelope_band: Optional[int] = None) -> "SSHIndex":
         fns = SSHFunctions.create(params)
         sigs = build_signatures(series, fns, batch=batch)
         keys = band_keys(sigs, params)
@@ -192,8 +204,28 @@ class SSHIndex:
         if with_host_buckets:
             hb = HostBuckets(params)
             hb.insert(np.asarray(keys))
-        return cls(fns=fns, signatures=sigs, keys=keys, series=series,
-                   host_buckets=hb)
+        idx = cls(fns=fns, signatures=sigs, keys=keys, series=series,
+                  host_buckets=hb)
+        if envelope_band is not None:
+            idx.candidate_envelopes(envelope_band)
+        return idx
+
+    def candidate_envelopes(self, radius: int):
+        """(upper, lower) envelopes of every database series at ``radius``.
+
+        Cached; recomputed when the radius changes.  Chunked over the
+        database so the (chunk, m, 2r+1) intermediate stays small.
+        """
+        if self.series is None:
+            raise ValueError("candidate envelopes require stored series")
+        n = int(self.series.shape[0])
+        stale = (self.env_radius != radius or self.env_upper is None
+                 or int(self.env_upper.shape[0]) != n)
+        if stale:
+            self.env_upper, self.env_lower = _envelopes_chunked(
+                self.series, radius)
+            self.env_radius = radius
+        return self.env_upper, self.env_lower
 
     def query_signature(self, q: jnp.ndarray) -> jnp.ndarray:
         p = self.fns.params
@@ -245,3 +277,22 @@ class SSHIndex:
             self.series = jnp.concatenate([self.series, series], axis=0)
         if self.host_buckets is not None:
             self.host_buckets.insert(np.asarray(keys), base_id=base)
+        if self.env_radius is not None and self.env_upper is not None:
+            u, l = _envelopes_chunked(series, self.env_radius)
+            self.env_upper = jnp.concatenate([self.env_upper, u], axis=0)
+            self.env_lower = jnp.concatenate([self.env_lower, l], axis=0)
+
+
+def _envelopes_chunked(series: jnp.ndarray, radius: int,
+                       chunk: int = 512):
+    """Database envelopes in row chunks (bounds the (chunk, m, 2r+1)
+    shifted-copy intermediate of the vectorised envelope)."""
+    from repro.core import lower_bounds as lb
+    n = int(series.shape[0])
+    ups, los = [], []
+    for lo in range(0, n, chunk):
+        u, l = lb.envelope(series[lo:lo + chunk], radius)
+        ups.append(np.asarray(u))
+        los.append(np.asarray(l))
+    return (jnp.asarray(np.concatenate(ups, axis=0)),
+            jnp.asarray(np.concatenate(los, axis=0)))

@@ -62,14 +62,26 @@ def lb_keogh(upper: jnp.ndarray, lower: jnp.ndarray,
     return jnp.sum(above + below, axis=-1)
 
 
+@jax.jit
+def lb_keogh_env(query: jnp.ndarray, cand_upper: jnp.ndarray,
+                 cand_lower: jnp.ndarray) -> jnp.ndarray:
+    """LB_Keogh2 from *precomputed* candidate envelopes, squared.
+
+    cand_upper/cand_lower: (..., m) envelopes of the candidates (e.g. the
+    rows cached on ``SSHIndex`` at build time); query: (m,).  Identical
+    math to ``lb_keogh2`` minus the per-call envelope computation.
+    """
+    above = jnp.where(query > cand_upper, (query - cand_upper) ** 2, 0.0)
+    below = jnp.where(query < cand_lower, (cand_lower - query) ** 2, 0.0)
+    return jnp.sum(above + below, axis=-1)
+
+
 @functools.partial(jax.jit, static_argnames=("radius",))
 def lb_keogh2(query: jnp.ndarray, candidates: jnp.ndarray,
               radius: int) -> jnp.ndarray:
     """LB_Keogh with roles swapped: query against *candidate* envelopes."""
     upper, lower = envelope(candidates, radius)
-    above = jnp.where(query > upper, (query - upper) ** 2, 0.0)
-    below = jnp.where(query < lower, (lower - query) ** 2, 0.0)
-    return jnp.sum(above + below, axis=-1)
+    return lb_keogh_env(query, upper, lower)
 
 
 @functools.partial(jax.jit, static_argnames=("radius",))
@@ -86,6 +98,29 @@ def cascade(query: jnp.ndarray, candidates: jnp.ndarray, radius: int,
     lb3 = lb_keogh2(query, candidates, radius)
     lb = jnp.maximum(jnp.maximum(lb1, lb2), lb3)
     return lb < best_so_far
+
+
+@functools.partial(jax.jit, static_argnames=("radius",))
+def cascade_staged(query: jnp.ndarray, candidates: jnp.ndarray, radius: int,
+                   best_so_far: jnp.ndarray,
+                   cand_upper: jnp.ndarray = None,
+                   cand_lower: jnp.ndarray = None):
+    """Per-bound survivor masks, cheapest bound first (Lemire two-pass
+    ordering: LB_Kim O(1) → LB_Keogh O(m) → LB_Keogh2 O(m·r), the last
+    collapsing to O(m) when candidate envelopes are precomputed).
+
+    Returns ``(keep_kim, keep_keogh, keep_keogh2)`` booleans per
+    candidate; the cascade survivor mask is their conjunction — identical
+    decisions to ``cascade`` — while the staged masks let callers count
+    which bound fired first (``repro.core.rerank.SearchStats``).
+    """
+    u, l = envelope(query, radius)
+    lb1 = lb_kim(query, candidates)
+    lb2 = lb_keogh(u, l, candidates)
+    if cand_upper is None:
+        cand_upper, cand_lower = envelope(candidates, radius)
+    lb3 = lb_keogh_env(query, cand_upper, cand_lower)
+    return (lb1 < best_so_far, lb2 < best_so_far, lb3 < best_so_far)
 
 
 @functools.partial(jax.jit, static_argnames=("radius",))

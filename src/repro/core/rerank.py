@@ -1,0 +1,305 @@
+"""Unified DTW re-rank pipeline (DESIGN.md §3) — the hot path of Alg. 2.
+
+Every query path that turns hash candidates into a top-k — sequential
+``core.search.ssh_search``, batched ``serving.batched.ssh_search_batch``,
+and the shard-local re-rank of ``distributed.dist_index`` — funnels
+through this module, so the three stay decision-identical by
+construction:
+
+  1. **Seed DTW** over the first ``topk`` hash hits gives a per-query
+     best-so-far (Lemire's two-pass idea: one cheap DTW pass buys a tight
+     pruning threshold for the bound pass).
+  2. **LB cascade** (``lower_bounds.cascade_staged``), cheapest bound
+     first — LB_Kim O(1) → LB_Keogh O(m) → LB_Keogh2, the last fed by
+     the candidate envelopes precomputed on ``SSHIndex`` when available
+     (gather+compare instead of an O(m·r) envelope per query).  The
+     cascade statically thins the top-C block to a survivor block; which
+     bound fired first is counted into ``SearchStats``.
+  3. **Banded DTW** over the survivors through one backend knob
+     (``backend="pallas" | "jnp" | "auto"``, the same tri-state as the
+     collision-count kernel): the Pallas anti-diagonal wavefront
+     (``kernels.dtw_wavefront``) on TPU — lane-axis padding and the
+     transposed/time-reversed layout live in the kernel wrapper — and the
+     ``dtw_batch`` scan oracle on CPU.  Band-bounded DP replaces the UCR
+     suite's data-dependent early abandoning (PrunedDTW line): the work
+     bound is static, which is what lets the survivor block run as one
+     dependence-free vector program.
+
+Equality contract: for the same inputs the "jnp" and "pallas" backends
+return identical top-k ids (the kernels are tested value-equal to the
+oracle), and the batched entry point returns per-query results identical
+to the sequential one — ``tests/test_rerank.py`` holds both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lower_bounds as lb
+from repro.core.index import SSHIndex
+from repro.kernels import ops
+
+BIG = np.float32(1e30)
+
+PAIR_CHUNK = 256        # survivor pairs per DTW dispatch (lane stability)
+PAIR_CHUNK_SMALL = 32   # remainder granularity (bounds padding waste)
+
+
+@dataclasses.dataclass
+class SearchStats:
+    """Re-rank pruning counters (paper Tables 1/4 instrumentation).
+
+    The stage counters attribute each pruned candidate to the *first*
+    bound that fired (cascade order: Kim → Keogh → Keogh2), with the
+    seeded candidates — which are exempt from pruning — never counted,
+    so ``n_in == pruned_kim + pruned_keogh + pruned_keogh2 + n_dtw``.
+    """
+    n_in: int = 0            # candidates entering the re-rank stage
+    pruned_kim: int = 0      # first pruned by LB_Kim
+    pruned_keogh: int = 0    # survived Kim, pruned by LB_Keogh
+    pruned_keogh2: int = 0   # survived both, pruned by LB_Keogh2
+    forced_kept: int = 0     # seeds kept despite a bound firing
+    n_dtw: int = 0           # survivors that paid full DTW
+    backend: str = "jnp"     # resolved DTW backend ("pallas" | "jnp")
+
+    @property
+    def lb_pruned(self) -> int:
+        return self.pruned_kim + self.pruned_keogh + self.pruned_keogh2
+
+    @property
+    def lb_pruned_frac(self) -> float:
+        return self.lb_pruned / self.n_in if self.n_in else 0.0
+
+
+# ---------------------------------------------------------------------------
+# backend-dispatched DTW primitives
+# ---------------------------------------------------------------------------
+
+def dtw_candidates(query: jnp.ndarray, candidates: jnp.ndarray,
+                   band: Optional[int], backend: str = "auto"
+                   ) -> jnp.ndarray:
+    """One query vs a candidate block, (m,) x (C, m) -> (C,)."""
+    return ops.dtw_rerank(query, candidates, band,
+                          use_pallas=ops.resolve_backend(backend))
+
+
+def dtw_pairs_chunked(q_rows: jnp.ndarray, c_rows: jnp.ndarray,
+                      band: Optional[int], backend: str = "auto"
+                      ) -> np.ndarray:
+    """Row-aligned pair DTW in fixed-shape chunks: (P, m) x (P, m) -> (P,).
+
+    Full PAIR_CHUNK blocks first, then the remainder at PAIR_CHUNK_SMALL
+    granularity — two compiled programs serve every batch size and
+    survivor count, the working set per dispatch stays cache-sized, and
+    padding waste is bounded by PAIR_CHUNK_SMALL - 1 evaluations.
+    """
+    use_pallas = ops.resolve_backend(backend)
+    p = int(q_rows.shape[0])
+    pad = (-p) % PAIR_CHUNK_SMALL
+    if pad:
+        q_rows = jnp.concatenate([q_rows, q_rows[:1].repeat(pad, 0)], 0)
+        c_rows = jnp.concatenate([c_rows, c_rows[:1].repeat(pad, 0)], 0)
+    out, i, total = [], 0, p + pad
+    for chunk in (PAIR_CHUNK, PAIR_CHUNK_SMALL):
+        while total - i >= chunk:
+            out.append(np.asarray(ops.dtw_rerank_pairs(
+                q_rows[i:i + chunk], c_rows[i:i + chunk], band,
+                use_pallas=use_pallas)))
+            i += chunk
+    return np.concatenate(out)[:p]
+
+
+# ---------------------------------------------------------------------------
+# cascade thinning
+# ---------------------------------------------------------------------------
+
+def _staged_keep(query: jnp.ndarray, cands: jnp.ndarray, band: int,
+                 best: jnp.ndarray,
+                 cand_env: Optional[Tuple[jnp.ndarray, jnp.ndarray]]):
+    """(keep1, keep2, keep3) numpy masks for one query's candidate block."""
+    if cand_env is not None:
+        k1, k2, k3 = lb.cascade_staged(query, cands, band, best,
+                                       cand_env[0], cand_env[1])
+    else:
+        k1, k2, k3 = lb.cascade_staged(query, cands, band, best)
+    return np.asarray(k1), np.asarray(k2), np.asarray(k3)
+
+
+def _count_stages(k1: np.ndarray, k2: np.ndarray, k3: np.ndarray,
+                  forced: np.ndarray) -> Tuple[np.ndarray, int, int, int,
+                                               int]:
+    """Survivor mask + first-bound-fired counters, seeds exempt.
+
+    ``forced`` rows are kept regardless, and excluded from the stage
+    counters, so counters partition the non-forced candidates exactly.
+    """
+    k1f, k2f, k3f = k1 | forced, k2 | forced, k3 | forced
+    keep = k1f & k2f & k3f
+    pruned_kim = int(np.sum(~k1f))
+    pruned_keogh = int(np.sum(k1f & ~k2f))
+    pruned_keogh2 = int(np.sum(k1f & k2f & ~k3f))
+    forced_kept = int(np.sum(forced & ~(k1 & k2 & k3)))
+    return keep, pruned_kim, pruned_keogh, pruned_keogh2, forced_kept
+
+
+def _gathered_env(index: SSHIndex, ids, band: int):
+    """Candidate envelope rows when the index has them cached at ``band``
+    (build-time precompute); None otherwise (computed per block)."""
+    if index.env_radius == band and index.env_upper is not None \
+            and int(index.env_upper.shape[0]) == int(index.series.shape[0]):
+        gid = jnp.asarray(ids)
+        return index.env_upper[gid], index.env_lower[gid]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# sequential entry point (used by core.search.ssh_search)
+# ---------------------------------------------------------------------------
+
+def rerank(query: jnp.ndarray, cand_ids: jnp.ndarray, index: SSHIndex,
+           topk: int, band: Optional[int], *, use_lb_cascade: bool = True,
+           backend: str = "auto"):
+    """Candidate ids -> (global ids, dists, stats), best first.
+
+    Stage 2+3 of Alg. 2 for one query: seed DTW → LB cascade → survivor
+    DTW, every DTW through the ``backend`` knob.
+    """
+    backend_used = ops.backend_name(ops.resolve_backend(backend))
+    cands = index.series[cand_ids]
+    n_hash = int(cand_ids.shape[0])
+    stats = SearchStats(n_in=n_hash, backend=backend_used)
+
+    if use_lb_cascade and band is not None and n_hash > topk:
+        # best-so-far from an initial DTW over the top-``topk`` hash hits
+        seed = dtw_candidates(query, cands[:topk], band, backend)
+        best = jnp.max(seed)
+        env = _gathered_env(index, cand_ids, band)
+        k1, k2, k3 = _staged_keep(query, cands, band, best, env)
+        forced = np.zeros(n_hash, bool)
+        forced[:topk] = True                  # never drop the seeded set
+        keep, p1, p2, p3, fk = _count_stages(k1, k2, k3, forced)
+        stats.pruned_kim, stats.pruned_keogh, stats.pruned_keogh2 = \
+            p1, p2, p3
+        stats.forced_kept = fk
+        keep_j = jnp.asarray(keep)
+        cand_ids = cand_ids[keep_j]
+        cands = cands[keep_j]
+    stats.n_dtw = int(cands.shape[0])
+
+    d = dtw_candidates(query, cands, band, backend)
+    k = min(topk, int(cands.shape[0]))
+    vals, idx = jax.lax.top_k(-d, k)
+    ids = np.asarray(cand_ids)[np.asarray(idx)]
+    return ids, np.asarray(-vals), stats
+
+
+# ---------------------------------------------------------------------------
+# batched entry point (used by serving.batched.ssh_search_batch)
+# ---------------------------------------------------------------------------
+
+def rerank_batch(queries: jnp.ndarray, ids: np.ndarray, valid: np.ndarray,
+                 index: SSHIndex, topk: int, band: Optional[int], *,
+                 use_lb_cascade: bool = True, backend: str = "auto"):
+    """Batched stage 2+3 over per-query candidate blocks.
+
+    queries (B, m); ids (B, C) int candidate ids; valid (B, C) bool.
+    Returns (out_ids (B, k), out_d (B, k), n_final (B,), n_union, stats);
+    filler rows (fewer survivors than topk) carry id -1 / dist BIG.
+
+    Per-query decisions identical to ``rerank``: the same seed best-so-far
+    feeds the same cascade, survivors are re-ranked with the same DTW
+    values (pair DTW is lane-independent, hence bit-equal to the
+    single-query block DTW), and the final ``lax.top_k`` applies the same
+    tie-breaking.  The survivor (query, candidate) pairs are flattened
+    through the deduped union candidate table and re-ranked in fixed-size
+    chunks — total DTW work is exactly the batch's survivor count.
+    """
+    backend_used = ops.backend_name(ops.resolve_backend(backend))
+    b, c = ids.shape
+    n_hash = valid.sum(axis=1)                            # (B,)
+    stats = SearchStats(n_in=int(valid.sum()), backend=backend_used)
+    k_out = min(topk, c)
+    seed_k = min(topk, c)
+
+    if use_lb_cascade and band is not None:
+        seed_series = index.series[jnp.asarray(ids[:, :seed_k])]
+        seed_d = np.asarray(_seed_dtw_backend(queries, seed_series, band,
+                                              backend))
+        best = jnp.asarray(seed_d.max(axis=1))            # per-query kth-best
+        cand_series = index.series[jnp.asarray(ids)]      # (B, C, m)
+        env = _gathered_env(index, ids, band)
+        if env is not None:
+            k1, k2, k3 = _cascade_rows_env(queries, cand_series, band,
+                                           best, env[0], env[1])
+        else:
+            k1, k2, k3 = _cascade_rows(queries, cand_series, band, best)
+        k1, k2, k3 = np.asarray(k1), np.asarray(k2), np.asarray(k3)
+        # sequential skips the cascade entirely when n_hash <= topk, and
+        # never drops the seeded set; the first seed_k slots ARE the first
+        # seed_k valid candidates whenever the cascade applies (top_k
+        # sorts positive counts first)
+        forced = np.zeros((b, c), bool)
+        forced[:, :seed_k] = True
+        forced[n_hash <= topk] = True
+        # stage counters only over valid candidates that entered the
+        # cascade (invalid slots never reach DTW; forced slots are exempt)
+        enter = valid & ~forced
+        stats.pruned_kim = int(np.sum(enter & ~k1))
+        stats.pruned_keogh = int(np.sum(enter & k1 & ~k2))
+        stats.pruned_keogh2 = int(np.sum(enter & k1 & k2 & ~k3))
+        stats.forced_kept = int(np.sum(valid & forced & ~(k1 & k2 & k3)))
+        ok = valid & (forced | (k1 & k2 & k3))
+    else:
+        ok = valid
+    n_final = ok.sum(axis=1)                              # (B,)
+
+    # flattened survivor pairs, gathered through the deduped union table
+    rows_idx, cols_idx = np.nonzero(ok)                   # (P,) row-major
+    pair_ids = ids[rows_idx, cols_idx]
+    union = np.unique(pair_ids)                           # (U,) sorted
+    union_series = index.series[jnp.asarray(union)]       # (U, m)
+    pos = np.searchsorted(union, pair_ids)
+    c_rows = union_series[jnp.asarray(pos)]               # (P, m)
+    q_rows = queries[jnp.asarray(rows_idx)]               # (P, m)
+    pair_d = dtw_pairs_chunked(q_rows, c_rows, band, backend)   # (P,)
+    stats.n_dtw = int(pair_d.shape[0])
+
+    # per-query top-k (lax.top_k for sequential-identical tie-breaks)
+    cand_d = np.full((b, c), BIG, np.float32)             # candidate order
+    cand_d[rows_idx, cols_idx] = pair_d
+    neg, idx = jax.lax.top_k(-jnp.asarray(cand_d), k_out)
+    idx = np.asarray(idx)
+    out_ids = np.take_along_axis(ids, idx, axis=1)
+    out_d = -np.asarray(neg)
+    # rows with fewer than k_out survivors: mark the filler tail (fixed
+    # output shapes; callers trim these, matching sequential lengths)
+    out_ids = np.where(out_d < BIG * 0.5, out_ids, -1)
+    return (out_ids.astype(np.int64), out_d.astype(np.float32),
+            n_final.astype(np.int64), int(union.shape[0]), stats)
+
+
+def _seed_dtw_backend(queries: jnp.ndarray, seed_series: jnp.ndarray,
+                      band: Optional[int], backend: str) -> jnp.ndarray:
+    """(B, m) x (B, s, m) -> (B, s) per-query seed DTW, via pair rows so
+    the values are bit-identical to the flattened survivor-pair path."""
+    b, s, m = seed_series.shape
+    q_rows = jnp.repeat(queries, s, axis=0)               # (B·s, m)
+    c_rows = seed_series.reshape(b * s, m)
+    d = dtw_pairs_chunked(q_rows, c_rows, band, backend)
+    return jnp.asarray(d.reshape(b, s))
+
+
+def _cascade_rows(queries, cand_series, band, best):
+    """vmap'd staged cascade: (B, m) x (B, C, m) -> three (B, C) masks."""
+    fn = jax.vmap(lambda q, cs, b_: lb.cascade_staged(q, cs, band, b_))
+    return fn(queries, cand_series, best)
+
+
+def _cascade_rows_env(queries, cand_series, band, best, env_u, env_l):
+    fn = jax.vmap(lambda q, cs, b_, u, l:
+                  lb.cascade_staged(q, cs, band, b_, u, l))
+    return fn(queries, cand_series, best, env_u, env_l)

@@ -15,8 +15,11 @@ import numpy as np
 
 from repro.core.dtw import dtw_batch
 from repro.core import lower_bounds as lb
+from repro.core import rerank as rr
 from repro.core import srp as srp_mod
-from repro.core.index import SSHIndex, probe_topc
+from repro.core.index import SSHIndex
+from repro.core.rerank import SearchStats
+from repro.kernels import ops
 
 
 @dataclasses.dataclass
@@ -28,33 +31,31 @@ class SearchResult:
     pruned_by_hash_frac: float   # paper Table 4 row "Pruned by Hashing alone"
     pruned_total_frac: float     # paper Table 4 row "SSH Algorithm (Full)"
     wall_seconds: float
+    stats: Optional[SearchStats] = None   # re-rank cascade counters
 
     @property
     def dtw_evals(self) -> int:
         return self.n_candidates
 
 
-def _dtw_rerank(query: jnp.ndarray, cands: jnp.ndarray, topk: int,
-                band: Optional[int]):
-    d = dtw_batch(query, cands, band=band)
-    k = min(topk, cands.shape[0])
-    vals, idx = jax.lax.top_k(-d, k)
-    return idx, -vals
-
-
 def hash_probe(query: jnp.ndarray, index: SSHIndex, top_c: int,
                rank_by_signature: bool = True,
                multiprobe_offsets: int = 1,
                use_host_buckets: bool = False,
-               topk: int = 10) -> jnp.ndarray:
+               topk: int = 10,
+               backend: str = "auto") -> jnp.ndarray:
     """Stage 1 of Alg. 2: candidate ids ranked by hash collisions.
 
     Returns at most ``top_c`` candidate ids with a positive collision
     count, most-promising first; falls back to the first ``top_c`` ids when
     nothing collides.  The batched counterpart lives in
-    ``repro.serving.batched`` (identical per-query decisions).
+    ``repro.serving.batched`` (identical per-query decisions).  The
+    ``backend`` knob routes the collision count through the Pallas kernel
+    or the jnp reference — integer counts, so candidate sets are identical
+    either way.
     """
     n = int(index.keys.shape[0])
+    use_pallas = ops.resolve_backend(backend)
     if use_host_buckets and index.host_buckets is not None:
         qkeys = index.query_keys(query)
         cand_ids = index.host_buckets.probe(np.asarray(qkeys))
@@ -63,7 +64,6 @@ def hash_probe(query: jnp.ndarray, index: SSHIndex, top_c: int,
         # one probe row per δ-offset, combined by per-candidate max —
         # same qk/db selection as the batched batch_probe
         from repro.core import minhash
-        from repro.core.index import signature_collisions
         qsigs = index.query_signatures_multiprobe(query, multiprobe_offsets)
         if rank_by_signature:
             qk, db = qsigs, index.signatures
@@ -71,17 +71,18 @@ def hash_probe(query: jnp.ndarray, index: SSHIndex, top_c: int,
             qk = minhash.combine_bands(qsigs, index.fns.params.num_tables)
             db = index.keys
         counts_max = jnp.max(jnp.stack(
-            [signature_collisions(row, db) for row in qk]), axis=0)
+            [ops.collision_count(row, db, use_pallas=use_pallas)
+             for row in qk]), axis=0)
         vals, ids = jax.lax.top_k(counts_max, min(top_c, n))
         cand_ids = ids[vals > 0]
-    elif rank_by_signature:
-        qsig = index.query_signature(query)
-        ids, counts = probe_topc(qsig, index.signatures, min(top_c, n))
-        cand_ids = ids[counts > 0]
     else:
-        qkeys = index.query_keys(query)
-        ids, counts = probe_topc(qkeys, index.keys, min(top_c, n))
-        cand_ids = ids[counts > 0]
+        if rank_by_signature:
+            qk, db = index.query_signature(query), index.signatures
+        else:
+            qk, db = index.query_keys(query), index.keys
+        counts = ops.collision_count(qk, db, use_pallas=use_pallas)
+        vals, ids = jax.lax.top_k(counts, min(top_c, n))
+        cand_ids = ids[vals > 0]
     if cand_ids.shape[0] == 0:           # degenerate: fall back to top_c ids
         cand_ids = jnp.arange(min(top_c, n), dtype=jnp.int32)
     return cand_ids
@@ -92,71 +93,77 @@ def ssh_search(query: jnp.ndarray, index: SSHIndex, topk: int = 10,
                use_lb_cascade: bool = True,
                use_host_buckets: bool = False,
                rank_by_signature: bool = True,
-               multiprobe_offsets: int = 1) -> SearchResult:
+               multiprobe_offsets: int = 1,
+               backend: str = "auto") -> SearchResult:
     """Paper Algorithm 2: hash-probe candidates, then DTW re-rank.
 
     ``use_lb_cascade`` enables the extra UCR-style pruning of hash
-    candidates (Alg. 2 line 10).  ``top_c`` bounds the candidate set for
-    the device-scan backend (DESIGN.md §3).  ``rank_by_signature`` ranks
-    candidates by agreement over all K raw CWS hashes instead of the L
-    banded bucket keys — strictly finer collision granularity (beyond-paper
-    refinement; set False for the paper-faithful band-key probe).
+    candidates (Alg. 2 line 10), performed by the unified re-rank
+    pipeline (``repro.core.rerank``).  ``top_c`` bounds the candidate set
+    for the device-scan backend (DESIGN.md §3).  ``rank_by_signature``
+    ranks candidates by agreement over all K raw CWS hashes instead of
+    the L banded bucket keys — strictly finer collision granularity
+    (beyond-paper refinement; set False for the paper-faithful band-key
+    probe).  ``backend`` selects the kernel implementation for every
+    device stage (collision count and DTW): ``"pallas"`` (interpret mode
+    off-TPU), ``"jnp"``, or ``"auto"`` (Pallas on TPU) — top-k results
+    are identical across backends.
     """
     t0 = time.perf_counter()
     n = int(index.keys.shape[0])
     cand_ids = hash_probe(query, index, top_c,
                           rank_by_signature=rank_by_signature,
                           multiprobe_offsets=multiprobe_offsets,
-                          use_host_buckets=use_host_buckets, topk=topk)
+                          use_host_buckets=use_host_buckets, topk=topk,
+                          backend=backend)
     n_hash = int(cand_ids.shape[0])
 
-    cands = index.series[cand_ids]
-    if use_lb_cascade and band is not None and n_hash > topk:
-        # best-so-far from an initial DTW over the top-``topk`` hash hits
-        seed = dtw_batch(query, cands[:topk], band=band)
-        best = jnp.max(jax.lax.top_k(-seed, min(topk, n_hash))[0] * -1)
-        keep = lb.cascade(query, cands, band, best)
-        keep = keep.at[:topk].set(True)   # never drop the seeded set
-        cand_ids = cand_ids[keep]
-        cands = cands[keep]
-    n_final = int(cands.shape[0])
-
-    idx, dists = _dtw_rerank(query, cands, topk, band)
-    ids = np.asarray(cand_ids)[np.asarray(idx)]
+    ids, dists, stats = rr.rerank(query, cand_ids, index, topk, band,
+                                  use_lb_cascade=use_lb_cascade,
+                                  backend=backend)
+    n_final = stats.n_dtw
     wall = time.perf_counter() - t0
     return SearchResult(
-        ids=ids, dists=np.asarray(dists),
+        ids=ids, dists=dists,
         n_candidates=n_final, n_database=n,
         pruned_by_hash_frac=1.0 - n_hash / n,
         pruned_total_frac=1.0 - n_final / n,
-        wall_seconds=wall)
+        wall_seconds=wall, stats=stats)
 
 
 def ucr_search(query: jnp.ndarray, series: jnp.ndarray, topk: int = 10,
-               band: Optional[int] = None, seed_size: int = 64
-               ) -> SearchResult:
+               band: Optional[int] = None, seed_size: int = 64,
+               backend: str = "auto") -> SearchResult:
     """Vectorised UCR-suite: exact top-k via LB cascade + DTW on survivors.
 
     Decision-equivalent to the sequential suite: the LB cascade prunes
     against a best-so-far obtained from a seed subset, survivors get exact
-    DTW.  (Exactness: a candidate is only dropped if some lower bound
-    exceeds a *valid* upper bound on the k-th best distance.)
+    DTW (through the shared backend-dispatched re-rank primitive).
+    (Exactness: a candidate is only dropped if some lower bound exceeds a
+    *valid* upper bound on the k-th best distance.)
     """
     t0 = time.perf_counter()
     n = series.shape[0]
-    radius = band if band is not None else max(1, query.shape[0] // 20)
-    seed = dtw_batch(query, series[:seed_size], band=band)
+    seed = rr.dtw_candidates(query, series[:seed_size], band, backend)
     kth = jnp.sort(seed)[min(topk, seed_size) - 1]
-    keep = lb.cascade(query, series, radius, kth)
+    if band is None:
+        # envelope bounds at a finite radius do NOT lower-bound the
+        # unconstrained DTW (a path may align outside the window); only
+        # LB_Kim (first/last point, forced by any warping path) is sound
+        keep = lb.lb_kim(query, series) < kth
+    else:
+        keep = lb.cascade(query, series, band, kth)
     keep = keep.at[:seed_size].set(True)
     survivors = jnp.nonzero(keep, size=n, fill_value=n)[0]
     n_surv = int(jnp.sum(keep))
     cands = series[survivors[:n_surv]]
-    idx, dists = _dtw_rerank(query, cands, topk, band)
+    d = rr.dtw_candidates(query, cands, band, backend)
+    k = min(topk, int(cands.shape[0]))
+    vals, idx = jax.lax.top_k(-d, k)
     ids = np.asarray(survivors[:n_surv])[np.asarray(idx)]
     wall = time.perf_counter() - t0
     return SearchResult(
-        ids=ids, dists=np.asarray(dists), n_candidates=n_surv,
+        ids=ids, dists=np.asarray(-vals), n_candidates=n_surv,
         n_database=n, pruned_by_hash_frac=0.0,
         pruned_total_frac=1.0 - n_surv / n, wall_seconds=wall)
 

@@ -61,15 +61,21 @@ def build_sharded(series: jnp.ndarray, filters: jnp.ndarray, cws: dict,
 
 
 def make_query_fn(params: SSHParams, mesh: Mesh, *, top_c: int, band: int,
-                  topk: int, length: int):
-    """Returns query(series_shard, sigs_shard, filters, cws, q) -> (ids, d)."""
+                  topk: int, length: int, backend: str = "auto"):
+    """Returns query(series_shard, sigs_shard, filters, cws, q) -> (ids, d).
+
+    ``backend`` selects the shard-local DTW re-rank implementation via
+    the shared dispatch (``repro.kernels.ops``): the Pallas wavefront
+    kernel on TPU, the ``dtw_batch`` scan oracle elsewhere — the same
+    knob as the local re-rank pipeline (DESIGN.md §3).
+    """
     axes = tuple(mesh.axis_names)
     n_shards = int(mesh.devices.size)
     local_c = max(topk, top_c // n_shards)
 
     def local_query(series, sigs, filters, cws, q):
         from repro.core import minhash, shingle, sketch
-        from repro.core.dtw import dtw_batch
+        from repro.kernels import ops
         cwsp = minhash.CWSParams(**cws)
         bits = sketch.sketch_bits(q, filters, params.step)
         counts = shingle.shingle_histogram(bits, params.ngram)
@@ -77,7 +83,8 @@ def make_query_fn(params: SSHParams, mesh: Mesh, *, top_c: int, band: int,
 
         coll = jnp.sum((sigs == sig[None, :]).astype(jnp.int32), axis=-1)
         _, cand = jax.lax.top_k(coll, local_c)                # local ids
-        d = dtw_batch(q, jnp.take(series, cand, axis=0), band=band)
+        d = ops.dtw_rerank(q, jnp.take(series, cand, axis=0), band,
+                           use_pallas=ops.resolve_backend(backend))
 
         shard_id = jax.lax.axis_index(axes)
         n_local = series.shape[0]

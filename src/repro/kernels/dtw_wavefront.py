@@ -112,3 +112,43 @@ def dtw_wavefront(query: jnp.ndarray, candidates: jnp.ndarray,
         interpret=interpret,
     )(q_pad, x_rev)
     return out[0, :c]
+
+
+@functools.partial(jax.jit, static_argnames=("band", "interpret"))
+def dtw_wavefront_pairs(queries: jnp.ndarray, candidates: jnp.ndarray,
+                        band: int, interpret: bool = False) -> jnp.ndarray:
+    """Row-aligned banded squared-DTW: (P, m) x (P, m) -> (P,) float32.
+
+    Pair ``p`` gets DTW(queries[p], candidates[p]) — the layout the
+    batched re-rank's flattened survivor-pair list needs (each pair may
+    have a *different* query).  Reuses the single-query kernel body
+    verbatim: the query tile is simply (b_w, LANES) instead of (b_w, 1)
+    broadcast, i.e. one query per lane alongside its candidate.  All
+    per-lane arithmetic is independent, so pair values are bit-identical
+    to ``dtw_wavefront`` with the same (query, candidate) in any lane.
+    """
+    p, m = candidates.shape
+    assert queries.shape == candidates.shape, "row-aligned pairs required"
+    r = min(band, m - 1)
+    b_w = 2 * r + 2
+    b_w += (-b_w) % 8                       # sublane alignment
+    pad = b_w + 2                           # slack so every ds() is in-bounds
+
+    pp = (-p) % LANES
+    # candidates time-reversed, queries in natural time; both (time, lane)
+    x_rev = candidates.astype(jnp.float32)[:, ::-1].T       # (m, P)
+    x_rev = jnp.pad(x_rev, ((pad, pad), (0, pp)))
+    q_t = jnp.pad(queries.astype(jnp.float32).T, ((pad, pad), (0, pp)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, m=m, r=r, b_w=b_w, pad=pad),
+        out_shape=jax.ShapeDtypeStruct((1, p + pp), jnp.float32),
+        grid=((p + pp) // LANES,),
+        in_specs=[
+            pl.BlockSpec((m + 2 * pad, LANES), lambda g: (0, g)),
+            pl.BlockSpec((m + 2 * pad, LANES), lambda g: (0, g)),
+        ],
+        out_specs=pl.BlockSpec((1, LANES), lambda g: (0, g)),
+        interpret=interpret,
+    )(q_t, x_rev)
+    return out[0, :p]

@@ -16,11 +16,36 @@ from repro.kernels.collision_count import collision_count as _collision_pallas
 from repro.kernels.collision_count import \
     collision_count_batch as _collision_batch_pallas
 from repro.kernels.dtw_wavefront import dtw_wavefront as _dtw_pallas
+from repro.kernels.dtw_wavefront import \
+    dtw_wavefront_pairs as _dtw_pairs_pallas
 from repro.kernels.sketch_conv import sketch_conv as _sketch_pallas
+
+BACKENDS = ("auto", "pallas", "jnp")
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def resolve_backend(backend: str) -> Optional[bool]:
+    """Map the public ``backend`` knob to the ``use_pallas`` tri-state.
+
+    ``"auto"`` → None (Pallas on TPU, jnp reference elsewhere);
+    ``"pallas"`` → True (interpret mode off-TPU — same kernel body);
+    ``"jnp"`` → False.  One knob drives every kernel of the query path
+    (collision count, LB filter gathers, DTW re-rank).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, "
+                         f"got {backend!r}")
+    return {"auto": None, "pallas": True, "jnp": False}[backend]
+
+
+def backend_name(use_pallas: Optional[bool]) -> str:
+    """The backend actually executing for a ``use_pallas`` tri-state."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    return "pallas" if use_pallas else "jnp"
 
 
 def sketch_conv(x: jnp.ndarray, filters: jnp.ndarray, step: int,
@@ -40,16 +65,40 @@ def sketch_bits(x: jnp.ndarray, filters: jnp.ndarray, step: int,
     return (sketch_conv(x, filters, step, **kw) >= 0).astype(jnp.uint8)
 
 
-def dtw_rerank(query: jnp.ndarray, candidates: jnp.ndarray, band: int,
+def dtw_rerank(query: jnp.ndarray, candidates: jnp.ndarray,
+               band: Optional[int],
                use_pallas: Optional[bool] = None,
                interpret: bool = False) -> jnp.ndarray:
-    """Banded squared-DTW of query vs candidate batch -> (C,)."""
+    """Banded squared-DTW of query vs candidate batch -> (C,).
+
+    ``band=None`` (unconstrained) maps to radius m-1 on the Pallas path —
+    equivalent for equal-length series (|i-j| <= m-1 always holds).
+    """
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas or interpret:
-        return _dtw_pallas(query, candidates, band,
+        r = band if band is not None else candidates.shape[1] - 1
+        return _dtw_pallas(query, candidates, r,
                            interpret=interpret or not _on_tpu())
     return ref.dtw_wavefront_ref(query, candidates, band=band)
+
+
+def dtw_rerank_pairs(queries: jnp.ndarray, candidates: jnp.ndarray,
+                     band: Optional[int],
+                     use_pallas: Optional[bool] = None,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Row-aligned pair DTW (P, m) x (P, m) -> (P,) — the batched
+    re-rank's survivor-pair shape.  ``band=None`` (unconstrained) maps to
+    radius m-1 on the Pallas path: for equal-length series |i-j| <= m-1
+    always holds, so the banded kernel computes the unconstrained DP.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        r = band if band is not None else candidates.shape[1] - 1
+        return _dtw_pairs_pallas(queries, candidates, r,
+                                 interpret=interpret or not _on_tpu())
+    return ref.dtw_pairs_ref(queries, candidates, band=band)
 
 
 def collision_count(query_keys: jnp.ndarray, db_keys: jnp.ndarray,

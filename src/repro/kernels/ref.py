@@ -12,6 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.dtw import dtw as _dtw
 from repro.core.dtw import dtw_batch as _dtw_batch
 from repro.core.sketch import sketch_projections as _sketch_projections
 
@@ -28,6 +29,13 @@ def dtw_wavefront_ref(query: jnp.ndarray, candidates: jnp.ndarray,
                       band: Optional[int] = None) -> jnp.ndarray:
     """Banded squared-DTW. query (m,), candidates (C, m) -> (C,)."""
     return _dtw_batch(query, candidates, band=band)
+
+
+@functools.partial(jax.jit, static_argnames=("band",))
+def dtw_pairs_ref(queries: jnp.ndarray, candidates: jnp.ndarray,
+                  band: Optional[int] = None) -> jnp.ndarray:
+    """Row-aligned banded squared-DTW: (P, m) x (P, m) -> (P,)."""
+    return jax.vmap(lambda q, c: _dtw(q, c, band=band))(queries, candidates)
 
 
 @jax.jit

@@ -33,12 +33,14 @@ def _ssh_fixture(arch):
     return db, SSHIndex.build(db, params), params
 
 
-def serve_ssh(arch, requests: int, batch_size: int, wait_ms: float):
+def serve_ssh(arch, requests: int, batch_size: int, wait_ms: float,
+              backend: str = "auto"):
     """Engine-based serving: dynamic batching + batched probe/re-rank."""
     from repro.serving import EngineConfig, ServingEngine
     db, index, params = _ssh_fixture(arch)
     cfg = EngineConfig(topk=10, top_c=256, band=6,
                        multiprobe_offsets=params.step,
+                       backend=backend,
                        max_batch=batch_size, max_wait_ms=wait_ms)
     engine = ServingEngine(index, cfg)
     rng = np.random.default_rng(0)
@@ -65,7 +67,7 @@ def serve_ssh(arch, requests: int, batch_size: int, wait_ms: float):
           f"avg batch {snap['batch_size_mean']:.1f})")
 
 
-def serve_ssh_sequential(arch, requests: int):
+def serve_ssh_sequential(arch, requests: int, backend: str = "auto"):
     """Pre-engine baseline: one ssh_search per request."""
     from repro.core import ssh_search
     db, index, params = _ssh_fixture(arch)
@@ -74,7 +76,7 @@ def serve_ssh_sequential(arch, requests: int):
     for i in rng.integers(0, db.shape[0], requests):
         t0 = time.perf_counter()
         res = ssh_search(db[int(i)], index, topk=10, top_c=256, band=6,
-                         multiprobe_offsets=params.step)
+                         multiprobe_offsets=params.step, backend=backend)
         lat.append(time.perf_counter() - t0)
         print(f"req {i}: top1={res.ids[0]} pruned="
               f"{res.pruned_total_frac:.1%} {lat[-1]*1e3:.0f}ms")
@@ -120,14 +122,19 @@ def main():
                     help="dynamic batcher max wait (ssh only)")
     ap.add_argument("--sequential", action="store_true",
                     help="bypass the engine; one ssh_search per request")
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "pallas", "jnp"),
+                    help="kernel backend for the ssh query path "
+                         "(collision count + DTW re-rank)")
     ap.add_argument("--smoke", action="store_true", default=True)
     args = ap.parse_args()
     arch = get_arch(args.arch)
     if arch.family == "ssh":
         if args.sequential:
-            serve_ssh_sequential(arch, args.requests)
+            serve_ssh_sequential(arch, args.requests, backend=args.backend)
         else:
-            serve_ssh(arch, args.requests, args.batch_size, args.wait_ms)
+            serve_ssh(arch, args.requests, args.batch_size, args.wait_ms,
+                      backend=args.backend)
     elif arch.family == "lm":
         serve_lm(arch, args.requests, args.smoke)
     else:

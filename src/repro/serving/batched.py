@@ -8,22 +8,22 @@ same three stages as the sequential ``repro.core.search.ssh_search``:
   2. **Batched collision top-C** — a single (B, L) × (N, L) → (B, N) count
      (fused Pallas kernel on TPU, jnp reference elsewhere) + per-row
      ``top_k``, so the database streams from HBM once per *batch*.
-  3. **Batched DTW re-rank over flattened survivor pairs** — the optional
-     batched LB cascade (Lemire-style two-pass: seed DTW for a per-query
-     best-so-far, then vectorised envelope bounds) marks each query's
-     survivors; every surviving (query, candidate) pair becomes one row
-     of a flat pair list, gathered through the deduped *union* candidate
-     table and re-ranked in fixed-size banded-DTW chunks.  Total DTW work
-     is exactly the batch's survivor count — sequential-optimal, with no
-     batch-max-width padding and one compiled program for every batch
-     size.
+  3. **Unified re-rank** (``repro.core.rerank.rerank_batch``) — seed DTW
+     for a per-query best-so-far, the staged LB cascade (envelopes
+     precomputed on the index when available), and backend-dispatched
+     banded DTW over the flattened survivor pairs gathered through the
+     deduped *union* candidate table.  Total DTW work is exactly the
+     batch's survivor count — sequential-optimal, with no batch-max-width
+     padding and one compiled program for every batch size.
 
 Equality contract: per-query top-k (ids and distances) is identical to
 sequential ``ssh_search`` with the same parameters — the probe uses the
 same integer collision counts and the same ``lax.top_k`` tie-breaking,
-the LB cascade prunes with the same per-query best-so-far, and the DTW
-values come from the same ``dtw`` scan.  ``tests/test_serving.py`` holds
-this contract over a synthetic-ECG database.
+and the re-rank is the same ``repro.core.rerank`` pipeline (same
+best-so-far, same cascade decisions, same DTW values).
+``tests/test_serving.py`` holds this contract over a synthetic-ECG
+database; ``tests/test_rerank.py`` additionally holds it across the
+"jnp" and "pallas" backends.
 
 Shapes are bucketed (B by the engine, U to the next power of two) so a
 steady request stream hits a handful of compiled programs.
@@ -31,7 +31,6 @@ steady request stream hits a handful of compiled programs.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Optional
 
@@ -39,14 +38,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lower_bounds as lb
-from repro.core.dtw import dtw, dtw_batch
-from repro.core.index import SSHIndex
-from repro.core.search import SearchResult
 from repro.core import minhash
+from repro.core import rerank as rr
+from repro.core.index import SSHIndex
+from repro.core.rerank import SearchStats
+from repro.core.search import SearchResult
 from repro.kernels import ops
-
-BIG = np.float32(1e30)
 
 
 @dataclasses.dataclass
@@ -61,6 +58,7 @@ class BatchSearchResult:
     pruned_by_hash_frac: np.ndarray   # (B,)
     pruned_total_frac: np.ndarray     # (B,)
     wall_seconds: float
+    stats: Optional[SearchStats] = None   # batch-aggregate rerank counters
 
     @property
     def dtw_evals(self) -> int:
@@ -71,7 +69,11 @@ class BatchSearchResult:
         """Adapter: query ``b``'s slice as a sequential SearchResult.
 
         Filler rows (id −1, only when a query had fewer survivors than
-        topk) are trimmed so lengths match the sequential path.
+        topk) are trimmed so lengths match the sequential path.  The
+        rerank counters are tracked per *batch*, not per query, so
+        ``stats`` stays None here (the sequential invariant
+        ``stats.n_dtw == n_candidates`` would not hold for a slice);
+        read the aggregate from ``BatchSearchResult.stats``.
         """
         k = int(np.sum(self.ids[b] >= 0))
         return SearchResult(
@@ -116,75 +118,29 @@ def batch_probe(queries: jnp.ndarray, index: SSHIndex, top_c: int,
     return ids, vals
 
 
-@functools.partial(jax.jit, static_argnames=("band",))
-def _seed_dtw(queries: jnp.ndarray, seed_series: jnp.ndarray,
-              band: Optional[int]) -> jnp.ndarray:
-    """(B, m) x (B, s, m) -> (B, s) banded DTW of each query vs its seeds."""
-    return jax.vmap(lambda q, s: dtw_batch(q, s, band=band))(queries,
-                                                             seed_series)
-
-
-@functools.partial(jax.jit, static_argnames=("band",))
-def _cascade_rows(queries: jnp.ndarray, cand_series: jnp.ndarray,
-                  band: int, best: jnp.ndarray) -> jnp.ndarray:
-    """(B, m) x (B, C, m) -> (B, C) survivor mask, per-query best-so-far."""
-    return jax.vmap(lambda q, cs, b_: lb.cascade(q, cs, band, b_))(
-        queries, cand_series, best)
-
-
-PAIR_CHUNK = 256        # survivor pairs per DTW dispatch (lane stability)
-PAIR_CHUNK_SMALL = 32   # remainder granularity (bounds padding waste)
-
-
-@functools.partial(jax.jit, static_argnames=("band",))
-def _pair_dtw(q_rows: jnp.ndarray, c_rows: jnp.ndarray,
-              band: Optional[int]) -> jnp.ndarray:
-    """Pairwise DTW over aligned rows: (P, m) x (P, m) -> (P,)."""
-    return jax.vmap(lambda q, c: dtw(q, c, band=band))(q_rows, c_rows)
-
-
-def _rerank_pairs(q_rows: jnp.ndarray, c_rows: jnp.ndarray,
-                  band: Optional[int]) -> np.ndarray:
-    """Chunked pair DTW: fixed-shape (chunk, m) dispatches.
-
-    Full PAIR_CHUNK blocks first, then the remainder at
-    PAIR_CHUNK_SMALL granularity — two compiled programs serve every
-    batch size and survivor count, the working set per dispatch stays
-    cache-sized, and padding waste is bounded by PAIR_CHUNK_SMALL - 1
-    evaluations.
-    """
-    p = int(q_rows.shape[0])
-    pad = (-p) % PAIR_CHUNK_SMALL
-    if pad:
-        q_rows = jnp.concatenate([q_rows, q_rows[:1].repeat(pad, 0)], 0)
-        c_rows = jnp.concatenate([c_rows, c_rows[:1].repeat(pad, 0)], 0)
-    out, i, total = [], 0, p + pad
-    for chunk in (PAIR_CHUNK, PAIR_CHUNK_SMALL):
-        while total - i >= chunk:
-            out.append(np.asarray(_pair_dtw(q_rows[i:i + chunk],
-                                            c_rows[i:i + chunk], band)))
-            i += chunk
-    return np.concatenate(out)[:p]
-
-
 def ssh_search_batch(queries: jnp.ndarray, index: SSHIndex,
                      topk: int = 10, top_c: int = 256,
                      band: Optional[int] = None,
                      use_lb_cascade: bool = True,
                      rank_by_signature: bool = True,
                      multiprobe_offsets: int = 1,
-                     use_pallas: Optional[bool] = None) -> BatchSearchResult:
+                     use_pallas: Optional[bool] = None,
+                     backend: str = "auto") -> BatchSearchResult:
     """Batched paper Alg. 2 over a (B, m) query block.
 
     Returns per-query top-k identical to ``ssh_search(q, index, ...)`` for
-    every row q (see module docstring for why).
+    every row q (see module docstring for why).  ``backend`` selects the
+    kernel implementation for every device stage (probe + re-rank DTW);
+    ``use_pallas`` remains as a probe-only override for tests (it defaults
+    to the backend's resolution when unset).
     """
     t0 = time.perf_counter()
     queries = jnp.asarray(queries)
     b, m = queries.shape
     n = int(index.signatures.shape[0])
     c = min(top_c, n)
-    k_out = min(topk, c)
+    if use_pallas is None:
+        use_pallas = ops.resolve_backend(backend)
 
     # -- stages 1+2: fused probe ------------------------------------------
     ids_j, vals_j = batch_probe(queries, index, c,
@@ -199,56 +155,16 @@ def ssh_search_batch(queries: jnp.ndarray, index: SSHIndex,
         valid[empty] = True
     n_hash = valid.sum(axis=1)                            # (B,)
 
-    # -- optional batched LB cascade (two-pass: seed DTW, then bounds) ----
-    seed_k = min(topk, c)
-    if use_lb_cascade and band is not None:
-        seed_series = index.series[jnp.asarray(ids[:, :seed_k])]
-        seed_d = np.asarray(_seed_dtw(queries, seed_series, band))
-        best = jnp.asarray(seed_d.max(axis=1))            # per-query kth-best
-        cand_series = index.series[jnp.asarray(ids)]      # (B, C, m)
-        keep = np.array(_cascade_rows(queries, cand_series, band, best))
-        # sequential skips the cascade entirely when n_hash <= topk ...
-        keep[n_hash <= topk] = True
-        # ... and never drops the seeded set (keep.at[:topk].set(True));
-        # the first seed_k slots ARE the first seed_k valid candidates
-        # whenever the cascade applies (top_k sorts positive counts first)
-        keep[:, :seed_k] = True
-        ok = valid & keep
-    else:
-        ok = valid
-    n_final = ok.sum(axis=1)                              # (B,)
-
-    # -- batched DTW re-rank over the flattened survivor pairs ------------
-    # Every (query, survivor) pair becomes one row of a padded pair list,
-    # gathered through the deduped union table: total DTW work is exactly
-    # the survivor count (sequential-optimal — no batch-max-width padding)
-    # and the fixed-size pair chunks keep one compiled program for every
-    # batch size.
-    rows_idx, cols_idx = np.nonzero(ok)                   # (P,) row-major
-    pair_ids = ids[rows_idx, cols_idx]
-    union = np.unique(pair_ids)                           # (U,) sorted
-    union_series = index.series[jnp.asarray(union)]       # (U, m)
-    pos = np.searchsorted(union, pair_ids)
-    c_rows = union_series[jnp.asarray(pos)]               # (P, m)
-    q_rows = queries[jnp.asarray(rows_idx)]               # (P, m)
-    pair_d = _rerank_pairs(q_rows, c_rows, band)          # (P,)
-
-    # -- per-query top-k (lax.top_k for sequential-identical tie-breaks) --
-    cand_d = np.full((b, c), BIG, np.float32)             # candidate order
-    cand_d[rows_idx, cols_idx] = pair_d
-    neg, idx = jax.lax.top_k(-jnp.asarray(cand_d), k_out)
-    idx = np.asarray(idx)
-    out_ids = np.take_along_axis(ids, idx, axis=1)
-    out_d = -np.asarray(neg)
-    # rows with fewer than k_out survivors: mark the filler tail (fixed
-    # output shapes; per_query() trims these, matching sequential lengths)
-    out_ids = np.where(out_d < BIG * 0.5, out_ids, -1)
+    # -- stage 3: unified re-rank (cascade + backend-dispatched DTW) ------
+    out_ids, out_d, n_final, n_union, stats = rr.rerank_batch(
+        queries, ids, valid, index, topk, band,
+        use_lb_cascade=use_lb_cascade, backend=backend)
 
     wall = time.perf_counter() - t0
     return BatchSearchResult(
-        ids=out_ids.astype(np.int64), dists=out_d.astype(np.float32),
-        n_queries=b, n_database=n, n_union=int(union.shape[0]),
-        n_candidates=n_final.astype(np.int64),
+        ids=out_ids, dists=out_d,
+        n_queries=b, n_database=n, n_union=n_union,
+        n_candidates=n_final,
         pruned_by_hash_frac=1.0 - n_hash / n,
         pruned_total_frac=1.0 - n_final / n,
-        wall_seconds=wall)
+        wall_seconds=wall, stats=stats)

@@ -43,13 +43,20 @@ from repro.serving.metrics import ServingMetrics
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """Search parameters + batching policy for one engine instance."""
+    """Search parameters + batching policy for one engine instance.
+
+    ``backend`` is the one knob selecting the kernel implementation for
+    every device stage of the query path (collision count, LB filter
+    gathers, DTW re-rank): "pallas" | "jnp" | "auto" (Pallas on TPU,
+    jnp reference elsewhere).  Results are backend-independent.
+    """
     topk: int = 10
     top_c: int = 256
     band: Optional[int] = None
     use_lb_cascade: bool = True
     rank_by_signature: bool = True
     multiprobe_offsets: int = 1
+    backend: str = "auto"
     max_batch: int = 8
     max_wait_ms: float = 2.0
 
@@ -64,11 +71,20 @@ class EngineConfig:
 
 
 class BatchedSearcher:
-    """Default backend: the fused local batched path."""
+    """Default backend: the fused local batched path.
+
+    Precomputes the database envelopes at ``config.band`` so every
+    serving-path LB_Keogh2 is an O(m) gather+compare instead of an
+    O(m·r) per-query envelope (DESIGN.md §3); ``SSHIndex.insert`` keeps
+    the cache aligned under streaming inserts.
+    """
 
     def __init__(self, index: SSHIndex, config: EngineConfig):
         self.index = index
         self.config = config
+        if config.band is not None and config.use_lb_cascade \
+                and index.series is not None:
+            index.candidate_envelopes(config.band)
 
     def search_batch(self, queries: jnp.ndarray) -> BatchSearchResult:
         c = self.config
@@ -76,7 +92,8 @@ class BatchedSearcher:
             queries, self.index, topk=c.topk, top_c=c.top_c, band=c.band,
             use_lb_cascade=c.use_lb_cascade,
             rank_by_signature=c.rank_by_signature,
-            multiprobe_offsets=c.multiprobe_offsets)
+            multiprobe_offsets=c.multiprobe_offsets,
+            backend=c.backend)
 
     def insert(self, series: jnp.ndarray) -> None:
         self.index.insert(series)
@@ -116,7 +133,7 @@ class DistributedSearcher:
         self._filters = index.fns.filters
         self._query_fn = dist_index.make_query_fn(
             p, mesh, top_c=config.top_c, band=config.band,
-            topk=config.topk, length=length)
+            topk=config.topk, length=length, backend=config.backend)
 
     def search_batch(self, queries: jnp.ndarray) -> BatchSearchResult:
         t0 = time.perf_counter()
@@ -142,6 +159,12 @@ class DistributedSearcher:
         raise NotImplementedError(
             "streaming inserts into a sharded index require a reshard; "
             "rebuild the DistributedSearcher instead")
+
+
+def _lb_fracs(res: BatchSearchResult):
+    """Batch-aggregate LB-cascade pruning fraction for metrics (empty when
+    the backend reports no rerank stats, e.g. the distributed fan-out)."""
+    return [res.stats.lb_pruned_frac] if res.stats is not None else []
 
 
 @dataclasses.dataclass
@@ -282,7 +305,8 @@ class ServingEngine:
             b, [wall] * b, [0.0] * b,
             list(res.pruned_by_hash_frac[:b]),
             list(res.pruned_total_frac[:b]),
-            self._queue.qsize())
+            self._queue.qsize(),
+            lb_pruned_frac=_lb_fracs(res))
         return [res.per_query(i) for i in range(b)]
 
     def insert(self, series: jnp.ndarray) -> None:
@@ -356,4 +380,5 @@ class ServingEngine:
                 [t0 - r.t_enqueue for r in batch],
                 list(res.pruned_by_hash_frac[:len(batch)]),
                 list(res.pruned_total_frac[:len(batch)]),
-                self._queue.qsize())
+                self._queue.qsize(),
+                lb_pruned_frac=_lb_fracs(res))

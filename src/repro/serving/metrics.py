@@ -100,6 +100,7 @@ class ServingMetrics:
         self.batch_size = RunningMean()
         self.pruned_by_hash = RunningMean()
         self.pruned_total = RunningMean()
+        self.lb_pruned = RunningMean()     # LB-cascade fraction of top-C
         self.requests_total = 0
         self.batches_total = 0
         self.inserts_total = 0
@@ -116,7 +117,7 @@ class ServingMetrics:
 
     def on_batch(self, batch_size: int, latencies_s, queue_waits_s,
                  pruned_by_hash_frac, pruned_total_frac,
-                 depth_after: int) -> None:
+                 depth_after: int, lb_pruned_frac=()) -> None:
         with self._lock:
             self.batches_total += 1
             self.requests_total += batch_size
@@ -131,6 +132,8 @@ class ServingMetrics:
                 self.pruned_by_hash.record(f)
             for f in pruned_total_frac:
                 self.pruned_total.record(f)
+            for f in lb_pruned_frac:
+                self.lb_pruned.record(f)
 
     def on_insert(self, n_series: int) -> None:
         with self._lock:
@@ -152,6 +155,7 @@ class ServingMetrics:
                 "throughput_qps": self.throughput.rate(),
                 "pruned_by_hash_frac_mean": self.pruned_by_hash.mean,
                 "pruned_total_frac_mean": self.pruned_total.mean,
+                "lb_pruned_frac_mean": self.lb_pruned.mean,
             }
 
     def format(self) -> str:

@@ -150,6 +150,18 @@ def test_ucr_search_is_exact(db):
     np.testing.assert_allclose(res.dists, gd, rtol=1e-4)
 
 
+def test_ucr_search_unconstrained_is_exact(db):
+    """band=None: envelope bounds at a finite radius are NOT sound for
+    unconstrained DTW, so the cascade must fall back to LB_Kim only —
+    survivors then provably contain the true top-k."""
+    q = db[55]
+    small = db[:400]
+    res = ucr_search(q, small, topk=5, band=None)
+    gold, gd = brute_force_topk(q, small, 5, band=None)
+    assert precision_at_k(res.ids, gold, 5) == 1.0
+    np.testing.assert_allclose(res.dists, gd, rtol=1e-4)
+
+
 def test_srp_fails_on_warping(db):
     """Paper Table 2: SRP (no alignment) ranks far worse than SSH."""
     q = db[800]

@@ -12,8 +12,12 @@ except ImportError:  # property tests skip below; the sweep tests still run
 
 from repro.kernels import ops, ref
 from repro.kernels.collision_count import collision_count
-from repro.kernels.dtw_wavefront import dtw_wavefront
+from repro.kernels.dtw_wavefront import dtw_wavefront, dtw_wavefront_pairs
 from repro.kernels.sketch_conv import sketch_conv
+
+# every test here exercises a Pallas kernel body in interpret mode —
+# CI runs them as a dedicated `pytest -m kernels` job (junit upload)
+pytestmark = pytest.mark.kernels
 
 
 @pytest.mark.parametrize("b,m,w,f,step", [
@@ -71,6 +75,32 @@ else:
         want = ref.dtw_wavefront_ref(q, cands, band=band)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("p,m,band", [
+    (5, 32, 4), (130, 24, 8), (3, 40, 39), (1, 16, 2), (256, 24, 3),
+])
+def test_dtw_wavefront_pairs_vs_ref(p, m, band, rng):
+    """Row-aligned pairs kernel (one query per lane) == per-row oracle."""
+    qs = jnp.asarray(rng.normal(size=(p, m)).astype(np.float32))
+    cs = jnp.asarray(rng.normal(size=(p, m)).astype(np.float32))
+    got = dtw_wavefront_pairs(qs, cs, band, interpret=True)
+    want = ref.dtw_pairs_ref(qs, cs, band=band)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dtw_wavefront_pairs_lane_invariance(rng):
+    """A pair's value equals the single-query kernel's value for the same
+    (query, candidate) — the per-lane DP is lane-position independent,
+    which is what makes batched and sequential re-ranks bit-identical."""
+    m, band = 28, 5
+    q = jnp.asarray(rng.normal(size=m).astype(np.float32))
+    cs = jnp.asarray(rng.normal(size=(7, m)).astype(np.float32))
+    single = dtw_wavefront(q, cs, band, interpret=True)
+    pairs = dtw_wavefront_pairs(jnp.broadcast_to(q, cs.shape), cs, band,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(single), np.asarray(pairs))
 
 
 @pytest.mark.parametrize("n,k", [(300, 20), (128, 7), (1000, 40), (64, 64)])
