@@ -76,6 +76,17 @@ def band_for(length: int) -> int:
     return max(4, length // 20)        # UCR-suite 5% convention
 
 
+def search_config(kind: str, length: int, **overrides):
+    """The arch registry's SearchConfig at the 5% band for ``length``.
+
+    The single source of topk/top_c/band/multiprobe defaults for every
+    benchmark (no hand-copied knob tuples); per-bench policy goes through
+    ``overrides``.
+    """
+    from repro.configs import get_arch
+    return get_arch(f"ssh-{kind}").search_config(length=length, **overrides)
+
+
 def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3, **kw):
     for _ in range(warmup):
         out = fn(*args, **kw)

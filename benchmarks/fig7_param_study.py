@@ -10,7 +10,7 @@ import numpy as np
 
 from benchmarks.common import (PARAMS, band_for,
                                dataset_cached as dataset,
-                               gold_topk_cached, emit)
+                               gold_topk_cached, emit, search_config)
 from repro.core import (SSHIndex, brute_force_topk, precision_at_k,
                         ssh_search)
 
@@ -50,10 +50,11 @@ def _study(kind: str, param: str, values) -> None:
         index = SSHIndex.build(db, params)
         jnp.asarray(index.signatures).block_until_ready()
         t_build = time.perf_counter() - t0
-        precs = [precision_at_k(
-            ssh_search(q, index, topk=10, top_c=512, band=band,
-                       multiprobe_offsets=params.step).ids, g, 10)
-            for q, g in zip(queries, golds)]
+        # multiprobe tracks the *swept* stride (δ-residue classes)
+        cfg = search_config(kind, LENGTH,
+                            multiprobe_offsets=params.step)
+        precs = [precision_at_k(ssh_search(q, index, config=cfg).ids, g, 10)
+                 for q, g in zip(queries, golds)]
         emit(f"fig_param/{kind}/{param}={v}",
              t_build / db.shape[0] * 1e6,
              {"precision_at10": round(float(np.mean(precs)), 3),

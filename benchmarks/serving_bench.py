@@ -43,18 +43,24 @@ os.environ.setdefault(
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (PARAMS, band_for, dataset_cached as dataset,
-                               emit)
+from benchmarks.common import (PARAMS, dataset_cached as dataset,
+                               emit, search_config)
 from repro.core import SSHIndex, ssh_search
-from repro.serving import EngineConfig, ServingEngine
+from repro.serving import ServingEngine
 
 BATCH_SIZES = (1, 2, 4, 8)
 N_WORK_QUERIES = 64          # workload size (divisible by every batch size)
 N_ROUNDS = 10                # round-robin passes; each cell keeps its best
 # top_c=128: the DTW re-rank is batch-size-independent work, so the cell
 # ranking rides on the amortized fixed costs (dispatch, signatures, probe);
-# a leaner candidate set keeps that fraction above CPU timer noise
-TOPK, TOP_C = 10, 128
+# a leaner candidate set keeps that fraction above CPU timer noise.
+# single-probe: the bench ranks batching, not recall
+TOP_C = 128
+
+
+def _bench_config(kind: str, length: int, **overrides):
+    return search_config(kind, length, top_c=TOP_C,
+                         multiprobe_offsets=1, **overrides)
 
 
 def _workload(db, n: int) -> jnp.ndarray:
@@ -63,28 +69,26 @@ def _workload(db, n: int) -> jnp.ndarray:
     return db[jnp.asarray(rng.integers(0, db.shape[0], n))]
 
 
-def _time_sequential(queries, index, band):
+def _time_sequential(queries, index, cfg):
     """(cold_seconds, warm_seconds) over the whole workload."""
     t0 = time.perf_counter()
     for q in queries:
-        ssh_search(q, index, topk=TOPK, top_c=TOP_C, band=band)
+        ssh_search(q, index, config=cfg)
     cold = time.perf_counter() - t0
     warm = float("inf")
     for _ in range(N_ROUNDS // 2):
         t0 = time.perf_counter()
         for q in queries:
-            ssh_search(q, index, topk=TOPK, top_c=TOP_C, band=band)
+            ssh_search(q, index, config=cfg)
         warm = min(warm, time.perf_counter() - t0)
     return cold, warm
 
 
-def _time_batched(queries, index, band):
+def _time_batched(queries, index, base_cfg):
     """{batch: Σ per-block best seconds} measured round-robin."""
     cells = {}
     for batch in BATCH_SIZES:
-        cfg = EngineConfig(topk=TOPK, top_c=TOP_C, band=band,
-                           max_batch=batch)
-        engine = ServingEngine(index, cfg)
+        engine = ServingEngine(index, base_cfg.replace(max_batch=batch))
         blocks = [queries[i:i + batch]
                   for i in range(0, len(queries), batch)]
         for blk in blocks:                     # warm the compiled chunks
@@ -107,18 +111,18 @@ def run() -> None:
         params = PARAMS[kind]
         length = 128
         db, _ = dataset(kind, length)
-        band = band_for(length)
+        cfg = _bench_config(kind, length)
         index = SSHIndex.build(db, params)
         queries = _workload(db, N_WORK_QUERIES)
         n = N_WORK_QUERIES
 
-        t_cold, t_warm = _time_sequential(queries, index, band)
+        t_cold, t_warm = _time_sequential(queries, index, cfg)
         emit(f"serving/{kind}/len{length}/sequential_cold", t_cold / n * 1e6,
              {"qps": round(n / t_cold, 2), "n_queries": n})
         emit(f"serving/{kind}/len{length}/sequential_warm", t_warm / n * 1e6,
              {"qps": round(n / t_warm, 2), "n_queries": n})
 
-        times, lb_fracs = _time_batched(queries, index, band)
+        times, lb_fracs = _time_batched(queries, index, cfg)
         prev_qps = 0.0
         for batch in BATCH_SIZES:
             qps = n / times[batch]

@@ -6,7 +6,8 @@ import jax
 import numpy as np
 
 from benchmarks.common import (LENGTHS, PARAMS, band_for,
-                               dataset_cached, gold_topk_cached, emit)
+                               dataset_cached, gold_topk_cached, emit,
+                               search_config)
 from repro.core import (SSHIndex, brute_force_topk, ndcg_at_k,
                         precision_at_k, srp_search, ssh_search)
 from repro.core.srp import make_srp, srp_bits
@@ -24,11 +25,11 @@ def run() -> None:
             planes = make_srp(jax.random.PRNGKey(0), 64, length)
             db_bits = srp_bits(db, planes)
             for k in KS:
+                cfg = search_config(kind, length, topk=k)
                 ssh_p, ssh_n, srp_p = [], [], []
                 golds = gold_topk_cached(kind, length, k, band)
                 for q, gold in zip(queries, golds):
-                    res = ssh_search(q, index, topk=k, top_c=512, band=band,
-                                     multiprobe_offsets=params.step)
+                    res = ssh_search(q, index, config=cfg)
                     ssh_p.append(precision_at_k(res.ids, gold, k))
                     ssh_n.append(ndcg_at_k(res.ids, gold, k))
                     res2 = srp_search(q, db, planes, db_bits, topk=k)

@@ -6,8 +6,10 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (LENGTHS, PARAMS, band_for,
-                               dataset_cached as dataset, emit, timed)
-from repro.core import SSHIndex, brute_force_topk, ssh_search, ucr_search
+                               dataset_cached as dataset, emit, timed,
+                               search_config)
+from repro.core import brute_force_topk, ucr_search
+from repro.db import TimeSeriesDB
 
 
 def run() -> None:
@@ -16,14 +18,13 @@ def run() -> None:
         for length in LENGTHS:
             db, queries = dataset(kind, length)
             band = band_for(length)
-            # envelope precompute at build time: LB_Keogh2 needs no
-            # per-query candidate envelopes (DESIGN.md §3)
-            index = SSHIndex.build(db, params, envelope_band=band)
+            # facade build precomputes the envelopes at config.band:
+            # LB_Keogh2 needs no per-query candidate envelopes (§3);
+            # the "local" searcher is the sequential path under timing
+            cfg = search_config(kind, length, searcher="local")
+            tsdb = TimeSeriesDB.build(db, params, cfg)
             q = queries[0]
-            res, t_ssh = timed(
-                lambda: ssh_search(q, index, topk=10, top_c=512, band=band,
-                                   multiprobe_offsets=params.step),
-                warmup=1, iters=2)
+            res, t_ssh = timed(lambda: tsdb.search(q), warmup=1, iters=2)
             _, t_ucr = timed(
                 lambda: ucr_search(q, db, topk=10, band=band),
                 warmup=1, iters=2)

@@ -5,7 +5,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (LENGTHS, PARAMS, band_for,
-                               dataset_cached as dataset, emit)
+                               dataset_cached as dataset, emit,
+                               search_config)
 from repro.core import SSHIndex, ssh_search, ucr_search
 
 
@@ -16,11 +17,10 @@ def run() -> None:
             db, queries = dataset(kind, length)
             band = band_for(length)
             index = SSHIndex.build(db, params)
+            cfg = search_config(kind, length)   # cascade on by default
             hash_only, full, ucr = [], [], []
             for q in queries:
-                res = ssh_search(q, index, topk=10, top_c=512, band=band,
-                                 use_lb_cascade=True,
-                                 multiprobe_offsets=params.step)
+                res = ssh_search(q, index, config=cfg)
                 hash_only.append(res.pruned_by_hash_frac)
                 full.append(res.pruned_total_frac)
                 ucr.append(ucr_search(q, db, topk=10,

@@ -14,9 +14,11 @@ if "xla_force_host_platform_device_count" not in os.environ.get(
 import jax
 import jax.numpy as jnp
 
+from repro.configs import get_arch
 from repro.core import SSHParams
 from repro.core.index import SSHFunctions
 from repro.data.timeseries import extract_subsequences, synthetic_ecg
+from repro.db import TimeSeriesDB
 from repro.distributed.dist_index import (build_sharded, index_shardings,
                                           make_query_fn)
 
@@ -34,6 +36,11 @@ def main() -> None:
     params = SSHParams(window=32, step=3, ngram=10, num_hashes=40,
                        num_tables=20)
     fns = SSHFunctions.create(params)
+    # search knobs from the registry: one config drives the sharded query
+    # fn below AND the facade route (no hand-plumbed top_c/band tuples);
+    # the shard_map probe is single-probe by construction
+    config = get_arch("ssh-ecg").search_config(length=128, topk=5,
+                                               multiprobe_offsets=1)
 
     # shard the database, build signatures locally on every shard
     series_sh, sigs_sh = index_shardings(mesh)
@@ -43,11 +50,20 @@ def main() -> None:
     print(f"sharded signatures: {sigs.shape} on {n_dev} shards")
 
     # one query: local probe -> local DTW re-rank -> global top-k
-    qfn = make_query_fn(params, mesh, top_c=256, band=8, topk=5, length=128)
+    qfn = make_query_fn(params, mesh, length=128, config=config)
     ids, dists = qfn(series, sigs, fns.filters, fns.cws._asdict(),
                      series[4321])
     print(f"global top-5 ids: {ids}  (dists {jnp.round(dists, 4)})")
     assert int(ids[0]) == 4321, "self-match must rank first"
+
+    # same answer through the facade: searcher="distributed" shards the
+    # index over the mesh behind the TimeSeriesDB API
+    db = TimeSeriesDB.build(series, params,
+                            config.replace(searcher="distributed"),
+                            mesh=mesh)
+    res = db.search(series[4321])
+    assert int(res.ids[0]) == 4321
+    print(f"facade (searcher='distributed') top-5: {res.ids}")
     print("distributed search OK")
 
 

@@ -1,6 +1,12 @@
-"""End-to-end driver: index a large stream, run a query batch, report the
-paper's Table-3/4 metrics (time + pruning + accuracy), with checkpointed
-index build (fault-tolerant restart).
+"""End-to-end driver: index a large stream, persist the database, run a
+query batch, report the paper's Table-3/4 metrics (time + pruning +
+accuracy).
+
+Persistence replaces rebuild-on-restart: the first run builds the index
+(paper Alg. 1) and saves it with ``TimeSeriesDB.save``; every later run
+``TimeSeriesDB.load``-s it and answers bit-identical top-k without
+paying the O(N) signature build again — the operational payoff of the
+paper's retraining-free hashing.
 
     PYTHONPATH=src python examples/index_and_search.py [--points 40000]
 """
@@ -10,11 +16,11 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import Checkpointer
-from repro.core import (SSHParams, SSHIndex, brute_force_topk, ndcg_at_k,
-                        precision_at_k, ssh_search, ucr_search)
-from repro.core.index import SSHFunctions, band_keys, build_signatures
+from repro.configs import get_arch
+from repro.core import (brute_force_topk, ndcg_at_k, precision_at_k,
+                        ucr_search)
 from repro.data.timeseries import extract_subsequences, synthetic_ecg
+from repro.db import TimeSeriesDB, is_database_dir
 
 
 def main() -> None:
@@ -22,44 +28,46 @@ def main() -> None:
     ap.add_argument("--points", type=int, default=20000)
     ap.add_argument("--length", type=int, default=256)
     ap.add_argument("--queries", type=int, default=3)
-    ap.add_argument("--ckpt-dir", type=str, default="/tmp/ssh_index_ckpt")
+    ap.add_argument("--db-dir", type=str, default="/tmp/ssh_db_example")
+    ap.add_argument("--rebuild", action="store_true",
+                    help="ignore a saved database and rebuild")
     args = ap.parse_args()
 
     stream = synthetic_ecg(args.points, seed=7)
-    db = jnp.asarray(extract_subsequences(stream, args.length, stride=1,
-                                          znorm=True))
-    params = SSHParams(window=80, step=3, ngram=15, num_hashes=40,
-                       num_tables=20)
+    series = jnp.asarray(extract_subsequences(stream, args.length, stride=1,
+                                              znorm=True))
+    arch = get_arch("ssh-ecg")
+    config = arch.search_config(length=args.length)
 
-    # --- index build with checkpoint/restart ---
-    ck = Checkpointer(args.ckpt_dir, keep=2)
-    fns = SSHFunctions.create(params)
+    # --- build once, load forever ---
     t0 = time.time()
-    step, restored = ck.restore_latest({"sigs": jnp.zeros(
-        (db.shape[0], params.num_hashes), jnp.int32)})
-    if step is not None:
-        print(f"restored index checkpoint at step {step}")
-        sigs = restored["sigs"]
+    if is_database_dir(args.db_dir) and not args.rebuild:
+        db = TimeSeriesDB.load(args.db_dir)
+        if len(db) != series.shape[0]:       # stale save (different --points)
+            db = None
+        else:
+            print(f"loaded database from {args.db_dir} "
+                  f"in {time.time() - t0:.1f}s")
     else:
-        sigs = build_signatures(db, fns)
-        ck.save(1, {"sigs": sigs})
-    index = SSHIndex(fns=fns, signatures=sigs,
-                     keys=band_keys(sigs, params), series=db)
-    print(f"index over {db.shape[0]} series ready in {time.time()-t0:.1f}s")
+        db = None
+    if db is None:
+        db = TimeSeriesDB.build(series, arch.config, config)
+        db.save(args.db_dir)
+        print(f"built + saved database ({len(db)} series) "
+              f"in {time.time() - t0:.1f}s")
 
     # --- queries ---
-    band = max(4, args.length // 20)
+    band = db.config.band
     rng = np.random.default_rng(0)
-    for qi in rng.integers(0, db.shape[0], args.queries):
-        q = db[int(qi)]
+    for qi in rng.integers(0, series.shape[0], args.queries):
+        q = series[int(qi)]
         t0 = time.time()
-        res = ssh_search(q, index, topk=10, top_c=512, band=band,
-                         multiprobe_offsets=params.step)
+        res = db.search(q)
         t_ssh = time.time() - t0
         t0 = time.time()
-        ucr = ucr_search(q, db, topk=10, band=band)
+        ucr = ucr_search(q, series, topk=10, band=band)
         t_ucr = time.time() - t0
-        gold, _ = brute_force_topk(q, db, 10, band=band)
+        gold, _ = brute_force_topk(q, series, 10, band=band)
         print(f"q={qi}: ssh {t_ssh:.2f}s (pruned {res.pruned_total_frac:.1%},"
               f" prec {precision_at_k(res.ids, gold, 10):.2f},"
               f" ndcg {ndcg_at_k(res.ids, gold, 10):.2f}) | "

@@ -1,38 +1,50 @@
-"""Quickstart: build an SSH index over an ECG stream and search it.
+"""Quickstart: build an SSH database over an ECG stream and search it.
+
+The FAISS-style facade (``repro.db``): one ``SearchConfig`` carries every
+search-time knob, one ``TimeSeriesDB`` answers build / search / add /
+save / load.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 
-from repro.core import (SSHParams, SSHIndex, brute_force_topk,
-                        precision_at_k, ssh_search)
+from repro.configs import get_arch
+from repro.core import SSHParams, brute_force_topk, precision_at_k
 from repro.data.timeseries import extract_subsequences, synthetic_ecg
+from repro.db import TimeSeriesDB
 
 
 def main() -> None:
     # 1. a long ECG stream, sliced into overlapping subsequences (paper §5.1)
     stream = synthetic_ecg(8000, seed=42)
-    db = jnp.asarray(extract_subsequences(stream, 256, stride=1, znorm=True))
-    print(f"database: {db.shape[0]} subsequences of length {db.shape[1]}")
+    series = jnp.asarray(extract_subsequences(stream, 256, stride=1,
+                                              znorm=True))
+    print(f"database: {series.shape[0]} subsequences of length "
+          f"{series.shape[1]}")
 
-    # 2. build the index — Sketch (W=48, δ=3) → Shingle (n=12) → Hash (K=40)
+    # 2. index structure — Sketch (W=48, δ=3) → Shingle (n=12) → Hash (K=40)
+    #    search policy — from the arch registry, banded for length 256
     params = SSHParams(window=48, step=3, ngram=12, num_hashes=40,
                        num_tables=20)
-    index = SSHIndex.build(db, params)
-    print(f"signatures: {index.signatures.shape}")
+    config = get_arch("ssh-ecg").search_config(length=256)
+    db = TimeSeriesDB.build(series, params, config)
+    print(f"built {db!r}")
 
     # 3. query — hash, probe, DTW re-rank (paper Alg. 2)
-    query = db[1234]
-    result = ssh_search(query, index, topk=10, top_c=256, band=12,
-                        multiprobe_offsets=params.step)
+    query = series[1234]
+    result = db.search(query)
     print(f"top-10 ids: {result.ids}")
     print(f"pruned {result.pruned_total_frac:.1%} of the database; "
           f"only {result.dtw_evals} DTW evaluations")
 
     # 4. compare with the exact answer
-    gold, _ = brute_force_topk(query, db, 10, band=12)
+    gold, _ = brute_force_topk(query, series, 10, band=config.band)
     print(f"precision@10 vs exact DTW: "
           f"{precision_at_k(result.ids, gold, 10):.2f}")
+
+    # 5. streaming insert — data-independent hashing needs no retraining
+    db.add(series[:3] * 1.01)
+    print(f"after add: {len(db)} series indexed")
 
 
 if __name__ == "__main__":

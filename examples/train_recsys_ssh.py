@@ -9,8 +9,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core import SSHParams, SSHIndex, ssh_search
+from repro.core import SSHParams
 from repro.data.recsys_data import seq_batch
+from repro.db import SearchConfig, TimeSeriesDB
 from repro.launch import steps
 
 
@@ -38,8 +39,10 @@ def main() -> None:
     traj = (traj - traj.mean(1, keepdims=True)) / (traj.std(1, keepdims=True)
                                                    + 1e-6)
     ssh = SSHParams(window=8, step=1, ngram=6, num_hashes=20, num_tables=20)
-    index = SSHIndex.build(traj, ssh)
-    res = ssh_search(traj[7], index, topk=5, top_c=64, band=4)
+    # short trajectories: a tight band; top_c defaults clamp to the 512
+    # users, so only topk/band need setting
+    db = TimeSeriesDB.build(traj, ssh, SearchConfig(topk=5, band=4))
+    res = db.search(traj[7])
     print(f"users most similar to user 7 (by behavior trajectory): "
           f"{res.ids}")
     assert res.ids[0] == 7

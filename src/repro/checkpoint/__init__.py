@@ -1,5 +1,6 @@
-from repro.checkpoint.checkpointer import (Checkpointer, latest_step,
-                                           save_checkpoint, restore_checkpoint)
+from repro.checkpoint.checkpointer import (Checkpointer, all_steps,
+                                           latest_step, save_checkpoint,
+                                           restore_checkpoint)
 
-__all__ = ["Checkpointer", "latest_step", "save_checkpoint",
+__all__ = ["Checkpointer", "all_steps", "latest_step", "save_checkpoint",
            "restore_checkpoint"]

@@ -41,11 +41,28 @@ class ArchDef:
     shapes: Dict[str, ShapeCell]
     # optional per-shape config override (e.g. GNN d_feat differs per cell)
     config_for_shape: Optional[Callable[[Any, str], Any]] = None
+    # search-time defaults (ssh family): a repro.db.SearchConfig — the one
+    # place benchmarks, examples, and serve.py read topk/top_c/band from
+    search_defaults: Optional[Any] = None
 
     def cell_config(self, shape: str) -> Any:
         if self.config_for_shape is not None:
             return self.config_for_shape(self.config, shape)
         return self.config
+
+    def search_config(self, length: Optional[int] = None, **overrides):
+        """The arch's ``SearchConfig``, optionally adapted to a series
+        length (UCR-suite 5% band convention: ``max(4, length // 20)``)
+        with per-call overrides.  Raises for arches without search
+        defaults (non-ssh families)."""
+        if self.search_defaults is None:
+            raise ValueError(
+                f"arch {self.name!r} (family {self.family!r}) defines no "
+                "search defaults; search_config() is for ssh arches")
+        cfg = self.search_defaults
+        if length is not None:
+            cfg = dataclasses.replace(cfg, band=max(4, length // 20))
+        return cfg.replace(**overrides) if overrides else cfg
 
     def input_specs(self, shape: str) -> Tuple[str, Dict[str, Any]]:
         cell = self.shapes[shape]

@@ -8,12 +8,20 @@ import dataclasses
 
 from repro.configs.base import ArchDef, ShapeCell
 from repro.core.index import SSHParams
+from repro.db.config import SearchConfig
 
 CONFIG = SSHParams(window=80, step=3, ngram=15, num_hashes=40,
                    num_tables=20, seed=7)
 
 SMOKE = dataclasses.replace(CONFIG, window=24, step=3, ngram=8,
                             num_hashes=20, num_tables=20)
+
+# Search-time defaults (paper §5.3 evaluation setting): benchmarks,
+# examples, and serve.py read these via ARCH.search_config(length=...)
+# instead of hand-copying topk/top_c/band tuples.  band=6 is the 5%
+# convention at the serving length 128; search_config(length=L) rescales.
+SEARCH = SearchConfig(topk=10, top_c=512, band=6,
+                      multiprobe_offsets=CONFIG.step)
 
 SHAPES = {
     "build_2048": ShapeCell("build", {"batch": 65536, "length": 2048}),
@@ -26,4 +34,5 @@ SHAPES = {
 }
 
 ARCH = ArchDef(name="ssh-ecg", family="ssh", config=CONFIG,
-               smoke_config=SMOKE, shapes=SHAPES)
+               smoke_config=SMOKE, shapes=SHAPES,
+               search_defaults=SEARCH)

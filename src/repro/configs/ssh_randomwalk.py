@@ -3,12 +3,17 @@ import dataclasses
 
 from repro.configs.base import ArchDef, ShapeCell
 from repro.core.index import SSHParams
+from repro.db.config import SearchConfig
 
 CONFIG = SSHParams(window=30, step=5, ngram=15, num_hashes=40,
                    num_tables=20, seed=11)
 
 SMOKE = dataclasses.replace(CONFIG, window=16, step=5, ngram=8,
                             num_hashes=20, num_tables=20)
+
+# Search-time defaults; see ssh_ecg.py — read via ARCH.search_config().
+SEARCH = SearchConfig(topk=10, top_c=512, band=6,
+                      multiprobe_offsets=CONFIG.step)
 
 SHAPES = {
     "build_2048": ShapeCell("build", {"batch": 65536, "length": 2048}),
@@ -18,4 +23,5 @@ SHAPES = {
 }
 
 ARCH = ArchDef(name="ssh-randomwalk", family="ssh", config=CONFIG,
-               smoke_config=SMOKE, shapes=SHAPES)
+               smoke_config=SMOKE, shapes=SHAPES,
+               search_defaults=SEARCH)

@@ -162,11 +162,17 @@ def _gathered_env(index: SSHIndex, ids, band: int):
 
 def rerank(query: jnp.ndarray, cand_ids: jnp.ndarray, index: SSHIndex,
            topk: int, band: Optional[int], *, use_lb_cascade: bool = True,
-           backend: str = "auto"):
+           backend: str = "auto", seed_size: Optional[int] = None):
     """Candidate ids -> (global ids, dists, stats), best first.
 
     Stage 2+3 of Alg. 2 for one query: seed DTW → LB cascade → survivor
-    DTW, every DTW through the ``backend`` knob.
+    DTW, every DTW through the ``backend`` knob.  ``seed_size`` widens
+    the seeded set beyond ``topk`` (``None`` — the default — seeds
+    exactly ``topk``): the threshold becomes the topk-th best of a
+    larger sample, i.e. tighter, buying more cascade pruning for more
+    up-front DTW.  Top-k results are unchanged either way — the
+    threshold is always a valid upper bound on the final k-th distance,
+    so a pruned candidate can never belong to the answer set.
     """
     backend_used = ops.backend_name(ops.resolve_backend(backend))
     cands = index.series[cand_ids]
@@ -174,13 +180,17 @@ def rerank(query: jnp.ndarray, cand_ids: jnp.ndarray, index: SSHIndex,
     stats = SearchStats(n_in=n_hash, backend=backend_used)
 
     if use_lb_cascade and band is not None and n_hash > topk:
-        # best-so-far from an initial DTW over the top-``topk`` hash hits
-        seed = dtw_candidates(query, cands[:topk], band, backend)
-        best = jnp.max(seed)
+        # best-so-far: topk-th best DTW over the seeded best-hash hits.
+        # The seed is clamped to >= topk (validate() also enforces it):
+        # a smaller seed would make the threshold an upper bound on a
+        # better-than-kth distance, unsoundly pruning true answers.
+        s = min(max(seed_size or 0, topk), n_hash)
+        seed = dtw_candidates(query, cands[:s], band, backend)
+        best = jnp.sort(seed)[min(topk, s) - 1]
         env = _gathered_env(index, cand_ids, band)
         k1, k2, k3 = _staged_keep(query, cands, band, best, env)
         forced = np.zeros(n_hash, bool)
-        forced[:topk] = True                  # never drop the seeded set
+        forced[:s] = True                     # never drop the seeded set
         keep, p1, p2, p3, fk = _count_stages(k1, k2, k3, forced)
         stats.pruned_kim, stats.pruned_keogh, stats.pruned_keogh2 = \
             p1, p2, p3
@@ -203,7 +213,8 @@ def rerank(query: jnp.ndarray, cand_ids: jnp.ndarray, index: SSHIndex,
 
 def rerank_batch(queries: jnp.ndarray, ids: np.ndarray, valid: np.ndarray,
                  index: SSHIndex, topk: int, band: Optional[int], *,
-                 use_lb_cascade: bool = True, backend: str = "auto"):
+                 use_lb_cascade: bool = True, backend: str = "auto",
+                 seed_size: Optional[int] = None):
     """Batched stage 2+3 over per-query candidate blocks.
 
     queries (B, m); ids (B, C) int candidate ids; valid (B, C) bool.
@@ -223,13 +234,23 @@ def rerank_batch(queries: jnp.ndarray, ids: np.ndarray, valid: np.ndarray,
     n_hash = valid.sum(axis=1)                            # (B,)
     stats = SearchStats(n_in=int(valid.sum()), backend=backend_used)
     k_out = min(topk, c)
-    seed_k = min(topk, c)
+    # seed clamped to >= topk for a sound threshold (see rerank())
+    seed_k = min(max(seed_size or 0, topk), c)
 
     if use_lb_cascade and band is not None:
         seed_series = index.series[jnp.asarray(ids[:, :seed_k])]
         seed_d = np.asarray(_seed_dtw_backend(queries, seed_series, band,
                                               backend))
-        best = jnp.asarray(seed_d.max(axis=1))            # per-query kth-best
+        if seed_size is not None:
+            # a widened seed may overrun a row's valid candidates (only
+            # possible when seed_k > topk); mask those slots so the
+            # threshold matches the sequential min(seed_size, n_hash)
+            col = np.arange(seed_k)[None, :]
+            seed_d = np.where(col < n_hash[:, None], seed_d, np.inf)
+            kth = np.sort(seed_d, axis=1)[:, min(topk, seed_k) - 1]
+            best = jnp.asarray(kth.astype(np.float32))
+        else:
+            best = jnp.asarray(seed_d.max(axis=1))        # per-query kth-best
         cand_series = index.series[jnp.asarray(ids)]      # (B, C, m)
         env = _gathered_env(index, ids, band)
         if env is not None:

@@ -19,6 +19,7 @@ from repro.core import rerank as rr
 from repro.core import srp as srp_mod
 from repro.core.index import SSHIndex
 from repro.core.rerank import SearchStats
+from repro.db.config import SearchConfig, config_from_legacy_kwargs
 from repro.kernels import ops
 
 
@@ -88,39 +89,47 @@ def hash_probe(query: jnp.ndarray, index: SSHIndex, top_c: int,
     return cand_ids
 
 
-def ssh_search(query: jnp.ndarray, index: SSHIndex, topk: int = 10,
-               top_c: int = 256, band: Optional[int] = None,
-               use_lb_cascade: bool = True,
-               use_host_buckets: bool = False,
-               rank_by_signature: bool = True,
-               multiprobe_offsets: int = 1,
-               backend: str = "auto") -> SearchResult:
+def ssh_search(query: jnp.ndarray, index: SSHIndex,
+               config: Optional[SearchConfig] = None,
+               **legacy_kwargs) -> SearchResult:
     """Paper Algorithm 2: hash-probe candidates, then DTW re-rank.
 
-    ``use_lb_cascade`` enables the extra UCR-style pruning of hash
-    candidates (Alg. 2 line 10), performed by the unified re-rank
-    pipeline (``repro.core.rerank``).  ``top_c`` bounds the candidate set
-    for the device-scan backend (DESIGN.md §3).  ``rank_by_signature``
-    ranks candidates by agreement over all K raw CWS hashes instead of
-    the L banded bucket keys — strictly finer collision granularity
-    (beyond-paper refinement; set False for the paper-faithful band-key
-    probe).  ``backend`` selects the kernel implementation for every
-    device stage (collision count and DTW): ``"pallas"`` (interpret mode
-    off-TPU), ``"jnp"``, or ``"auto"`` (Pallas on TPU) — top-k results
-    are identical across backends.
+    Canonical form: ``ssh_search(q, index, config=SearchConfig(...))`` —
+    every knob (topk, top_c, band, cascade, multiprobe, host buckets,
+    seed size, kernel backend) lives on the one frozen config consumed
+    by all entry points; see ``repro.db.SearchConfig`` for semantics.
+    The ``TimeSeriesDB`` facade routes here for ``searcher="local"``.
+
+    Deprecation shim (one release): the historical loose-kwarg form
+    ``ssh_search(q, index, topk=..., top_c=..., band=..., ...)`` still
+    works — the kwargs are folded into a ``SearchConfig`` (identical
+    results) under a ``DeprecationWarning``.
     """
+    if config is not None and not isinstance(config, SearchConfig):
+        # legacy positional call ssh_search(q, index, 10): the third
+        # parameter used to be topk — fold it into the kwarg shim
+        legacy_kwargs["topk"] = config
+        config = None
+    if config is None:
+        config = config_from_legacy_kwargs("ssh_search", legacy_kwargs)
+    elif legacy_kwargs:
+        raise TypeError("ssh_search() takes either config= or legacy "
+                        "search kwargs, not both: "
+                        f"{sorted(legacy_kwargs)}")
     t0 = time.perf_counter()
     n = int(index.keys.shape[0])
-    cand_ids = hash_probe(query, index, top_c,
-                          rank_by_signature=rank_by_signature,
-                          multiprobe_offsets=multiprobe_offsets,
-                          use_host_buckets=use_host_buckets, topk=topk,
-                          backend=backend)
+    cand_ids = hash_probe(query, index, config.top_c,
+                          rank_by_signature=config.rank_by_signature,
+                          multiprobe_offsets=config.multiprobe_offsets,
+                          use_host_buckets=config.use_host_buckets,
+                          topk=config.topk, backend=config.backend)
     n_hash = int(cand_ids.shape[0])
 
-    ids, dists, stats = rr.rerank(query, cand_ids, index, topk, band,
-                                  use_lb_cascade=use_lb_cascade,
-                                  backend=backend)
+    ids, dists, stats = rr.rerank(query, cand_ids, index, config.topk,
+                                  config.band,
+                                  use_lb_cascade=config.use_lb_cascade,
+                                  backend=config.backend,
+                                  seed_size=config.seed_size)
     n_final = stats.n_dtw
     wall = time.perf_counter() - t0
     return SearchResult(

@@ -1,0 +1,43 @@
+"""repro.db — FAISS-style database facade for the SSH index (DESIGN.md §6).
+
+Public API:
+  SearchConfig                       — every search-time knob, one object
+  TimeSeriesDB                       — build / add / search / search_batch
+                                       / save / load facade
+  register_searcher / available_searchers / make_searcher
+                                     — pluggable searcher backends
+  save_database / load_database      — index persistence primitives
+
+``SearchConfig`` is imported eagerly (it sits below the legacy entry
+points in the import graph — ``repro.core.search`` and
+``repro.serving`` shim through it); everything touching the pipeline is
+loaded lazily via PEP 562 so ``from repro.db.config import SearchConfig``
+never drags the whole serving stack in.
+"""
+from repro.db.config import SearchConfig
+
+_LAZY = {
+    "TimeSeriesDB": ("repro.db.database", "TimeSeriesDB"),
+    "register_searcher": ("repro.db.registry", "register_searcher"),
+    "available_searchers": ("repro.db.registry", "available_searchers"),
+    "make_searcher": ("repro.db.registry", "make_searcher"),
+    "save_database": ("repro.db.persistence", "save_database"),
+    "load_database": ("repro.db.persistence", "load_database"),
+    "is_database_dir": ("repro.db.persistence", "is_database_dir"),
+}
+
+__all__ = ["SearchConfig", *_LAZY]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        module, attr = _LAZY[name]
+        value = getattr(importlib.import_module(module), attr)
+        globals()[name] = value          # cache for subsequent lookups
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

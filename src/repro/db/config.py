@@ -1,0 +1,189 @@
+"""SearchConfig — the one object holding every search-time knob.
+
+FAISS-style split (DESIGN.md §6): *build-time* structure lives in
+``SSHParams`` (window, stride, shingle length, number of hashes/tables —
+what the index *is*), while everything a query can vary lives here (what
+a query *does*).  Every entry point — ``ssh_search``,
+``ssh_search_batch``, the ``ServingEngine``, the distributed
+``make_query_fn``, and the ``TimeSeriesDB`` facade — consumes this one
+frozen dataclass, so a config tuned in a benchmark can be handed to the
+serving engine verbatim and mean the same thing.
+
+This module is import-light on purpose (no ``repro.core``/``repro.serving``
+imports): the legacy entry points shim through it, so it must sit below
+them in the import graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Dict, List, Optional
+
+#: Searcher backends shipped with :mod:`repro.db.registry`.  Third-party
+#: registrations extend the registry at runtime; ``validate()`` only
+#: rejects names when the registry is importable and disagrees.
+BUILTIN_SEARCHERS = ("local", "batched", "distributed", "engine")
+
+_KERNEL_BACKENDS = ("auto", "pallas", "jnp")
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    """Every search-time knob of the SSH pipeline, in one place.
+
+    Candidate generation (paper Alg. 2 lines 5-9):
+
+    * ``topk`` — results returned per query.
+    * ``top_c`` — hash candidates kept for the re-rank stage (device-scan
+      probe width; DESIGN.md §3).
+    * ``rank_by_signature`` — rank candidates by agreement over all K raw
+      CWS hashes instead of the L banded keys (finer granularity;
+      beyond-paper refinement — set False for the paper-faithful probe).
+    * ``multiprobe_offsets`` — hash the query at each δ-residue shift and
+      take the per-candidate max collision count (recovers the shingle
+      alignment classes the database grid cannot see).
+    * ``use_host_buckets`` — probe the paper-faithful Python dict tables
+      instead of the device scan (reference semantics; ``local`` searcher
+      only).
+
+    Re-rank (Alg. 2 line 10, ``repro.core.rerank``):
+
+    * ``band`` — Sakoe-Chiba radius for the banded DTW; ``None`` means
+      unconstrained DTW and disables the envelope bounds.
+    * ``use_lb_cascade`` — staged LB_Kim → LB_Keogh → LB_Keogh2 pruning
+      of hash candidates before paying full DTW (results unchanged; the
+      bounds are sound).
+    * ``seed_size`` — how many best-hash hits are seed-DTW'd to obtain
+      the pruning threshold (Lemire's two-pass lower-bound idea,
+      arXiv:0811.3301).  ``None`` seeds exactly ``topk`` candidates; a
+      larger seed buys a tighter threshold for more cascade pruning at
+      the cost of more up-front DTW.  Top-k results are unaffected
+      either way (the threshold stays a valid upper bound).
+
+    Execution:
+
+    * ``backend`` — kernel implementation for every device stage
+      (collision count + DTW): "pallas" | "jnp" | "auto" (Pallas on TPU).
+      Results are backend-independent.
+    * ``searcher`` — which registered searcher serves the queries:
+      "local" (sequential re-rank), "batched" (fused batched path),
+      "distributed" (shard fan-out over a mesh), "engine" (dynamic
+      batcher).  See ``repro.db.registry``.
+    * ``max_batch`` / ``max_wait_ms`` — dynamic-batcher policy
+      (latency/throughput trade-off; "engine" searcher and
+      ``ServingEngine`` only).
+    """
+
+    topk: int = 10
+    top_c: int = 256
+    band: Optional[int] = None
+    use_lb_cascade: bool = True
+    rank_by_signature: bool = True
+    multiprobe_offsets: int = 1
+    use_host_buckets: bool = False
+    seed_size: Optional[int] = None
+    backend: str = "auto"
+    searcher: str = "batched"
+    max_batch: int = 8
+    max_wait_ms: float = 2.0
+
+    def __post_init__(self):
+        """Subclass hook (the deprecated ``EngineConfig`` warns here)."""
+
+    # -- validation -------------------------------------------------------
+    def validate(self) -> "SearchConfig":
+        """Raise ``ValueError`` on inconsistent knobs; returns ``self``
+        so call sites can chain (``config.validate()`` at every facade
+        boundary)."""
+        if self.topk < 1:
+            raise ValueError(f"topk must be >= 1, got {self.topk}")
+        if self.top_c < 1:
+            raise ValueError(f"top_c must be >= 1, got {self.top_c}")
+        if self.top_c < self.topk:
+            raise ValueError(
+                f"top_c ({self.top_c}) must be >= topk ({self.topk}); "
+                "the hash stage must supply at least topk candidates")
+        if self.band is not None and self.band < 1:
+            raise ValueError(f"band must be None or >= 1, got {self.band}")
+        if self.multiprobe_offsets < 1:
+            raise ValueError("multiprobe_offsets must be >= 1, got "
+                             f"{self.multiprobe_offsets}")
+        if self.seed_size is not None and self.seed_size < self.topk:
+            raise ValueError(
+                f"seed_size ({self.seed_size}) must be None or >= topk "
+                f"({self.topk}): the cascade threshold is the topk-th "
+                "best of the seeded set, so a smaller seed would prune "
+                "true top-k members")
+        if self.backend not in _KERNEL_BACKENDS:
+            raise ValueError(f"backend must be one of {_KERNEL_BACKENDS}, "
+                             f"got {self.backend!r}")
+        if not isinstance(self.searcher, str) or not self.searcher:
+            raise ValueError(f"searcher must be a non-empty string, "
+                             f"got {self.searcher!r}")
+        if self.use_host_buckets and self.searcher != "local":
+            raise ValueError(
+                "use_host_buckets is only served by the 'local' searcher "
+                f"(got searcher={self.searcher!r}); the batched/"
+                "distributed paths probe the device-side key matrix")
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_wait_ms < 0:
+            raise ValueError(
+                f"max_wait_ms must be >= 0, got {self.max_wait_ms}")
+        return self
+
+    # -- derived ----------------------------------------------------------
+    def replace(self, **changes: Any) -> "SearchConfig":
+        """``dataclasses.replace`` + ``validate`` in one step."""
+        return dataclasses.replace(self, **changes).validate()
+
+    def buckets(self) -> List[int]:
+        """Padded batch sizes for the dynamic batcher: powers of two up
+        to ``max_batch`` (bounds the number of compiled programs)."""
+        out, b = [], 1
+        while b < self.max_batch:
+            out.append(b)
+            b *= 2
+        out.append(self.max_batch)
+        return out
+
+    # -- (de)serialisation (index persistence carries the config) ---------
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "SearchConfig":
+        """Tolerant inverse of ``to_dict``: unknown keys (a config written
+        by a newer release) are dropped with a warning instead of failing
+        the load."""
+        known = {f.name for f in dataclasses.fields(cls)}
+        extra = sorted(set(d) - known)
+        if extra:
+            warnings.warn(f"SearchConfig.from_dict: ignoring unknown "
+                          f"fields {extra}", RuntimeWarning, stacklevel=2)
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+def config_from_legacy_kwargs(caller: str, kwargs: Dict[str, Any],
+                              base: Optional[SearchConfig] = None
+                              ) -> SearchConfig:
+    """Build a ``SearchConfig`` from a legacy loose-kwarg call site.
+
+    Shared by the deprecation shims (``ssh_search``, ``ssh_search_batch``,
+    ``make_query_fn``): warns once per call site that the kwarg form is
+    deprecated, rejects unknown names loudly (a typo'd knob must not be
+    silently dropped), and overlays the kwargs on ``base`` (defaults when
+    None) so shim results are bit-identical to the config form.
+    """
+    known = {f.name for f in dataclasses.fields(SearchConfig)}
+    unknown = sorted(set(kwargs) - known)
+    if unknown:
+        raise TypeError(f"{caller}() got unexpected keyword arguments "
+                        f"{unknown}; known search knobs: {sorted(known)}")
+    if kwargs:
+        warnings.warn(
+            f"passing loose search kwargs to {caller}() is deprecated; "
+            f"pass config=repro.db.SearchConfig(...) instead",
+            DeprecationWarning, stacklevel=3)
+    base = base if base is not None else SearchConfig()
+    return dataclasses.replace(base, **kwargs)

@@ -1,0 +1,207 @@
+"""TimeSeriesDB — the FAISS-style facade over the SSH pipeline.
+
+One object, five verbs::
+
+    from repro.db import SearchConfig, TimeSeriesDB
+
+    cfg = SearchConfig(band=8, searcher="batched")
+    db = TimeSeriesDB.build(series, SSHParams(...), cfg)   # Alg. 1
+    res = db.search(query)                                 # Alg. 2
+    ress = db.search_batch(queries)                        # fused batch
+    db.add(new_series)                                     # streaming
+    db.save("/data/ssh_ecg")                               # persist
+
+    db2 = TimeSeriesDB.load("/data/ssh_ecg")               # restart
+    assert np.array_equal(db2.search(query).ids, res.ids)  # bit-identical
+
+Routing is a config knob, not an API choice: the same ``TimeSeriesDB``
+serves through the sequential re-rank (``searcher="local"``), the fused
+batched path (``"batched"``, default), shard fan-out over a mesh
+(``"distributed"``), or the dynamic-batching engine (``"engine"``) —
+see ``repro.db.registry``.  Legacy entry points (``ssh_search`` kwargs,
+``EngineConfig``) remain as deprecation shims for one release.
+"""
+from __future__ import annotations
+
+from concurrent.futures import Future
+from pathlib import Path
+from typing import List, Optional
+
+import jax.numpy as jnp
+
+from repro.core.index import SSHIndex, SSHParams
+from repro.core.search import SearchResult
+from repro.db import persistence, registry
+from repro.db.config import SearchConfig
+
+
+class TimeSeriesDB:
+    """An SSH index plus the search policy that answers queries over it.
+
+    The searcher backend is constructed lazily on first use and owned by
+    the database (``close()`` — or the context manager — releases it;
+    only the "engine" backend holds a thread).  ``mesh`` is forwarded to
+    mesh-aware searchers ("distributed"); others ignore it.
+    """
+
+    def __init__(self, index: SSHIndex,
+                 config: Optional[SearchConfig] = None, *, mesh=None):
+        self.index = index
+        self.config = (config if config is not None
+                       else SearchConfig()).validate()
+        self.mesh = mesh
+        self._searcher = None
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def build(cls, series: jnp.ndarray, params: SSHParams,
+              config: Optional[SearchConfig] = None, *, mesh=None,
+              batch: int = 256) -> "TimeSeriesDB":
+        """Paper Alg. 1 behind the facade.
+
+        Host buckets are built when the config probes them, and the
+        database envelopes are precomputed at ``config.band`` when the
+        LB cascade will consume them (turns every serving-path LB_Keogh2
+        into a gather+compare — DESIGN.md §3).
+        """
+        config = (config if config is not None else SearchConfig()) \
+            .validate()
+        env_band = config.band if config.use_lb_cascade else None
+        index = SSHIndex.build(
+            jnp.asarray(series), params,
+            with_host_buckets=config.use_host_buckets, batch=batch,
+            envelope_band=env_band)
+        return cls(index, config, mesh=mesh)
+
+    # -- search policy ----------------------------------------------------
+    @property
+    def searcher(self):
+        """The active searcher backend (created on first access)."""
+        if self._searcher is None:
+            self._searcher = registry.make_searcher(
+                self.index, self.config, mesh=self.mesh)
+        return self._searcher
+
+    def reconfigure(self, **changes) -> "TimeSeriesDB":
+        """Swap search-time knobs in place (closes the old searcher).
+
+        ``db.reconfigure(band=8, searcher="engine")`` — the index is
+        untouched; only the policy object changes.  Returns ``self``.
+        """
+        new = self.config.replace(**changes)
+        if self._searcher is not None:
+            self._searcher.close()
+            self._searcher = None
+        self.config = new
+        return self
+
+    def with_config(self, config: SearchConfig) -> "TimeSeriesDB":
+        """A second facade over the *same* index with a different policy
+        (shares storage; each facade owns its own searcher)."""
+        return TimeSeriesDB(self.index, config, mesh=self.mesh)
+
+    # -- queries ----------------------------------------------------------
+    def search(self, query: jnp.ndarray) -> SearchResult:
+        """Top-k for one query through the configured searcher."""
+        return self.searcher.search(jnp.asarray(query))
+
+    def search_batch(self, queries: jnp.ndarray) -> List[SearchResult]:
+        """Per-query top-k for a (B, m) block; results identical to
+        ``search`` on each row (serving equality contract)."""
+        return self.searcher.search_batch(jnp.asarray(queries))
+
+    def submit(self, query: jnp.ndarray) -> Future:
+        """Async search; a real queue on the "engine" backend, an
+        immediately-resolved future elsewhere."""
+        return self.searcher.submit(jnp.asarray(query))
+
+    # -- mutation ---------------------------------------------------------
+    def add(self, series: jnp.ndarray) -> None:
+        """Streaming insert (data-independent hashing ⇒ no retraining).
+
+        Routed through the searcher when one is live — the engine
+        backend serialises inserts against in-flight batches — else
+        straight into the index.  Accepts (m,) or (B, m).
+        """
+        series = jnp.asarray(series)
+        if series.ndim == 1:
+            series = series[None, :]
+        if self._searcher is not None:
+            self._searcher.insert(series)
+        else:
+            self.index.insert(series)
+
+    # -- persistence ------------------------------------------------------
+    def save(self, directory: str | Path) -> Path:
+        """Persist index + config; ``load`` restores bit-identically.
+
+        Pending streamed ``add()``s (queued by the engine searcher
+        between batches) are flushed into the index first, so every
+        ``add()`` that returned before ``save()`` is in the snapshot.
+        """
+        if self._searcher is not None:
+            self._searcher.flush()
+        return persistence.save_database(directory, self.index, self.config)
+
+    @classmethod
+    def load(cls, directory: str | Path,
+             config: Optional[SearchConfig] = None, *, mesh=None
+             ) -> "TimeSeriesDB":
+        """Restore a saved database.
+
+        ``config`` overrides the saved search policy (the saved one is
+        used when omitted; defaults when the saver recorded none).  The
+        restored index answers bit-identical top-k to the pre-save index
+        and still accepts streaming ``add()``.
+        """
+        index, saved_cfg = persistence.load_database(directory)
+        cfg = config if config is not None else saved_cfg
+        db = cls(index, cfg, mesh=mesh)
+        # a host-bucket config without persisted buckets: rebuild locally
+        if db.config.use_host_buckets and index.host_buckets is None:
+            from repro.core.index import HostBuckets
+            import numpy as np
+            index.host_buckets = HostBuckets(index.fns.params)
+            index.host_buckets.insert(np.asarray(index.keys))
+        return db
+
+    # -- lifecycle / introspection ---------------------------------------
+    def close(self) -> None:
+        """Stop the searcher backend (engine thread); idempotent."""
+        if self._searcher is not None:
+            self._searcher.close()
+            self._searcher = None
+
+    def __enter__(self) -> "TimeSeriesDB":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def engine(self):
+        """The underlying ``ServingEngine`` (engine searcher only)."""
+        searcher = self.searcher
+        if not hasattr(searcher, "engine"):
+            raise AttributeError(
+                f"searcher {self.config.searcher!r} has no engine; "
+                "use SearchConfig(searcher='engine')")
+        return searcher.engine
+
+    @property
+    def params(self) -> SSHParams:
+        return self.index.fns.params
+
+    @property
+    def length(self) -> int:
+        """Series length m (None-safe only when series are stored)."""
+        return int(self.index.series.shape[1])
+
+    def __len__(self) -> int:
+        return int(self.index.signatures.shape[0])
+
+    def __repr__(self) -> str:
+        return (f"TimeSeriesDB(n={len(self)}, "
+                f"K={self.params.num_hashes}, L={self.params.num_tables}, "
+                f"searcher={self.config.searcher!r}, "
+                f"backend={self.config.backend!r})")

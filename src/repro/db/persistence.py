@@ -1,0 +1,157 @@
+"""Index persistence — save/load an ``SSHIndex`` (+ its ``SearchConfig``).
+
+The paper's core argument for data-independent hashing is that the index
+never needs retraining; persistence completes that story operationally: a
+process restart loads the signatures instead of paying the full O(N)
+sketch→shingle→hash build again.
+
+Layout of a saved database directory::
+
+    <dir>/ssh_db.json        # params, array manifest, config, flags
+    <dir>/index/step_*/      # repro.checkpoint shard(s) + manifest
+
+Arrays ride the existing :mod:`repro.checkpoint` layer (atomic publish,
+shard-splitting, resharding restore), so a crashed ``save()`` never
+corrupts the previous database.  Everything needed for bit-identical
+answers is stored — signatures, band keys, raw series, cached envelopes,
+AND the materialised random functions (filter bank + CWS fields), so a
+loaded index hashes queries and streamed inserts exactly like the index
+that was saved, independent of any future change to jax's PRNG.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, \
+    save_checkpoint
+from repro.core.index import HostBuckets, SSHFunctions, SSHIndex, SSHParams
+from repro.core.minhash import CWSParams
+from repro.db.config import SearchConfig
+
+FORMAT_VERSION = 1
+META_FILE = "ssh_db.json"
+ARRAYS_SUBDIR = "index"
+
+#: CWSParams fields, serialised as ``cws/<field>`` array leaves.
+_CWS_FIELDS = tuple(CWSParams._fields)
+
+
+def _index_arrays(index: SSHIndex) -> Dict[str, np.ndarray]:
+    """Flat array tree for the checkpoint layer (all leaves host numpy)."""
+    arrays: Dict[str, np.ndarray] = {
+        "signatures": np.asarray(index.signatures),
+        "keys": np.asarray(index.keys),
+        "filters": np.asarray(index.fns.filters),
+    }
+    for name in _CWS_FIELDS:
+        arrays[f"cws/{name}"] = np.asarray(getattr(index.fns.cws, name))
+    if index.series is not None:
+        arrays["series"] = np.asarray(index.series)
+    if index.env_radius is not None and index.env_upper is not None:
+        arrays["env_upper"] = np.asarray(index.env_upper)
+        arrays["env_lower"] = np.asarray(index.env_lower)
+    return arrays
+
+
+def save_database(directory: str | Path, index: SSHIndex,
+                  config: Optional[SearchConfig] = None,
+                  n_shards: int = 1) -> Path:
+    """Persist ``index`` (and optionally its ``config``) under ``directory``.
+
+    Returns the directory path.  Atomic at both levels: arrays go through
+    ``repro.checkpoint.save_checkpoint`` (temp dir + rename) and the JSON
+    meta is written via temp file + ``os.replace``, so readers only ever
+    see a complete database.
+    """
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    arrays = _index_arrays(index)
+    # monotonic step + keep=2 make re-saving into the same directory
+    # crash-safe: the new arrays publish atomically while the step the
+    # current meta points at is still on disk; the meta then flips to
+    # the new step (a crash in between leaves the old pair intact)
+    prev = latest_step(directory / ARRAYS_SUBDIR)
+    step = 0 if prev is None else prev + 1
+    save_checkpoint(directory / ARRAYS_SUBDIR, step=step, tree=arrays,
+                    keep=2, n_shards=n_shards)
+
+    meta: Dict[str, Any] = {
+        "format_version": FORMAT_VERSION,
+        "checkpoint_step": step,
+        "params": dataclasses.asdict(index.fns.params),
+        "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in arrays.items()},
+        "n_series": int(index.signatures.shape[0]),
+        "has_series": index.series is not None,
+        "with_host_buckets": index.host_buckets is not None,
+        "env_radius": index.env_radius if "env_upper" in arrays else None,
+        "config": config.to_dict() if config is not None else None,
+    }
+    tmp = directory / f".{META_FILE}.tmp{os.getpid()}"
+    tmp.write_text(json.dumps(meta, indent=1))
+    os.replace(tmp, directory / META_FILE)
+    return directory
+
+
+def load_database(directory: str | Path
+                  ) -> Tuple[SSHIndex, Optional[SearchConfig]]:
+    """Inverse of :func:`save_database`.
+
+    Returns ``(index, config)`` — ``config`` is ``None`` when the saver
+    did not record one.  The loaded index is bit-identical to the saved
+    one (same signatures, keys, series, envelope cache, and random
+    functions), so searches answer identically and streaming ``insert``
+    continues from the same hash functions.
+    """
+    directory = Path(directory)
+    meta_path = directory / META_FILE
+    if not meta_path.exists():
+        raise FileNotFoundError(f"no SSH database at {directory} "
+                                f"(missing {META_FILE})")
+    meta = json.loads(meta_path.read_text())
+    version = meta.get("format_version")
+    if version != FORMAT_VERSION:
+        raise ValueError(f"unsupported database format_version {version!r} "
+                         f"(this release reads {FORMAT_VERSION})")
+
+    tree_like = {k: np.zeros(info["shape"], dtype=np.dtype(info["dtype"]))
+                 for k, info in meta["arrays"].items()}
+    _, arrays = restore_checkpoint(directory / ARRAYS_SUBDIR, tree_like,
+                                   step=meta.get("checkpoint_step"))
+
+    params = SSHParams(**meta["params"])
+    fns = SSHFunctions(
+        params=params, filters=arrays["filters"],
+        cws=CWSParams(**{n: arrays[f"cws/{n}"] for n in _CWS_FIELDS}))
+
+    host_buckets = None
+    if meta["with_host_buckets"]:
+        host_buckets = HostBuckets(params)
+        host_buckets.insert(np.asarray(arrays["keys"]))
+
+    env_radius = meta.get("env_radius")
+    index = SSHIndex(
+        fns=fns,
+        signatures=arrays["signatures"],
+        keys=arrays["keys"],
+        series=arrays.get("series"),
+        host_buckets=host_buckets,
+        env_radius=env_radius,
+        env_upper=arrays.get("env_upper"),
+        env_lower=arrays.get("env_lower"))
+
+    config = (SearchConfig.from_dict(meta["config"])
+              if meta.get("config") else None)
+    return index, config
+
+
+def is_database_dir(directory: str | Path) -> bool:
+    """True when ``directory`` holds a complete saved database."""
+    return (Path(directory) / META_FILE).exists()

@@ -1,0 +1,199 @@
+"""Searcher-backend registry — how a ``TimeSeriesDB`` answers queries.
+
+A *searcher* turns (index, config) into answers.  Four ship built in,
+all serving the same contract (``search`` → ``SearchResult``,
+``search_batch`` → list of per-query ``SearchResult``, ``insert``):
+
+* ``"local"``   — sequential ``ssh_search`` per query; the only backend
+  that honours ``use_host_buckets`` (paper-faithful dict tables).
+* ``"batched"`` — the fused batched path (``ssh_search_batch``): one
+  signature dispatch, one collision-count kernel pass, union-gathered
+  pair DTW.  Per-query results identical to ``"local"`` by the serving
+  equality contract.  The default.
+* ``"distributed"`` — shard fan-out over a jax mesh through
+  ``repro.distributed.dist_index`` (row-sharded index, one all_gather of
+  k·2 scalars per query).
+* ``"engine"`` — the dynamic-batching ``ServingEngine`` (bucketed
+  padding, streaming inserts, background batcher thread); adds
+  ``submit()`` for async clients.
+
+``register_searcher`` lets downstream code plug in new backends (e.g. a
+GPU-resident or RPC-fronted searcher) without touching the facade:
+``SearchConfig.searcher`` names any registered factory.
+"""
+from __future__ import annotations
+
+from concurrent.futures import Future
+from typing import Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.db.config import SearchConfig
+
+_FACTORIES: Dict[str, Callable] = {}
+
+
+def register_searcher(name: str) -> Callable:
+    """Decorator: register ``factory(index, config, *, mesh=None)`` under
+    ``name`` (overwrites a prior registration, latest wins)."""
+    def deco(factory: Callable) -> Callable:
+        _FACTORIES[name] = factory
+        return factory
+    return deco
+
+
+def available_searchers() -> List[str]:
+    return sorted(_FACTORIES)
+
+
+def make_searcher(index, config: SearchConfig, *, mesh=None):
+    """Instantiate the searcher named by ``config.searcher``."""
+    try:
+        factory = _FACTORIES[config.searcher]
+    except KeyError:
+        raise ValueError(
+            f"unknown searcher {config.searcher!r}; registered: "
+            f"{available_searchers()}") from None
+    return factory(index, config, mesh=mesh)
+
+
+class _SearcherBase:
+    """Shared plumbing: configs, insert routing, no-op close.
+
+    ``mesh`` is accepted (and ignored) by every factory so the registry
+    can pass it uniformly; only the distributed searcher consumes it.
+    """
+
+    def __init__(self, index, config: SearchConfig, *, mesh=None):
+        self.index = index
+        self.config = config
+
+    def insert(self, series: jnp.ndarray) -> None:
+        self.index.insert(series)
+
+    def flush(self) -> None:
+        """Make pending inserts visible in the index (no-op for
+        synchronous backends; the engine drains its insert queue)."""
+
+    def close(self) -> None:
+        """Release background resources (threads); idempotent."""
+
+    def submit(self, query: jnp.ndarray) -> Future:
+        """Async convenience: synchronous backends resolve immediately."""
+        fut: Future = Future()
+        try:
+            fut.set_result(self.search(query))
+        except Exception as exc:            # pragma: no cover - passthrough
+            fut.set_exception(exc)
+        return fut
+
+
+@register_searcher("local")
+class LocalSearcher(_SearcherBase):
+    """Sequential re-rank: one ``ssh_search`` per query."""
+
+    def search(self, query: jnp.ndarray):
+        from repro.core.search import ssh_search
+        return ssh_search(query, self.index, config=self.config)
+
+    def search_batch(self, queries: jnp.ndarray) -> List:
+        return [self.search(q) for q in jnp.asarray(queries)]
+
+
+@register_searcher("batched")
+class BatchedSearcher(_SearcherBase):
+    """Fused batched path — wraps ``serving.engine.BatchedSearcher``
+    (which precomputes the candidate envelopes at ``config.band`` so
+    every LB_Keogh2 is a gather+compare, DESIGN.md §3) behind the
+    per-query facade contract."""
+
+    def __init__(self, index, config: SearchConfig, *, mesh=None):
+        super().__init__(index, config)
+        from repro.serving.engine import BatchedSearcher as _Batched
+        self._inner = _Batched(index, config)
+
+    def search_batch(self, queries: jnp.ndarray) -> List:
+        queries = jnp.asarray(queries)
+        res = self._inner.search_batch(queries)
+        return [res.per_query(i) for i in range(int(queries.shape[0]))]
+
+    def search(self, query: jnp.ndarray):
+        return self.search_batch(jnp.asarray(query)[None, :])[0]
+
+    def insert(self, series: jnp.ndarray) -> None:
+        self._inner.insert(series)
+
+
+@register_searcher("distributed")
+class DistributedSearcher(_SearcherBase):
+    """Shard fan-out over a mesh (defaults to one axis over every local
+    device).  The shard_map probe requires ``band`` set, single-probe,
+    signature ranking — ``serving.engine.DistributedSearcher`` validates."""
+
+    def __init__(self, index, config: SearchConfig, *, mesh=None):
+        super().__init__(index, config)
+        if mesh is None:
+            import jax
+            mesh = jax.make_mesh((jax.device_count(),), ("data",))
+        from repro.serving.engine import DistributedSearcher as _Dist
+        self._inner = _Dist(index, config, mesh)
+        self.mesh = mesh
+
+    def search_batch(self, queries: jnp.ndarray) -> List:
+        queries = jnp.asarray(queries)
+        res = self._inner.search_batch(queries)
+        return [res.per_query(i) for i in range(int(queries.shape[0]))]
+
+    def search(self, query: jnp.ndarray):
+        return self.search_batch(jnp.asarray(query)[None, :])[0]
+
+    def insert(self, series: jnp.ndarray) -> None:
+        self._inner.insert(series)          # raises: reshard required
+
+
+@register_searcher("engine")
+class EngineSearcher(_SearcherBase):
+    """Dynamic-batching ``ServingEngine`` behind the facade.
+
+    The batcher thread starts lazily on the first query (or explicitly
+    via ``start()``); ``close()`` drains and stops it.  ``submit``
+    exposes the async path; ``metrics`` the engine's counters.
+    """
+
+    def __init__(self, index, config: SearchConfig, *, mesh=None):
+        super().__init__(index, config)
+        from repro.serving.engine import ServingEngine
+        self.engine = ServingEngine(index, config)
+
+    @property
+    def metrics(self):
+        return self.engine.metrics
+
+    def start(self) -> "EngineSearcher":
+        self.engine.start()
+        return self
+
+    def search(self, query: jnp.ndarray):
+        self._ensure_started()
+        return self.engine.search(jnp.asarray(query))
+
+    def search_batch(self, queries: jnp.ndarray) -> List:
+        self._ensure_started()
+        return self.engine.search_batch(jnp.asarray(queries))
+
+    def submit(self, query: jnp.ndarray) -> Future:
+        self._ensure_started()
+        return self.engine.submit(jnp.asarray(query))
+
+    def insert(self, series: jnp.ndarray) -> None:
+        self.engine.insert(series)
+
+    def flush(self) -> None:
+        self.engine.flush_inserts()
+
+    def close(self) -> None:
+        self.engine.stop()
+
+    def _ensure_started(self) -> None:
+        if self.engine._thread is None and self.engine._state != "stopped":
+            self.engine.start()

@@ -17,13 +17,14 @@ chips.  Index build is one pass over the local shard (no communication).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.index import SSHParams
+from repro.db.config import SearchConfig, config_from_legacy_kwargs
 
 try:                        # jax >= 0.6: public API, replication kw check_vma
     _shard_map = jax.shard_map
@@ -60,15 +61,37 @@ def build_sharded(series: jnp.ndarray, filters: jnp.ndarray, cws: dict,
     return fn(series)
 
 
-def make_query_fn(params: SSHParams, mesh: Mesh, *, top_c: int, band: int,
-                  topk: int, length: int, backend: str = "auto"):
+def make_query_fn(params: SSHParams, mesh: Mesh, *, length: int,
+                  config: Optional[SearchConfig] = None,
+                  top_c: Optional[int] = None, band: Optional[int] = None,
+                  topk: Optional[int] = None,
+                  backend: Optional[str] = None):
     """Returns query(series_shard, sigs_shard, filters, cws, q) -> (ids, d).
 
-    ``backend`` selects the shard-local DTW re-rank implementation via
-    the shared dispatch (``repro.kernels.ops``): the Pallas wavefront
-    kernel on TPU, the ``dtw_batch`` scan oracle elsewhere — the same
-    knob as the local re-rank pipeline (DESIGN.md §3).
+    Canonical form: ``make_query_fn(params, mesh, length=m, config=cfg)``
+    — ``cfg.top_c``/``cfg.band``/``cfg.topk`` set the probe and re-rank
+    widths, and ``cfg.backend`` selects the shard-local DTW
+    implementation via the shared dispatch (``repro.kernels.ops``): the
+    Pallas wavefront kernel on TPU, the ``dtw_batch`` scan oracle
+    elsewhere — the same knob as the local re-rank pipeline (DESIGN.md
+    §3).  A band radius is required (the shard-local re-rank is banded).
+
+    Deprecation shim (one release): the loose ``top_c=/band=/topk=/
+    backend=`` kwargs still work under a ``DeprecationWarning``.
     """
+    if config is None:
+        legacy = {k: v for k, v in dict(top_c=top_c, band=band, topk=topk,
+                                        backend=backend).items()
+                  if v is not None}
+        config = config_from_legacy_kwargs("make_query_fn", legacy)
+    elif any(v is not None for v in (top_c, band, topk, backend)):
+        raise TypeError("make_query_fn() takes either config= or legacy "
+                        "top_c/band/topk/backend kwargs, not both")
+    if config.band is None:
+        raise ValueError("make_query_fn requires a band radius "
+                         "(config.band is None)")
+    top_c, band, topk = config.top_c, config.band, config.topk
+    backend = config.backend
     axes = tuple(mesh.axis_names)
     n_shards = int(mesh.devices.size)
     local_c = max(topk, top_c // n_shards)

@@ -1,25 +1,38 @@
 """SSH index-build launcher (the paper's preprocessing stage, Alg. 1).
 
     PYTHONPATH=src python -m repro.launch.build_index \
-        --dataset ecg --points 50000 --length 256 --out /tmp/ssh_index
+        --dataset ecg --points 50000 --length 256 --out /tmp/ssh_db
 
 Sharded, checkpointed, restartable: the stream is hashed in fixed-size
 batches; each batch checkpoint is atomic, so a crashed build resumes at
 the last completed batch (node-failure tolerance for the 20M-series run).
+The finished index is published as a ``repro.db`` database directory —
+``TimeSeriesDB.load(out)`` (or ``serve.py --db-dir out``) then answers
+queries without ever paying the O(N) signature build again, which is the
+operational payoff of the paper's retraining-free hashing.
+
+Hyper-parameters come from the arch registry (``ssh-ecg`` /
+``ssh-randomwalk``), including the search-time defaults persisted next
+to the index.
 """
 from __future__ import annotations
 
 import argparse
+import shutil
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import Checkpointer
-from repro.core.index import SSHFunctions, SSHParams, band_keys
+from repro.configs import get_arch
+from repro.core.index import SSHFunctions, SSHIndex, band_keys
 from repro.data.timeseries import extract_subsequences, random_walk, \
     synthetic_ecg
+from repro.db import TimeSeriesDB
 from repro.launch.steps import _make_ssh_build
+
+_GENERATORS = {"ecg": synthetic_ecg, "randomwalk": random_walk}
 
 
 def main():
@@ -29,23 +42,22 @@ def main():
     ap.add_argument("--points", type=int, default=50_000)
     ap.add_argument("--length", type=int, default=256)
     ap.add_argument("--batch", type=int, default=4096)
-    ap.add_argument("--out", type=str, default="/tmp/ssh_index")
+    ap.add_argument("--out", type=str, default="/tmp/ssh_db")
     args = ap.parse_args()
 
-    gen = synthetic_ecg if args.dataset == "ecg" else random_walk
-    stream = gen(args.points, seed=3)
+    stream = _GENERATORS[args.dataset](args.points, seed=3)
     series = extract_subsequences(stream, args.length, stride=1, znorm=True)
     n = series.shape[0]
 
-    params = (SSHParams(window=80, step=3, ngram=15, num_hashes=40,
-                        num_tables=20) if args.dataset == "ecg" else
-              SSHParams(window=30, step=5, ngram=15, num_hashes=40,
-                        num_tables=20))
+    arch = get_arch(f"ssh-{args.dataset}")
+    params = arch.config
     fns = SSHFunctions.create(params)
     build = _make_ssh_build(params)
     p = {"filters": fns.filters, "cws": fns.cws._asdict()}
 
-    ck = Checkpointer(args.out, keep=2)
+    # batch-checkpointed signature build (scratch space; the published
+    # database below is what readers load)
+    ck = Checkpointer(f"{args.out}.build_ckpt", keep=2)
     latest, restored = ck.restore_latest(
         {"sigs": jnp.zeros((n, params.num_hashes), jnp.int32),
          "done": jnp.zeros((), jnp.int32)})
@@ -63,11 +75,22 @@ def main():
                      "done": jnp.asarray(hi, jnp.int32)})
         rate = (hi - done) / max(time.time() - t0, 1e-9)
         print(f"hashed {hi}/{n} ({rate:.0f} series/s)", flush=True)
-    keys = band_keys(jnp.asarray(sigs), params)
-    ck.save(n + 1, {"sigs": jnp.asarray(sigs),
-                    "done": jnp.asarray(n, jnp.int32)})
+
+    config = arch.search_config(length=args.length)
+    index = SSHIndex(fns=fns, signatures=jnp.asarray(sigs),
+                     keys=band_keys(jnp.asarray(sigs), params),
+                     series=jnp.asarray(series))
+    if config.use_lb_cascade and config.band is not None:
+        index.candidate_envelopes(config.band)   # persisted with the index
+    db = TimeSeriesDB(index, config)
+    db.save(args.out)
+    # database published durably — the batch-restart scratch (a full
+    # (N, K) signature copy per retained checkpoint) is now waste
+    shutil.rmtree(f"{args.out}.build_ckpt", ignore_errors=True)
     print(f"index built: {n} series, {params.num_hashes} hashes, "
-          f"{keys.shape[1]} tables in {time.time() - t0:.1f}s")
+          f"{params.num_tables} tables in {time.time() - t0:.1f}s; "
+          f"database saved to {args.out} "
+          f"(TimeSeriesDB.load / serve.py --db-dir)")
 
 
 if __name__ == "__main__":

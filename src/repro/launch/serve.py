@@ -1,10 +1,11 @@
 """Serving launcher — SSH query serving (paper Alg. 2) or LM decode.
 
-SSH arches run on the batched serving engine (``repro.serving``):
-requests stream through the dynamic batcher, which pads to bucketed batch
-sizes and serves each block via the fused batched probe + union DTW
-re-rank.  ``--sequential`` keeps the old one-query-at-a-time loop for
-comparison.
+SSH arches serve through the ``repro.db`` facade: one ``TimeSeriesDB``
+whose ``SearchConfig`` (read from the arch registry — no hand-plumbed
+knob tuples) routes to the dynamic-batching engine by default, the
+sequential re-rank with ``--sequential``, or a saved database with
+``--db-dir`` (skipping the O(N) rebuild the paper's retraining-free
+hashing makes avoidable).
 
     PYTHONPATH=src python -m repro.launch.serve --arch ssh-ecg --requests 32
     PYTHONPATH=src python -m repro.launch.serve --arch ssh-ecg --sequential
@@ -22,61 +23,86 @@ import numpy as np
 from repro.configs import get_arch
 from repro.launch import steps as steps_mod
 
+SERVE_LENGTH = 128
 
-def _ssh_fixture(arch):
-    from repro.core import SSHIndex
+
+def _ssh_db(arch, config, db_dir=None):
+    """(queries pool, TimeSeriesDB) — loaded from ``db_dir`` when it holds
+    a saved database, else built from the synthetic smoke stream.
+
+    A loaded database keeps its *saved* search knobs (topk/top_c/band
+    were chosen for its series length); only the serving-policy fields
+    of ``config`` (searcher, backend, batcher) are overlaid.  The query
+    pool is generated at the database's length either way.
+    """
     from repro.data.timeseries import extract_subsequences, synthetic_ecg
-    params = arch.smoke_config
+    from repro.db import TimeSeriesDB, is_database_dir
+    if db_dir:
+        if not is_database_dir(db_dir):
+            raise FileNotFoundError(
+                f"--db-dir {db_dir}: no saved TimeSeriesDB there "
+                "(build one with repro.launch.build_index)")
+        tsdb = TimeSeriesDB.load(db_dir)
+        tsdb = tsdb.with_config(tsdb.config.replace(
+            searcher=config.searcher, backend=config.backend,
+            max_batch=config.max_batch, max_wait_ms=config.max_wait_ms))
+        length = tsdb.length
+        print(f"loaded database ({len(tsdb)} series of length {length}) "
+              f"from {db_dir}")
+    else:
+        length = SERVE_LENGTH
+        tsdb = None
     stream = synthetic_ecg(8000, seed=5)
-    db = jnp.asarray(extract_subsequences(stream, 128, stride=1,
-                                          znorm=True))
-    return db, SSHIndex.build(db, params), params
+    series = jnp.asarray(extract_subsequences(stream, length,
+                                              stride=1, znorm=True))
+    if tsdb is None:
+        tsdb = TimeSeriesDB.build(series, arch.smoke_config, config)
+    return series, tsdb
 
 
 def serve_ssh(arch, requests: int, batch_size: int, wait_ms: float,
-              backend: str = "auto"):
+              backend: str = "auto", db_dir=None):
     """Engine-based serving: dynamic batching + batched probe/re-rank."""
-    from repro.serving import EngineConfig, ServingEngine
-    db, index, params = _ssh_fixture(arch)
-    cfg = EngineConfig(topk=10, top_c=256, band=6,
-                       multiprobe_offsets=params.step,
-                       backend=backend,
-                       max_batch=batch_size, max_wait_ms=wait_ms)
-    engine = ServingEngine(index, cfg)
+    cfg = arch.search_config(length=SERVE_LENGTH, searcher="engine",
+                             backend=backend, max_batch=batch_size,
+                             max_wait_ms=wait_ms)
+    db, tsdb = _ssh_db(arch, cfg, db_dir)
+    engine = tsdb.engine
     rng = np.random.default_rng(0)
     qids = rng.integers(0, db.shape[0], requests)
 
     # warm every padded bucket size outside the measured window (through
-    # the searcher directly so engine metrics only cover real requests) —
-    # the dynamic batcher may form any bucket depending on arrival timing
+    # the engine's searcher directly so metrics only cover real requests)
+    # — the dynamic batcher may form any bucket depending on arrival timing
     for size in cfg.buckets():
         engine.searcher.search_batch(db[jnp.asarray(np.resize(qids, size))])
 
     t0 = time.perf_counter()
-    with engine:
-        futs = [(int(i), engine.submit(db[int(i)])) for i in qids]
+    with tsdb:
+        futs = [(int(i), tsdb.submit(db[int(i)])) for i in qids]
         for i, fut in futs:
             res = fut.result()
             print(f"req {i}: top1={res.ids[0]} pruned="
                   f"{res.pruned_total_frac:.1%}")
-    wall = time.perf_counter() - t0
-    snap = engine.metrics.snapshot()
+        wall = time.perf_counter() - t0
+        snap = engine.metrics.snapshot()
     print(f"engine: {engine.metrics.format()}")
     print(f"served {requests} requests in {wall:.2f}s "
           f"({requests / wall:.1f} qps end-to-end, "
           f"avg batch {snap['batch_size_mean']:.1f})")
 
 
-def serve_ssh_sequential(arch, requests: int, backend: str = "auto"):
-    """Pre-engine baseline: one ssh_search per request."""
-    from repro.core import ssh_search
-    db, index, params = _ssh_fixture(arch)
+def serve_ssh_sequential(arch, requests: int, backend: str = "auto",
+                         db_dir=None):
+    """Pre-engine baseline: the sequential ``local`` searcher."""
+    cfg = arch.search_config(length=SERVE_LENGTH, searcher="local",
+                             backend=backend)
+    db, tsdb = _ssh_db(arch, cfg, db_dir)
     rng = np.random.default_rng(0)
     lat = []
     for i in rng.integers(0, db.shape[0], requests):
         t0 = time.perf_counter()
-        res = ssh_search(db[int(i)], index, topk=10, top_c=256, band=6,
-                         multiprobe_offsets=params.step, backend=backend)
+        res = tsdb.search(db[int(i)])
         lat.append(time.perf_counter() - t0)
         print(f"req {i}: top1={res.ids[0]} pruned="
               f"{res.pruned_total_frac:.1%} {lat[-1]*1e3:.0f}ms")
@@ -126,15 +152,19 @@ def main():
                     choices=("auto", "pallas", "jnp"),
                     help="kernel backend for the ssh query path "
                          "(collision count + DTW re-rank)")
+    ap.add_argument("--db-dir", default=None,
+                    help="serve a TimeSeriesDB saved here instead of "
+                         "rebuilding the index (ssh only)")
     ap.add_argument("--smoke", action="store_true", default=True)
     args = ap.parse_args()
     arch = get_arch(args.arch)
     if arch.family == "ssh":
         if args.sequential:
-            serve_ssh_sequential(arch, args.requests, backend=args.backend)
+            serve_ssh_sequential(arch, args.requests, backend=args.backend,
+                                 db_dir=args.db_dir)
         else:
             serve_ssh(arch, args.requests, args.batch_size, args.wait_ms,
-                      backend=args.backend)
+                      backend=args.backend, db_dir=args.db_dir)
     elif arch.family == "lm":
         serve_lm(arch, args.requests, args.smoke)
     else:

@@ -2,10 +2,16 @@
 
 Public API:
   ssh_search_batch / batch_probe / BatchSearchResult — batched primitives
-  ServingEngine / EngineConfig                       — dynamic batcher
+  ServingEngine                                      — dynamic batcher
   BatchedSearcher / DistributedSearcher              — compute backends
   ServingMetrics                                     — latency/throughput
+  SearchConfig (re-export of repro.db.SearchConfig)  — all search knobs
+  EngineConfig                                       — deprecated alias
+
+Most callers should reach the engine through the ``repro.db``
+facade (``TimeSeriesDB`` + ``SearchConfig(searcher="engine")``).
 """
+from repro.db.config import SearchConfig
 from repro.serving.batched import (BatchSearchResult, batch_probe,
                                    ssh_search_batch)
 from repro.serving.engine import (BatchedSearcher, DistributedSearcher,
@@ -15,5 +21,5 @@ from repro.serving.metrics import ServingMetrics
 __all__ = [
     "BatchSearchResult", "batch_probe", "ssh_search_batch",
     "BatchedSearcher", "DistributedSearcher", "EngineConfig",
-    "ServingEngine", "ServingMetrics",
+    "SearchConfig", "ServingEngine", "ServingMetrics",
 ]

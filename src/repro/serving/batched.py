@@ -43,6 +43,7 @@ from repro.core import rerank as rr
 from repro.core.index import SSHIndex
 from repro.core.rerank import SearchStats
 from repro.core.search import SearchResult
+from repro.db.config import SearchConfig, config_from_legacy_kwargs
 from repro.kernels import ops
 
 
@@ -119,33 +120,48 @@ def batch_probe(queries: jnp.ndarray, index: SSHIndex, top_c: int,
 
 
 def ssh_search_batch(queries: jnp.ndarray, index: SSHIndex,
-                     topk: int = 10, top_c: int = 256,
-                     band: Optional[int] = None,
-                     use_lb_cascade: bool = True,
-                     rank_by_signature: bool = True,
-                     multiprobe_offsets: int = 1,
+                     config: Optional[SearchConfig] = None, *,
                      use_pallas: Optional[bool] = None,
-                     backend: str = "auto") -> BatchSearchResult:
+                     **legacy_kwargs) -> BatchSearchResult:
     """Batched paper Alg. 2 over a (B, m) query block.
 
-    Returns per-query top-k identical to ``ssh_search(q, index, ...)`` for
-    every row q (see module docstring for why).  ``backend`` selects the
-    kernel implementation for every device stage (probe + re-rank DTW);
-    ``use_pallas`` remains as a probe-only override for tests (it defaults
-    to the backend's resolution when unset).
+    Canonical form: ``ssh_search_batch(Q, index, config=SearchConfig(...))``
+    — the same frozen config every entry point consumes; returns
+    per-query top-k identical to ``ssh_search(q, index, config=...)`` for
+    every row q (see module docstring for why).  The ``TimeSeriesDB``
+    facade routes here for ``searcher="batched"``.
+
+    Deprecation shim (one release): loose kwargs (``topk=..., top_c=...``)
+    are folded into a ``SearchConfig`` under a ``DeprecationWarning``.
+    ``use_pallas`` stays a probe-only kernel override for tests (defaults
+    to the config backend's resolution when unset) — it is an
+    implementation toggle, not a search knob, so it lives outside the
+    config.
     """
+    if config is not None and not isinstance(config, SearchConfig):
+        # legacy positional call ssh_search_batch(Q, index, 10): the
+        # third parameter used to be topk — fold into the kwarg shim
+        legacy_kwargs["topk"] = config
+        config = None
+    if config is None:
+        config = config_from_legacy_kwargs("ssh_search_batch",
+                                           legacy_kwargs)
+    elif legacy_kwargs:
+        raise TypeError("ssh_search_batch() takes either config= or "
+                        "legacy search kwargs, not both: "
+                        f"{sorted(legacy_kwargs)}")
     t0 = time.perf_counter()
     queries = jnp.asarray(queries)
     b, m = queries.shape
     n = int(index.signatures.shape[0])
-    c = min(top_c, n)
+    c = min(config.top_c, n)
     if use_pallas is None:
-        use_pallas = ops.resolve_backend(backend)
+        use_pallas = ops.resolve_backend(config.backend)
 
     # -- stages 1+2: fused probe ------------------------------------------
     ids_j, vals_j = batch_probe(queries, index, c,
-                                rank_by_signature=rank_by_signature,
-                                multiprobe_offsets=multiprobe_offsets,
+                                rank_by_signature=config.rank_by_signature,
+                                multiprobe_offsets=config.multiprobe_offsets,
                                 use_pallas=use_pallas)
     ids = np.asarray(ids_j, np.int64)                     # (B, C)
     valid = np.asarray(vals_j) > 0                        # (B, C)
@@ -157,8 +173,9 @@ def ssh_search_batch(queries: jnp.ndarray, index: SSHIndex,
 
     # -- stage 3: unified re-rank (cascade + backend-dispatched DTW) ------
     out_ids, out_d, n_final, n_union, stats = rr.rerank_batch(
-        queries, ids, valid, index, topk, band,
-        use_lb_cascade=use_lb_cascade, backend=backend)
+        queries, ids, valid, index, config.topk, config.band,
+        use_lb_cascade=config.use_lb_cascade, backend=config.backend,
+        seed_size=config.seed_size)
 
     wall = time.perf_counter() - t0
     return BatchSearchResult(

@@ -29,6 +29,7 @@ import dataclasses
 import queue
 import threading
 import time
+import warnings
 from concurrent.futures import Future
 from typing import List, Optional, Sequence
 
@@ -37,37 +38,26 @@ import numpy as np
 
 from repro.core.index import SSHIndex
 from repro.core.search import SearchResult
+from repro.db.config import SearchConfig
 from repro.serving.batched import BatchSearchResult, ssh_search_batch
 from repro.serving.metrics import ServingMetrics
 
 
-@dataclasses.dataclass(frozen=True)
-class EngineConfig:
-    """Search parameters + batching policy for one engine instance.
+class EngineConfig(SearchConfig):
+    """Deprecated alias of :class:`repro.db.SearchConfig` (one release).
 
-    ``backend`` is the one knob selecting the kernel implementation for
-    every device stage of the query path (collision count, LB filter
-    gathers, DTW re-rank): "pallas" | "jnp" | "auto" (Pallas on TPU,
-    jnp reference elsewhere).  Results are backend-independent.
+    The engine's knobs (search parameters + batching policy) are now
+    fields of the unified ``SearchConfig`` consumed by every entry
+    point; construct that instead.  Field names and defaults are
+    unchanged, so existing ``EngineConfig(...)`` call sites keep their
+    exact behaviour.
     """
-    topk: int = 10
-    top_c: int = 256
-    band: Optional[int] = None
-    use_lb_cascade: bool = True
-    rank_by_signature: bool = True
-    multiprobe_offsets: int = 1
-    backend: str = "auto"
-    max_batch: int = 8
-    max_wait_ms: float = 2.0
 
-    def buckets(self) -> List[int]:
-        """Padded batch sizes: powers of two up to max_batch."""
-        out, b = [], 1
-        while b < self.max_batch:
-            out.append(b)
-            b *= 2
-        out.append(self.max_batch)
-        return out
+    def __post_init__(self):
+        warnings.warn(
+            "EngineConfig is deprecated; use repro.db.SearchConfig "
+            "(same fields, one config for every entry point)",
+            DeprecationWarning, stacklevel=3)
 
 
 class BatchedSearcher:
@@ -79,7 +69,7 @@ class BatchedSearcher:
     the cache aligned under streaming inserts.
     """
 
-    def __init__(self, index: SSHIndex, config: EngineConfig):
+    def __init__(self, index: SSHIndex, config: SearchConfig):
         self.index = index
         self.config = config
         if config.band is not None and config.use_lb_cascade \
@@ -87,13 +77,7 @@ class BatchedSearcher:
             index.candidate_envelopes(config.band)
 
     def search_batch(self, queries: jnp.ndarray) -> BatchSearchResult:
-        c = self.config
-        return ssh_search_batch(
-            queries, self.index, topk=c.topk, top_c=c.top_c, band=c.band,
-            use_lb_cascade=c.use_lb_cascade,
-            rank_by_signature=c.rank_by_signature,
-            multiprobe_offsets=c.multiprobe_offsets,
-            backend=c.backend)
+        return ssh_search_batch(queries, self.index, config=self.config)
 
     def insert(self, series: jnp.ndarray) -> None:
         self.index.insert(series)
@@ -109,7 +93,7 @@ class DistributedSearcher:
     unchanged from the dry-run path.
     """
 
-    def __init__(self, index: SSHIndex, config: EngineConfig, mesh):
+    def __init__(self, index: SSHIndex, config: SearchConfig, mesh):
         from repro.distributed import dist_index
         if config.band is None:
             raise ValueError("DistributedSearcher requires a band radius")
@@ -132,8 +116,7 @@ class DistributedSearcher:
         self._cws = index.fns.cws._asdict()
         self._filters = index.fns.filters
         self._query_fn = dist_index.make_query_fn(
-            p, mesh, top_c=config.top_c, band=config.band,
-            topk=config.topk, length=length, backend=config.backend)
+            p, mesh, length=length, config=config)
 
     def search_batch(self, queries: jnp.ndarray) -> BatchSearchResult:
         t0 = time.perf_counter()
@@ -179,11 +162,14 @@ class ServingEngine:
 
     Usage::
 
-        engine = ServingEngine(index, EngineConfig(band=8, max_batch=8))
+        engine = ServingEngine(index, SearchConfig(band=8, max_batch=8))
         with engine:                       # starts the batcher thread
             fut = engine.submit(q)         # async
             res = engine.search(q)         # sync convenience
         engine.metrics.snapshot()
+
+    (Or behind the facade: ``TimeSeriesDB`` with
+    ``SearchConfig(searcher="engine")`` owns one of these.)
 
     ``search_batch`` bypasses the queue entirely (one caller already holds
     a full batch) but still records metrics — benchmarks use it to measure
@@ -192,7 +178,8 @@ class ServingEngine:
 
     _STOP = object()
 
-    def __init__(self, index: SSHIndex, config: EngineConfig = EngineConfig(),
+    def __init__(self, index: SSHIndex,
+                 config: SearchConfig = SearchConfig(),
                  searcher=None, metrics: Optional[ServingMetrics] = None):
         self.index = index
         self.config = config
@@ -308,6 +295,16 @@ class ServingEngine:
             self._queue.qsize(),
             lb_pruned_frac=_lb_fracs(res))
         return [res.per_query(i) for i in range(b)]
+
+    def flush_inserts(self) -> None:
+        """Apply queued streaming inserts to the index *now*.
+
+        Normally inserts drain on the batcher thread between batches;
+        persistence (``TimeSeriesDB.save``) calls this so a snapshot
+        taken right after ``insert()`` returned contains the series.
+        """
+        with self._serve_lock:
+            self._drain_inserts()
 
     def insert(self, series: jnp.ndarray) -> None:
         """Streaming insert; visible to all queries submitted afterwards."""

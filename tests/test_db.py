@@ -1,0 +1,334 @@
+"""repro.db facade: SearchConfig validation, searcher routing, index
+persistence (build → save → load → bit-identical answers), and the
+legacy-kwarg deprecation shims.
+
+Acceptance (ISSUE 3): one round-trip test proves
+``TimeSeriesDB.load(dir).search(q)`` returns bit-identical ids/dists to
+the pre-save index for all four searcher backends.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SSHParams, ssh_search
+from repro.data.timeseries import extract_subsequences, synthetic_ecg
+from repro.db import SearchConfig, TimeSeriesDB, available_searchers
+from repro.serving import ssh_search_batch
+
+pytestmark = pytest.mark.api
+
+PARAMS = SSHParams(window=24, step=3, ngram=8, num_hashes=40, num_tables=20)
+QIDS = [3, 100, 250, 444, 512]
+
+
+@pytest.fixture(scope="module")
+def series():
+    stream = synthetic_ecg(2500, seed=5)
+    return jnp.asarray(extract_subsequences(stream, 128, stride=4,
+                                            znorm=True))   # ~594 series
+
+
+@pytest.fixture(scope="module")
+def db(series):
+    return TimeSeriesDB.build(series, PARAMS,
+                              SearchConfig(topk=5, band=8).replace(top_c=64))
+
+
+@pytest.fixture(scope="module")
+def saved_dir(db, tmp_path_factory):
+    out = tmp_path_factory.mktemp("ssh_db")
+    db.save(out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SearchConfig
+# ---------------------------------------------------------------------------
+
+def test_config_validate_rejects_bad_knobs():
+    with pytest.raises(ValueError, match="topk"):
+        SearchConfig(topk=0).validate()
+    with pytest.raises(ValueError, match="top_c"):
+        SearchConfig(topk=20, top_c=10).validate()
+    with pytest.raises(ValueError, match="band"):
+        SearchConfig(band=0).validate()
+    with pytest.raises(ValueError, match="backend"):
+        SearchConfig(backend="cuda").validate()
+    with pytest.raises(ValueError, match="multiprobe"):
+        SearchConfig(multiprobe_offsets=0).validate()
+    with pytest.raises(ValueError, match="host_buckets"):
+        SearchConfig(use_host_buckets=True, searcher="batched").validate()
+    with pytest.raises(ValueError, match="max_batch"):
+        SearchConfig(max_batch=0).validate()
+    # replace() validates too
+    with pytest.raises(ValueError, match="seed_size"):
+        SearchConfig().replace(seed_size=-1)
+    # a seed smaller than topk would make the cascade threshold unsound
+    with pytest.raises(ValueError, match="seed_size"):
+        SearchConfig(topk=10, seed_size=4).validate()
+
+
+def test_config_replace_and_roundtrip_dict():
+    cfg = SearchConfig(band=8).replace(topk=7, searcher="local")
+    assert cfg.topk == 7 and cfg.band == 8
+    again = SearchConfig.from_dict(cfg.to_dict())
+    assert again == cfg
+    with pytest.warns(RuntimeWarning, match="unknown"):
+        got = SearchConfig.from_dict({**cfg.to_dict(), "new_knob": 1})
+    assert got == cfg
+
+
+def test_unknown_searcher_rejected(db):
+    with pytest.raises(ValueError, match="unknown searcher"):
+        db.with_config(db.config.replace(searcher="warp-drive")).search(
+            db.index.series[0])
+    assert set(available_searchers()) >= {"local", "batched",
+                                          "distributed", "engine"}
+
+
+# ---------------------------------------------------------------------------
+# persistence: build -> save -> load -> identical answers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_save_load_bit_identical_per_kernel_backend(series, db, saved_dir,
+                                                    backend):
+    """Loaded index answers bit-identical top-k on both kernel backends
+    (pallas runs in interpret mode off-TPU)."""
+    cfg = db.config.replace(backend=backend)
+    loaded = TimeSeriesDB.load(saved_dir, cfg)
+    for qid in QIDS:
+        want = db.with_config(cfg).search(series[qid])
+        got = loaded.search(series[qid])
+        np.testing.assert_array_equal(want.ids, got.ids)
+        np.testing.assert_array_equal(np.asarray(want.dists),
+                                      np.asarray(got.dists))
+
+
+def test_roundtrip_all_searcher_backends(series, db, saved_dir):
+    """Acceptance: pre-save vs load()ed answers are bit-identical for all
+    four searcher backends (distributed runs on the 1-device mesh)."""
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    n_usable = (len(db) // jax.device_count()) * jax.device_count()
+    assert n_usable == len(db), "fixture must shard evenly for distributed"
+    for searcher in ("local", "batched", "distributed", "engine"):
+        cfg = db.config.replace(searcher=searcher, multiprobe_offsets=1)
+        with db.with_config(cfg) as before, \
+                TimeSeriesDB.load(saved_dir, cfg, mesh=mesh) as after:
+            before.mesh = mesh
+            for qid in QIDS[:3]:
+                want = before.search(series[qid])
+                got = after.search(series[qid])
+                np.testing.assert_array_equal(
+                    want.ids, got.ids,
+                    err_msg=f"searcher={searcher} qid={qid}")
+                np.testing.assert_array_equal(
+                    np.asarray(want.dists), np.asarray(got.dists),
+                    err_msg=f"searcher={searcher} qid={qid}")
+
+
+def test_loaded_index_arrays_and_fns_bit_identical(db, saved_dir):
+    loaded = TimeSeriesDB.load(saved_dir)
+    for name in ("signatures", "keys", "series"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(db.index, name)),
+            np.asarray(getattr(loaded.index, name)), err_msg=name)
+    np.testing.assert_array_equal(np.asarray(db.index.fns.filters),
+                                  np.asarray(loaded.index.fns.filters))
+    for f in db.index.fns.cws._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(db.index.fns.cws, f)),
+            np.asarray(getattr(loaded.index.fns.cws, f)), err_msg=f)
+    # envelope cache persisted (build precomputed it at config.band)
+    assert loaded.index.env_radius == db.index.env_radius == 8
+    np.testing.assert_array_equal(np.asarray(db.index.env_upper),
+                                  np.asarray(loaded.index.env_upper))
+    # saved search policy travels with the index
+    assert loaded.config == db.config
+
+
+def test_add_after_load_consistent_with_never_saved(series, tmp_path):
+    """Streaming add() into a loaded database matches an identically-grown
+    index that was never saved (same hash functions, same answers)."""
+    base, extra = series[:400], series[400:420]
+    cfg = SearchConfig(topk=5, band=8).replace(top_c=64)
+    never_saved = TimeSeriesDB.build(base, PARAMS, cfg)
+    saved = TimeSeriesDB.build(base, PARAMS, cfg)
+    saved.save(tmp_path / "db")
+    loaded = TimeSeriesDB.load(tmp_path / "db")
+
+    never_saved.add(extra)
+    loaded.add(extra)
+    np.testing.assert_array_equal(np.asarray(never_saved.index.signatures),
+                                  np.asarray(loaded.index.signatures))
+    np.testing.assert_array_equal(np.asarray(never_saved.index.keys),
+                                  np.asarray(loaded.index.keys))
+    for qid in (405, 10):        # a new series and an old one
+        want = never_saved.search(series[qid])
+        got = loaded.search(series[qid])
+        np.testing.assert_array_equal(want.ids, got.ids)
+        np.testing.assert_array_equal(np.asarray(want.dists),
+                                      np.asarray(got.dists))
+    # the added series is its own nearest neighbour in both
+    assert never_saved.search(series[405]).ids[0] == 5 + 400
+
+
+def test_load_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError, match="no SSH database"):
+        TimeSeriesDB.load(tmp_path / "nope")
+
+
+def test_resave_same_directory_after_add(series, tmp_path):
+    """save → add → save into the SAME directory: the second save
+    publishes a new checkpoint step (monotonic, keep=2 — re-saving never
+    deletes the arrays the live meta points at) and load sees the grown
+    index."""
+    cfg = SearchConfig(topk=3, band=8).replace(top_c=64)
+    d = TimeSeriesDB.build(series[:300], PARAMS, cfg)
+    out = tmp_path / "db"
+    d.save(out)
+    d.add(series[300:305])
+    d.save(out)
+    loaded = TimeSeriesDB.load(out)
+    assert len(loaded) == 305
+    np.testing.assert_array_equal(np.asarray(d.index.signatures),
+                                  np.asarray(loaded.index.signatures))
+    # both checkpoint steps exist until the next save (crash safety)
+    from repro.checkpoint import all_steps
+    from repro.db.persistence import ARRAYS_SUBDIR
+    assert len(all_steps(out / ARRAYS_SUBDIR)) == 2
+
+
+def test_save_flushes_pending_engine_inserts(series, tmp_path):
+    """An add() queued by a running engine (drained only between batches)
+    must land in the snapshot a following save() writes."""
+    cfg = SearchConfig(topk=3, band=8, searcher="engine").replace(top_c=64)
+    with TimeSeriesDB.build(series[:400], PARAMS, cfg) as db_:
+        db_.search(series[0])            # starts the batcher thread
+        db_.add(series[400:402])         # enqueued, not yet drained
+        db_.save(tmp_path / "db")
+        loaded = TimeSeriesDB.load(tmp_path / "db")
+        assert len(loaded) == 402
+        got = loaded.with_config(cfg.replace(searcher="batched")) \
+            .search(series[401])
+        assert got.ids[0] == 401
+
+
+# ---------------------------------------------------------------------------
+# facade routing & misc
+# ---------------------------------------------------------------------------
+
+def test_searchers_agree_with_each_other(series, db):
+    """local / batched / engine answer identically (equality contract)."""
+    got = {}
+    for searcher in ("local", "batched", "engine"):
+        with db.with_config(db.config.replace(searcher=searcher)) as d:
+            got[searcher] = d.search_batch(series[jnp.asarray(QIDS[:3])])
+    for searcher in ("batched", "engine"):
+        for a, b in zip(got["local"], got[searcher]):
+            np.testing.assert_array_equal(a.ids, b.ids)
+            np.testing.assert_allclose(np.asarray(a.dists),
+                                       np.asarray(b.dists),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_seed_size_widening_keeps_topk(series, db):
+    """A widened seed (tighter cascade threshold) never changes the
+    answer, sequentially and batched — the threshold stays a valid upper
+    bound on the k-th distance."""
+    wide = db.config.replace(seed_size=4 * db.config.topk)
+    for qid in QIDS[:3]:
+        want = ssh_search(series[qid], db.index, config=db.config)
+        got = ssh_search(series[qid], db.index, config=wide)
+        np.testing.assert_array_equal(want.ids, got.ids)
+    bw = ssh_search_batch(series[jnp.asarray(QIDS[:3])], db.index,
+                          config=wide)
+    for i, qid in enumerate(QIDS[:3]):
+        want = ssh_search(series[qid], db.index, config=db.config)
+        pq = bw.per_query(i)
+        np.testing.assert_array_equal(pq.ids, want.ids)
+
+
+def test_reconfigure_swaps_policy_in_place(series, db):
+    d = TimeSeriesDB(db.index, db.config)
+    r1 = d.search(series[3])
+    d.reconfigure(topk=3, searcher="local")
+    r2 = d.search(series[3])
+    assert len(r2.ids) == 3
+    np.testing.assert_array_equal(r1.ids[:3], r2.ids)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: legacy kwargs == facade config, with a warning
+# ---------------------------------------------------------------------------
+
+def test_ssh_search_legacy_kwargs_shim(series, db):
+    cfg = db.config
+    for qid in QIDS[:3]:
+        want = ssh_search(series[qid], db.index, config=cfg)
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            got = ssh_search(series[qid], db.index, topk=cfg.topk,
+                             top_c=cfg.top_c, band=cfg.band)
+        np.testing.assert_array_equal(want.ids, got.ids)
+        np.testing.assert_array_equal(np.asarray(want.dists),
+                                      np.asarray(got.dists))
+    with pytest.raises(TypeError, match="not both"):
+        ssh_search(series[3], db.index, config=cfg, topk=5)
+    with pytest.raises(TypeError, match="unexpected"):
+        ssh_search(series[3], db.index, topc=64)        # typo'd knob
+    # historical *positional* topk still binds through the shim
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        got = ssh_search(series[3], db.index, 3)
+    want = ssh_search(series[3], db.index, config=SearchConfig(topk=3))
+    np.testing.assert_array_equal(want.ids, got.ids)
+
+
+def test_ssh_search_batch_legacy_kwargs_shim(series, db):
+    cfg = db.config
+    queries = series[jnp.asarray(QIDS[:3])]
+    want = ssh_search_batch(queries, db.index, config=cfg)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        got = ssh_search_batch(queries, db.index, topk=cfg.topk,
+                               top_c=cfg.top_c, band=cfg.band)
+    np.testing.assert_array_equal(want.ids, got.ids)
+    np.testing.assert_array_equal(want.dists, got.dists)
+
+
+def test_engine_config_alias_deprecated_but_equivalent(series, db):
+    from repro.serving import EngineConfig, ServingEngine
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        legacy = EngineConfig(topk=5, top_c=64, band=8, max_batch=4)
+    assert isinstance(legacy, SearchConfig)
+    modern = SearchConfig(topk=5, top_c=64, band=8, max_batch=4)
+    e1 = ServingEngine(db.index, legacy)
+    e2 = ServingEngine(db.index, modern)
+    r1 = e1.search_batch(series[jnp.asarray(QIDS[:2])])
+    r2 = e2.search_batch(series[jnp.asarray(QIDS[:2])])
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a.ids, b.ids)
+
+
+def test_make_query_fn_legacy_kwargs_shim(series):
+    from repro.core.index import SSHFunctions
+    from repro.distributed.dist_index import make_query_fn
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    sub = series[: (int(series.shape[0]) // jax.device_count())
+                 * jax.device_count()]
+    fns = SSHFunctions.create(PARAMS)
+    from repro.core.index import build_signatures
+    sigs = build_signatures(sub, fns)
+    cfg = SearchConfig(topk=5, band=8).replace(top_c=64)
+    qfn_new = make_query_fn(PARAMS, mesh, length=128, config=cfg)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        qfn_old = make_query_fn(PARAMS, mesh, top_c=64, band=8, topk=5,
+                                length=128)
+    args = (sub, sigs, fns.filters, fns.cws._asdict(), sub[37])
+    ids_new, d_new = qfn_new(*args)
+    ids_old, d_old = qfn_old(*args)
+    np.testing.assert_array_equal(np.asarray(ids_new), np.asarray(ids_old))
+    np.testing.assert_array_equal(np.asarray(d_new), np.asarray(d_old))
+    assert int(ids_new[0]) == 37
+    with pytest.raises(ValueError, match="band"):
+        make_query_fn(PARAMS, mesh, length=128,
+                      config=SearchConfig(band=None))
