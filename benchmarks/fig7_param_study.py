@@ -47,7 +47,7 @@ def _study(kind: str, param: str, values) -> None:
             step=v if param == "delta" else base.step,
             ngram=v if param == "n" else base.ngram)
         t0 = time.perf_counter()
-        index = SSHIndex.build(db, params)
+        index = SSHIndex.build(db, spec=params.to_spec())
         jnp.asarray(index.signatures).block_until_ready()
         t_build = time.perf_counter() - t0
         # multiprobe tracks the *swept* stride (δ-residue classes)

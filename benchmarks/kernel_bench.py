@@ -56,6 +56,28 @@ def _bench_rerank_path(rng) -> None:
           "tpu_kernel": "pairs wavefront: query per lane beside candidate"})
 
 
+def _bench_signature_build(rng) -> None:
+    """End-to-end signature build (sketch → shingle → CWS) through the
+    encoder facade at the paper's ECG setting, jnp vs Pallas sketch
+    stage.  Off-TPU the Pallas kernel runs in interpret mode, so the
+    jnp row is the CPU production number and the pallas row is a
+    correctness-path timing, not a speedup claim."""
+    from repro.encoders import IndexSpec, make_encoder
+    b, m = 64, 2048
+    spec = IndexSpec(encoder="ssh",
+                     params=dict(window=80, step=3, ngram=15,
+                                 num_hashes=40, num_tables=20))
+    enc = make_encoder(spec, length=m)
+    xs = jnp.asarray(rng.normal(size=(b, m)), jnp.float32)
+    for backend in ("jnp", "pallas"):
+        _, t = timed(lambda: enc.encode_batch(xs, backend=backend),
+                     warmup=1, iters=1 if backend == "pallas" else 3)
+        emit(f"kernel/signature_build/{backend}", t * 1e6,
+             {"signatures_per_s": round(b / t, 1),
+              "tpu_kernel": "sketch_conv strided-matvec feeds the MXU; "
+                            "CWS scan keeps B shardable"})
+
+
 def run() -> None:
     rng = np.random.default_rng(0)
     # sketch_conv: paper ECG setting
@@ -85,6 +107,7 @@ def run() -> None:
           "tpu_bound": "HBM bandwidth"})
 
     _bench_rerank_path(rng)
+    _bench_signature_build(rng)
 
 
 if __name__ == "__main__":

@@ -112,7 +112,7 @@ def run() -> None:
         length = 128
         db, _ = dataset(kind, length)
         cfg = _bench_config(kind, length)
-        index = SSHIndex.build(db, params)
+        index = SSHIndex.build(db, spec=params.to_spec())
         queries = _workload(db, N_WORK_QUERIES)
         n = N_WORK_QUERIES
 

@@ -22,7 +22,7 @@ def run() -> None:
             # LB_Keogh2 needs no per-query candidate envelopes (§3);
             # the "local" searcher is the sequential path under timing
             cfg = search_config(kind, length, searcher="local")
-            tsdb = TimeSeriesDB.build(db, params, cfg)
+            tsdb = TimeSeriesDB.build(db, spec=params.to_spec(), config=cfg)
             q = queries[0]
             res, t_ssh = timed(lambda: tsdb.search(q), warmup=1, iters=2)
             _, t_ucr = timed(

@@ -16,7 +16,7 @@ def run() -> None:
         for length in LENGTHS:
             db, queries = dataset(kind, length)
             band = band_for(length)
-            index = SSHIndex.build(db, params)
+            index = SSHIndex.build(db, spec=params.to_spec())
             cfg = search_config(kind, length)   # cascade on by default
             hash_only, full, ucr = [], [], []
             for q in queries:

@@ -58,8 +58,8 @@ def main() -> None:
 
     # same answer through the facade: searcher="distributed" shards the
     # index over the mesh behind the TimeSeriesDB API
-    db = TimeSeriesDB.build(series, params,
-                            config.replace(searcher="distributed"),
+    db = TimeSeriesDB.build(series, spec=params.to_spec(),
+                            config=config.replace(searcher="distributed"),
                             mesh=mesh)
     res = db.search(series[4321])
     assert int(res.ids[0]) == 4321

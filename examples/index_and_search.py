@@ -51,7 +51,8 @@ def main() -> None:
     else:
         db = None
     if db is None:
-        db = TimeSeriesDB.build(series, arch.config, config)
+        db = TimeSeriesDB.build(series, spec=arch.index_spec(),
+                                config=config)
         db.save(args.db_dir)
         print(f"built + saved database ({len(db)} series) "
               f"in {time.time() - t0:.1f}s")

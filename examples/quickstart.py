@@ -1,17 +1,22 @@
 """Quickstart: build an SSH database over an ECG stream and search it.
 
-The FAISS-style facade (``repro.db``): one ``SearchConfig`` carries every
-search-time knob, one ``TimeSeriesDB`` answers build / search / add /
-save / load.
+Two frozen configs split the API (FAISS-style):
+
+* ``repro.encoders.IndexSpec`` — what the index *is*: the encoder name
+  (``"ssh"``, ``"srp"``, ``"ssh-multires"``, or any registered encoder)
+  plus its stage params and seed.
+* ``repro.db.SearchConfig``   — what a query *does*: topk, band,
+  candidate width, searcher backend, kernel backend.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 
 from repro.configs import get_arch
-from repro.core import SSHParams, brute_force_topk, precision_at_k
+from repro.core import brute_force_topk, precision_at_k
 from repro.data.timeseries import extract_subsequences, synthetic_ecg
 from repro.db import TimeSeriesDB
+from repro.encoders import IndexSpec
 
 
 def main() -> None:
@@ -22,12 +27,14 @@ def main() -> None:
     print(f"database: {series.shape[0]} subsequences of length "
           f"{series.shape[1]}")
 
-    # 2. index structure — Sketch (W=48, δ=3) → Shingle (n=12) → Hash (K=40)
+    # 2. index structure — one frozen IndexSpec names the encoder pipeline:
+    #    Sketch (W=48, δ=3) → Shingle (n=12) → CWS Hash (K=40, L=20)
     #    search policy — from the arch registry, banded for length 256
-    params = SSHParams(window=48, step=3, ngram=12, num_hashes=40,
-                       num_tables=20)
+    spec = IndexSpec(encoder="ssh",
+                     params=dict(window=48, step=3, ngram=12,
+                                 num_hashes=40, num_tables=20))
     config = get_arch("ssh-ecg").search_config(length=256)
-    db = TimeSeriesDB.build(series, params, config)
+    db = TimeSeriesDB.build(series, spec=spec, config=config)
     print(f"built {db!r}")
 
     # 3. query — hash, probe, DTW re-rank (paper Alg. 2)
@@ -45,6 +52,18 @@ def main() -> None:
     # 5. streaming insert — data-independent hashing needs no retraining
     db.add(series[:3] * 1.01)
     print(f"after add: {len(db)} series indexed")
+
+    # 6. encoder swap — same data, same search policy, different hashing:
+    #    multi-resolution shingles carry short- AND long-motif statistics
+    #    in one signature (spec.replace/with_params work too)
+    mr_spec = IndexSpec(encoder="ssh-multires",
+                        params=dict(window=48, step=3, ngrams=(8, 12),
+                                    num_hashes=40, num_tables=20))
+    mr_db = TimeSeriesDB.build(series, spec=mr_spec, config=config)
+    mr_res = mr_db.search(query)
+    print(f"ssh-multires precision@10: "
+          f"{precision_at_k(mr_res.ids, gold, 10):.2f} "
+          f"(swapping encoders is one IndexSpec away)")
 
 
 if __name__ == "__main__":

@@ -50,6 +50,19 @@ class ArchDef:
             return self.config_for_shape(self.config, shape)
         return self.config
 
+    def index_spec(self, smoke: bool = False, **params):
+        """The arch's build-time ``repro.encoders.IndexSpec`` (ssh
+        family): the ``SSHParams`` config lowered to the ``"ssh"``
+        encoder spec, with per-call stage-param overrides.  The build
+        side twin of :meth:`search_config`."""
+        if self.family != "ssh":
+            raise ValueError(
+                f"arch {self.name!r} (family {self.family!r}) has no "
+                "index spec; index_spec() is for ssh arches")
+        cfg = self.smoke_config if smoke else self.config
+        spec = cfg.to_spec()
+        return spec.with_params(**params) if params else spec
+
     def search_config(self, length: Optional[int] = None, **overrides):
         """The arch's ``SearchConfig``, optionally adapted to a series
         length (UCR-suite 5% band convention: ``max(4, length // 20)``)

@@ -49,6 +49,40 @@ class SSHParams:
         if self.ngram > 20:
             raise ValueError("shingle space 2^n exceeds 1M bins; use n<=20")
 
+    def to_spec(self):
+        """Lower to the modern ``repro.encoders.IndexSpec`` — the
+        ``"ssh"`` encoder built from the resulting spec is bit-identical
+        to the historical ``SSHParams`` path (same key schedule, same
+        stage functions; pinned by ``tests/test_encoders.py``)."""
+        from repro.encoders import IndexSpec
+        return IndexSpec(
+            encoder="ssh",
+            params=dict(window=self.window, step=self.step,
+                        ngram=self.ngram, num_filters=self.num_filters,
+                        num_hashes=self.num_hashes,
+                        num_tables=self.num_tables),
+            seed=self.seed)
+
+
+def _spec_from_legacy(params, caller: str, stacklevel: int = 3):
+    """Deprecation shim: fold a legacy ``SSHParams`` (or pass through an
+    ``IndexSpec``) into the one spec type every build path consumes.
+    ``caller``/``stacklevel`` keep the warning pointing at the user's
+    call site for every shimmed entry point."""
+    from repro.encoders import IndexSpec
+    if isinstance(params, IndexSpec):
+        return params
+    if isinstance(params, SSHParams):
+        import warnings
+        warnings.warn(
+            f"passing SSHParams to {caller}() is deprecated; pass "
+            "spec=repro.encoders.IndexSpec(encoder='ssh', params={...}) "
+            "instead (results are identical)",
+            DeprecationWarning, stacklevel=stacklevel)
+        return params.to_spec()
+    raise TypeError(f"{caller}() needs an IndexSpec (spec=...) or a "
+                    f"legacy SSHParams, got {type(params).__name__}")
+
 
 @dataclasses.dataclass
 class SSHFunctions:
@@ -83,15 +117,20 @@ def _signature_batch(xs, filters, cws, *, step: int, ngram: int):
 
 def build_signatures(series: jnp.ndarray, fns: SSHFunctions,
                      batch: int = 256) -> jnp.ndarray:
-    """(N, m) -> (N, K) int32 CWS signatures, chunked over the database."""
+    """(N, m) -> (N, K) int32 CWS signatures, chunked over the database.
+
+    Routes through the module-level jitted ``_signature_batch`` so
+    repeated calls (chunked builds, streaming inserts) hit the compile
+    cache instead of re-wrapping ``jax.jit`` around a fresh closure per
+    call — the historical retrace-per-call bug.
+    """
     p = fns.params
     n = series.shape[0]
-    sig_fn = jax.jit(jax.vmap(
-        lambda x: _signature_one(x, fns.filters, fns.cws,
-                                 step=p.step, ngram=p.ngram)))
     out = []
     for lo in range(0, n, batch):
-        out.append(np.asarray(sig_fn(series[lo:lo + batch])))
+        out.append(np.asarray(_signature_batch(
+            series[lo:lo + batch], fns.filters, fns.cws,
+            step=p.step, ngram=p.ngram)))
     return jnp.asarray(np.concatenate(out, axis=0))
 
 
@@ -145,18 +184,23 @@ def probe_topc_batch(query_keys: jnp.ndarray, db_keys: jnp.ndarray,
 
 
 class HostBuckets:
-    """Paper-faithful d hash tables (Python dicts), for reference/tests."""
+    """Paper-faithful d hash tables (Python dicts), for reference/tests.
 
-    def __init__(self, params: SSHParams):
-        self.params = params
+    Accepts the table count directly (encoder-agnostic) or a legacy
+    ``SSHParams`` for compatibility.
+    """
+
+    def __init__(self, num_tables):
+        self.num_tables = (num_tables if isinstance(num_tables, int)
+                           else num_tables.num_tables)
         self.tables: List[Dict[int, List[int]]] = [
-            defaultdict(list) for _ in range(params.num_tables)]
+            defaultdict(list) for _ in range(self.num_tables)]
 
     def insert(self, keys: np.ndarray, base_id: int = 0) -> None:
         """keys: (N, L) uint32."""
         keys = np.asarray(keys)
         for i in range(keys.shape[0]):
-            for t in range(self.params.num_tables):
+            for t in range(self.num_tables):
                 self.tables[t][int(keys[i, t])].append(base_id + i)
 
     def probe(self, query_keys: np.ndarray) -> np.ndarray:
@@ -165,7 +209,7 @@ class HostBuckets:
         from collections import Counter
         query_keys = np.asarray(query_keys)
         counts: Counter = Counter()
-        for t in range(self.params.num_tables):
+        for t in range(self.num_tables):
             counts.update(self.tables[t].get(int(query_keys[t]), ()))
         if not counts:
             return np.empty(0, np.int64)
@@ -175,7 +219,16 @@ class HostBuckets:
 
 @dataclasses.dataclass
 class SSHIndex:
-    """End-to-end SSH index over a database of fixed-length series.
+    """End-to-end index over a database of fixed-length series.
+
+    The hashing itself lives on ``encoder`` (a ``repro.encoders.Encoder``
+    — ``"ssh"``, ``"srp"``, ``"ssh-multires"``, or any registered
+    out-of-tree encoder); the index owns the derived artifacts
+    (signatures, band keys, raw series) plus the probe structures.
+    ``fns`` remains as the legacy ``SSHFunctions`` view for the ``"ssh"``
+    encoder (``None`` otherwise); indexes constructed the historical way
+    (``fns=`` only) materialise their encoder lazily from it, adopting
+    the *same* arrays — bit-identical hashing either way.
 
     ``env_upper``/``env_lower`` cache the Sakoe-Chiba envelopes of every
     database series at radius ``env_radius`` (DESIGN.md §3): the re-rank
@@ -184,7 +237,7 @@ class SSHIndex:
     O(C·m) gather+compare.  ``candidate_envelopes`` computes them lazily
     (and re-computes on a radius change); ``insert`` keeps them aligned.
     """
-    fns: SSHFunctions
+    fns: Optional[SSHFunctions]
     signatures: jnp.ndarray            # (N, K)
     keys: jnp.ndarray                  # (N, L)
     series: Optional[jnp.ndarray]      # (N, m) — kept for re-ranking
@@ -192,23 +245,74 @@ class SSHIndex:
     env_radius: Optional[int] = None
     env_upper: Optional[jnp.ndarray] = None    # (N, m) at env_radius
     env_lower: Optional[jnp.ndarray] = None
+    encoder: Optional[object] = None   # repro.encoders.Encoder
+    # kernel knob for query/insert encoding; defaults to "jnp" because a
+    # directly-constructed (legacy fns-only) index holds signatures from
+    # the historical jnp-only build — modern build()/load() set it
+    # explicitly so queries always hash with the build-time kernel
+    build_backend: str = "jnp"
 
     @classmethod
-    def build(cls, series: jnp.ndarray, params: SSHParams,
+    def build(cls, series: jnp.ndarray, params=None,
               with_host_buckets: bool = False, batch: int = 256,
-              envelope_band: Optional[int] = None) -> "SSHIndex":
-        fns = SSHFunctions.create(params)
-        sigs = build_signatures(series, fns, batch=batch)
-        keys = band_keys(sigs, params)
+              envelope_band: Optional[int] = None, *,
+              spec=None, backend: str = "auto") -> "SSHIndex":
+        """Build from an ``IndexSpec`` (``spec=``, canonical) or a legacy
+        ``SSHParams`` (positional; deprecation shim, identical results).
+        ``backend`` routes the signature build through the Pallas
+        ``sketch_conv`` kernel ("pallas"), the jnp reference ("jnp"), or
+        picks by platform ("auto")."""
+        from repro.encoders import make_encoder
+        from repro.kernels import ops
+        if spec is not None:
+            if params is not None:
+                raise TypeError(
+                    "SSHIndex.build() takes spec= or a legacy SSHParams, "
+                    "not both")
+        else:
+            spec = _spec_from_legacy(params, "SSHIndex.build")
+        # pin the *resolved* backend so queries/inserts — including after
+        # a save/load onto a different platform — always hash with the
+        # kernel the database was built with ("auto" resolves per host)
+        backend = ops.backend_name(ops.resolve_backend(backend))
+        enc = make_encoder(spec, length=int(series.shape[1]))
+        sigs = enc.encode_chunked(series, batch=batch, backend=backend)
+        keys = enc.band_keys(sigs)
+        fns = (enc.legacy_functions()
+               if hasattr(enc, "legacy_functions") else None)
         hb = None
         if with_host_buckets:
-            hb = HostBuckets(params)
+            hb = HostBuckets(enc.num_tables)
             hb.insert(np.asarray(keys))
         idx = cls(fns=fns, signatures=sigs, keys=keys, series=series,
-                  host_buckets=hb)
+                  host_buckets=hb, encoder=enc, build_backend=backend)
         if envelope_band is not None:
             idx.candidate_envelopes(envelope_band)
         return idx
+
+    # -- encoder access ---------------------------------------------------
+    @property
+    def enc(self):
+        """The index's encoder; legacy ``fns``-only indexes materialise
+        an ``"ssh"`` encoder from the stored arrays on first use."""
+        if self.encoder is None:
+            if self.fns is None:
+                raise ValueError("SSHIndex has neither encoder nor fns")
+            from repro.encoders import make_encoder
+            enc = make_encoder(self.fns.params.to_spec(), materialize=False)
+            arrays = {"filters": np.asarray(self.fns.filters)}
+            arrays.update({f"cws/{f}": np.asarray(getattr(self.fns.cws, f))
+                           for f in self.fns.cws._fields})
+            self.encoder = enc.load_arrays(arrays)
+        return self.encoder
+
+    @property
+    def num_hashes(self) -> int:
+        return self.enc.num_hashes
+
+    @property
+    def num_tables(self) -> int:
+        return self.enc.num_tables
 
     def candidate_envelopes(self, radius: int):
         """(upper, lower) envelopes of every database series at ``radius``.
@@ -228,9 +332,11 @@ class SSHIndex:
         return self.env_upper, self.env_lower
 
     def query_signature(self, q: jnp.ndarray) -> jnp.ndarray:
-        p = self.fns.params
-        return _signature_one(q, self.fns.filters, self.fns.cws,
-                              step=p.step, ngram=p.ngram)
+        # queries hash with the SAME kernel backend the database was
+        # built (and is streamed) with — signature identity is a
+        # build-time property, so a "jnp"-built index is never probed
+        # with Pallas-hashed queries (a sign-edge projection could flip)
+        return self.enc.encode(q, backend=self.build_backend)
 
     def query_signatures_multiprobe(self, q: jnp.ndarray,
                                     offsets: int) -> jnp.ndarray:
@@ -239,21 +345,19 @@ class SSHIndex:
         Beyond-paper refinement: the shingle grid only aligns for shifts
         ≡ 0 (mod δ); hashing the query at each residue offset recovers the
         other δ-1 alignment classes at query time (the database is
-        untouched).  Returns (offsets, K).
+        untouched).  Returns (offsets, K).  One fused program serves all
+        offsets (masked fixed-length slices — bit-identical to hashing
+        each ``q[o:]`` separately, without a compile per offset length).
         """
-        p = self.fns.params
-        sigs = [self.query_signature(q[o:]) for o in range(offsets)]
-        return jnp.stack(sigs, axis=0)
+        return self.enc.encode_multiprobe(q, offsets,
+                                          backend=self.build_backend)
 
     def query_keys(self, q: jnp.ndarray) -> jnp.ndarray:
-        sig = self.query_signature(q)
-        return minhash.combine_bands(sig, self.fns.params.num_tables)
+        return self.enc.band_keys(self.query_signature(q))
 
     def query_signatures_batch(self, qs: jnp.ndarray) -> jnp.ndarray:
         """(B, m) query block -> (B, K) signatures, one dispatch."""
-        p = self.fns.params
-        return _signature_batch(qs, self.fns.filters, self.fns.cws,
-                                step=p.step, ngram=p.ngram)
+        return self.enc.encode_batch(qs, backend=self.build_backend)
 
     def query_signatures_batch_multiprobe(self, qs: jnp.ndarray,
                                           offsets: int) -> jnp.ndarray:
@@ -262,14 +366,13 @@ class SSHIndex:
         Offset o hashes qs[:, o:] — same per-query semantics as
         ``query_signatures_multiprobe`` (δ-residue alignment classes).
         """
-        sigs = [self.query_signatures_batch(qs[:, o:])
-                for o in range(offsets)]
-        return jnp.stack(sigs, axis=1)
+        return self.enc.encode_batch_multiprobe(qs, offsets,
+                                                backend=self.build_backend)
 
     def insert(self, series: jnp.ndarray) -> None:
         """Streaming insert (data-independent hashing ⇒ no retraining)."""
-        sigs = build_signatures(series, self.fns)
-        keys = band_keys(sigs, self.fns.params)
+        sigs = self.enc.encode_chunked(series, backend=self.build_backend)
+        keys = self.enc.band_keys(sigs)
         base = int(self.signatures.shape[0])
         self.signatures = jnp.concatenate([self.signatures, sigs], axis=0)
         self.keys = jnp.concatenate([self.keys, keys], axis=0)

@@ -69,7 +69,7 @@ def hash_probe(query: jnp.ndarray, index: SSHIndex, top_c: int,
         if rank_by_signature:
             qk, db = qsigs, index.signatures
         else:
-            qk = minhash.combine_bands(qsigs, index.fns.params.num_tables)
+            qk = minhash.combine_bands(qsigs, index.num_tables)
             db = index.keys
         counts_max = jnp.max(jnp.stack(
             [ops.collision_count(row, db, use_pallas=use_pallas)

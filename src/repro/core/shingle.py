@@ -59,6 +59,32 @@ def shingle_histogram(bits: jnp.ndarray, n: int) -> jnp.ndarray:
 
 
 @functools.partial(jax.jit, static_argnames=("n",))
+def shingle_histogram_masked(bits: jnp.ndarray, n: int,
+                             valid_rows: jnp.ndarray) -> jnp.ndarray:
+    """Histogram over only the shingles fully inside the first
+    ``valid_rows`` bits of each filter column.
+
+    The fused multiprobe path evaluates every δ-offset of a query as a
+    fixed-length shifted slice whose bit-profile has trailing garbage
+    rows; masking the histogram down to the ``valid_rows`` real bits
+    makes the result bit-identical to hashing the shorter series
+    directly.  ``valid_rows`` may be traced (one program serves all
+    offsets).  bits: (N_B, F) uint8 -> counts (F * 2^n,) int32.
+    """
+    n_b, f = bits.shape
+    ids = pack_ngrams(bits.T, n)                      # (F, out)
+    out = n_b - n + 1
+    offsets = (jnp.arange(f, dtype=jnp.int32) << n)[:, None]
+    flat = (ids + offsets).reshape(-1)
+    # shingle i spans bit rows [i, i+n); valid iff i + n <= valid_rows
+    valid = jnp.arange(out, dtype=jnp.int32) < (valid_rows - n + 1)
+    maskf = jnp.broadcast_to(valid[None, :], (f, out)).reshape(-1)
+    dim = f << n
+    tgt = jnp.where(maskf, flat, dim)                 # invalid -> dump bin
+    return jnp.zeros((dim + 1,), jnp.int32).at[tgt].add(1)[:dim]
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
 def shingle_histogram_batch(bits: jnp.ndarray, n: int) -> jnp.ndarray:
     """(B, N_B, F) -> (B, F * 2^n) via one batched 2-D scatter-add.
 

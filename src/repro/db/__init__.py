@@ -17,6 +17,7 @@ never drags the whole serving stack in.
 from repro.db.config import SearchConfig
 
 _LAZY = {
+    "IndexSpec": ("repro.encoders.base", "IndexSpec"),
     "TimeSeriesDB": ("repro.db.database", "TimeSeriesDB"),
     "register_searcher": ("repro.db.registry", "register_searcher"),
     "available_searchers": ("repro.db.registry", "available_searchers"),

@@ -47,17 +47,38 @@ class TimeSeriesDB:
     def __init__(self, index: SSHIndex,
                  config: Optional[SearchConfig] = None, *, mesh=None):
         self.index = index
-        self.config = (config if config is not None
-                       else SearchConfig()).validate()
+        self.config = self._fit_config(
+            index, (config if config is not None
+                    else SearchConfig()).validate())
         self.mesh = mesh
         self._searcher = None
 
+    @staticmethod
+    def _fit_config(index: SSHIndex, config: SearchConfig) -> SearchConfig:
+        """Clamp knobs the index's encoder cannot honour: an encoder
+        without shift-alignment classes (``"srp"``) has nothing to
+        multiprobe, so ``multiprobe_offsets`` folds to 1 instead of
+        every search raising after a completed O(N) build."""
+        if (config.multiprobe_offsets > 1
+                and not index.enc.supports_multiprobe):
+            config = config.replace(multiprobe_offsets=1)
+        return config
+
     # -- construction -----------------------------------------------------
     @classmethod
-    def build(cls, series: jnp.ndarray, params: SSHParams,
-              config: Optional[SearchConfig] = None, *, mesh=None,
-              batch: int = 256) -> "TimeSeriesDB":
+    def build(cls, series: jnp.ndarray, params=None,
+              config: Optional[SearchConfig] = None, *, spec=None,
+              mesh=None, batch: int = 256) -> "TimeSeriesDB":
         """Paper Alg. 1 behind the facade.
+
+        Canonical form: ``TimeSeriesDB.build(series, spec=IndexSpec(...),
+        config=SearchConfig(...))`` — the frozen ``IndexSpec`` names the
+        encoder (``"ssh"``, ``"srp"``, ``"ssh-multires"``, or any
+        registered encoder) and its stage params; a legacy ``SSHParams``
+        in the ``params`` slot still works as a one-release deprecation
+        shim with identical results.  ``config.backend`` drives the
+        signature-build kernels too (Pallas ``sketch_conv`` on the
+        "pallas"/TPU-auto path).
 
         Host buckets are built when the config probes them, and the
         database envelopes are precomputed at ``config.band`` when the
@@ -66,11 +87,17 @@ class TimeSeriesDB:
         """
         config = (config if config is not None else SearchConfig()) \
             .validate()
+        if spec is None and params is not None:
+            # lower here so the DeprecationWarning names THIS entry point
+            # and points at the user's call site
+            from repro.core.index import _spec_from_legacy
+            spec = _spec_from_legacy(params, "TimeSeriesDB.build")
+            params = None
         env_band = config.band if config.use_lb_cascade else None
         index = SSHIndex.build(
-            jnp.asarray(series), params,
+            jnp.asarray(series), params, spec=spec,
             with_host_buckets=config.use_host_buckets, batch=batch,
-            envelope_band=env_band)
+            envelope_band=env_band, backend=config.backend)
         return cls(index, config, mesh=mesh)
 
     # -- search policy ----------------------------------------------------
@@ -88,7 +115,7 @@ class TimeSeriesDB:
         ``db.reconfigure(band=8, searcher="engine")`` — the index is
         untouched; only the policy object changes.  Returns ``self``.
         """
-        new = self.config.replace(**changes)
+        new = self._fit_config(self.index, self.config.replace(**changes))
         if self._searcher is not None:
             self._searcher.close()
             self._searcher = None
@@ -161,7 +188,7 @@ class TimeSeriesDB:
         if db.config.use_host_buckets and index.host_buckets is None:
             from repro.core.index import HostBuckets
             import numpy as np
-            index.host_buckets = HostBuckets(index.fns.params)
+            index.host_buckets = HostBuckets(index.num_tables)
             index.host_buckets.insert(np.asarray(index.keys))
         return db
 
@@ -189,8 +216,15 @@ class TimeSeriesDB:
         return searcher.engine
 
     @property
-    def params(self) -> SSHParams:
-        return self.index.fns.params
+    def spec(self):
+        """The frozen ``repro.encoders.IndexSpec`` this index was built
+        from (what persistence records and ``load`` reconstructs by)."""
+        return self.index.enc.spec
+
+    @property
+    def params(self) -> Optional[SSHParams]:
+        """Legacy ``SSHParams`` view (``None`` for non-ssh encoders)."""
+        return self.index.fns.params if self.index.fns is not None else None
 
     @property
     def length(self) -> int:
@@ -202,6 +236,7 @@ class TimeSeriesDB:
 
     def __repr__(self) -> str:
         return (f"TimeSeriesDB(n={len(self)}, "
-                f"K={self.params.num_hashes}, L={self.params.num_tables}, "
+                f"encoder={self.spec.encoder!r}, "
+                f"K={self.index.num_hashes}, L={self.index.num_tables}, "
                 f"searcher={self.config.searcher!r}, "
                 f"backend={self.config.backend!r})")

@@ -7,40 +7,44 @@ sketch→shingle→hash build again.
 
 Layout of a saved database directory::
 
-    <dir>/ssh_db.json        # params, array manifest, config, flags
+    <dir>/ssh_db.json        # IndexSpec, array manifest, config, flags
     <dir>/index/step_*/      # repro.checkpoint shard(s) + manifest
 
 Arrays ride the existing :mod:`repro.checkpoint` layer (atomic publish,
 shard-splitting, resharding restore), so a crashed ``save()`` never
 corrupts the previous database.  Everything needed for bit-identical
 answers is stored — signatures, band keys, raw series, cached envelopes,
-AND the materialised random functions (filter bank + CWS fields), so a
-loaded index hashes queries and streamed inserts exactly like the index
-that was saved, independent of any future change to jax's PRNG.
+AND the encoder's materialised random state (under ``encoder/<leaf>``),
+so a loaded index hashes queries and streamed inserts exactly like the
+index that was saved, independent of any future change to jax's PRNG.
+
+Format v2 records the ``repro.encoders.IndexSpec``; ``load`` rebuilds
+the encoder through the registry and REFUSES a spec/artifact mismatch
+(array names or shapes that disagree with what the spec implies, or a
+signature width that disagrees with the encoder's K).  v1 directories
+(pre-encoder, ``"ssh"`` only) remain loadable: their ``params`` block
+lowers to ``IndexSpec(encoder="ssh", ...)``.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 from pathlib import Path
 from typing import Any, Dict, Optional, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import latest_step, restore_checkpoint, \
     save_checkpoint
-from repro.core.index import HostBuckets, SSHFunctions, SSHIndex, SSHParams
-from repro.core.minhash import CWSParams
+from repro.core.index import HostBuckets, SSHIndex
 from repro.db.config import SearchConfig
+from repro.encoders import IndexSpec, encoder_class
+from repro.kernels import ops
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
 META_FILE = "ssh_db.json"
 ARRAYS_SUBDIR = "index"
-
-#: CWSParams fields, serialised as ``cws/<field>`` array leaves.
-_CWS_FIELDS = tuple(CWSParams._fields)
+_ENC_PREFIX = "encoder/"
 
 
 def _index_arrays(index: SSHIndex) -> Dict[str, np.ndarray]:
@@ -48,10 +52,9 @@ def _index_arrays(index: SSHIndex) -> Dict[str, np.ndarray]:
     arrays: Dict[str, np.ndarray] = {
         "signatures": np.asarray(index.signatures),
         "keys": np.asarray(index.keys),
-        "filters": np.asarray(index.fns.filters),
     }
-    for name in _CWS_FIELDS:
-        arrays[f"cws/{name}"] = np.asarray(getattr(index.fns.cws, name))
+    for name, arr in index.enc.arrays().items():
+        arrays[f"{_ENC_PREFIX}{name}"] = np.asarray(arr)
     if index.series is not None:
         arrays["series"] = np.asarray(index.series)
     if index.env_radius is not None and index.env_upper is not None:
@@ -85,13 +88,14 @@ def save_database(directory: str | Path, index: SSHIndex,
     meta: Dict[str, Any] = {
         "format_version": FORMAT_VERSION,
         "checkpoint_step": step,
-        "params": dataclasses.asdict(index.fns.params),
+        "spec": index.enc.spec.to_dict(),
         "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                    for k, v in arrays.items()},
         "n_series": int(index.signatures.shape[0]),
         "has_series": index.series is not None,
         "with_host_buckets": index.host_buckets is not None,
         "env_radius": index.env_radius if "env_upper" in arrays else None,
+        "build_backend": index.build_backend,
         "config": config.to_dict() if config is not None else None,
     }
     tmp = directory / f".{META_FILE}.tmp{os.getpid()}"
@@ -100,15 +104,32 @@ def save_database(directory: str | Path, index: SSHIndex,
     return directory
 
 
+def _spec_and_encoder_arrays(meta: Dict[str, Any],
+                             arrays: Dict[str, np.ndarray]):
+    """(spec, encoder leaf dict) for either format version."""
+    if meta["format_version"] >= 2:
+        spec = IndexSpec.from_dict(meta["spec"])
+        enc_arrays = {k[len(_ENC_PREFIX):]: v for k, v in arrays.items()
+                      if k.startswith(_ENC_PREFIX)}
+        return spec, enc_arrays
+    # v1: pre-encoder layout — SSHParams fields + filters/cws/* leaves
+    from repro.core.index import SSHParams
+    spec = SSHParams(**meta["params"]).to_spec()
+    enc_arrays = {k: v for k, v in arrays.items()
+                  if k == "filters" or k.startswith("cws/")}
+    return spec, enc_arrays
+
+
 def load_database(directory: str | Path
                   ) -> Tuple[SSHIndex, Optional[SearchConfig]]:
     """Inverse of :func:`save_database`.
 
     Returns ``(index, config)`` — ``config`` is ``None`` when the saver
-    did not record one.  The loaded index is bit-identical to the saved
-    one (same signatures, keys, series, envelope cache, and random
-    functions), so searches answer identically and streaming ``insert``
-    continues from the same hash functions.
+    did not record one.  The encoder is reconstructed from the persisted
+    ``IndexSpec`` through the registry and adopts the persisted random
+    state — a spec/artifact mismatch (tampered meta, wrong-encoder
+    arrays, foreign signature width) raises ``ValueError`` instead of
+    silently answering from inconsistent hash functions.
     """
     directory = Path(directory)
     meta_path = directory / META_FILE
@@ -117,24 +138,46 @@ def load_database(directory: str | Path
                                 f"(missing {META_FILE})")
     meta = json.loads(meta_path.read_text())
     version = meta.get("format_version")
-    if version != FORMAT_VERSION:
+    if version not in (1, FORMAT_VERSION):
         raise ValueError(f"unsupported database format_version {version!r} "
-                         f"(this release reads {FORMAT_VERSION})")
+                         f"(this release reads 1 and {FORMAT_VERSION})")
 
     tree_like = {k: np.zeros(info["shape"], dtype=np.dtype(info["dtype"]))
                  for k, info in meta["arrays"].items()}
     _, arrays = restore_checkpoint(directory / ARRAYS_SUBDIR, tree_like,
                                    step=meta.get("checkpoint_step"))
 
-    params = SSHParams(**meta["params"])
-    fns = SSHFunctions(
-        params=params, filters=arrays["filters"],
-        cws=CWSParams(**{n: arrays[f"cws/{n}"] for n in _CWS_FIELDS}))
+    spec, enc_arrays = _spec_and_encoder_arrays(meta, arrays)
+    enc = encoder_class(spec.encoder)(spec.validate())
+    enc.load_arrays(enc_arrays)          # raises on spec/artifact mismatch
+    sig_width = int(np.shape(arrays["signatures"])[-1])
+    if sig_width != enc.num_hashes:
+        raise ValueError(
+            f"saved signatures have K={sig_width} but the saved spec "
+            f"implies K={enc.num_hashes} — spec/artifact mismatch")
+    key_width = int(np.shape(arrays["keys"])[-1])
+    if key_width != enc.num_tables:
+        raise ValueError(
+            f"saved band keys have L={key_width} but the saved spec "
+            f"implies L={enc.num_tables} — spec/artifact mismatch")
+    fns = (enc.legacy_functions()
+           if hasattr(enc, "legacy_functions") else None)
 
     host_buckets = None
     if meta["with_host_buckets"]:
-        host_buckets = HostBuckets(params)
+        host_buckets = HostBuckets(enc.num_tables)
         host_buckets.insert(np.asarray(arrays["keys"]))
+
+    build_backend = meta.get("build_backend", "jnp")
+    if build_backend == "pallas" and \
+            ops.backend_name(ops.resolve_backend("auto")) != "pallas":
+        import warnings
+        warnings.warn(
+            "this database was built with the Pallas kernel backend; on "
+            "a non-TPU host its queries/inserts run the kernel in "
+            "interpret mode (orders of magnitude slower). Rebuild with "
+            "backend='jnp' for CPU serving.", RuntimeWarning,
+            stacklevel=3)
 
     env_radius = meta.get("env_radius")
     index = SSHIndex(
@@ -145,7 +188,10 @@ def load_database(directory: str | Path
         host_buckets=host_buckets,
         env_radius=env_radius,
         env_upper=arrays.get("env_upper"),
-        env_lower=arrays.get("env_lower"))
+        env_lower=arrays.get("env_lower"),
+        encoder=enc,
+        # v1 metas predate the knob; their signatures are jnp-built
+        build_backend=build_backend)
 
     config = (SearchConfig.from_dict(meta["config"])
               if meta.get("config") else None)

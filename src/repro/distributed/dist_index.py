@@ -61,34 +61,16 @@ def build_sharded(series: jnp.ndarray, filters: jnp.ndarray, cws: dict,
     return fn(series)
 
 
-def make_query_fn(params: SSHParams, mesh: Mesh, *, length: int,
-                  config: Optional[SearchConfig] = None,
-                  top_c: Optional[int] = None, band: Optional[int] = None,
-                  topk: Optional[int] = None,
-                  backend: Optional[str] = None):
-    """Returns query(series_shard, sigs_shard, filters, cws, q) -> (ids, d).
-
-    Canonical form: ``make_query_fn(params, mesh, length=m, config=cfg)``
-    — ``cfg.top_c``/``cfg.band``/``cfg.topk`` set the probe and re-rank
-    widths, and ``cfg.backend`` selects the shard-local DTW
-    implementation via the shared dispatch (``repro.kernels.ops``): the
-    Pallas wavefront kernel on TPU, the ``dtw_batch`` scan oracle
-    elsewhere — the same knob as the local re-rank pipeline (DESIGN.md
-    §3).  A band radius is required (the shard-local re-rank is banded).
-
-    Deprecation shim (one release): the loose ``top_c=/band=/topk=/
-    backend=`` kwargs still work under a ``DeprecationWarning``.
+def _make_query_core(encode, mesh: Mesh, config: SearchConfig):
+    """The ONE shard-local query schedule, parameterised by a pure
+    ``encode(q, state) -> (K,)`` signature fn: local collision scan over
+    raw signatures + local top-C/P + local banded DTW, ONE all_gather of
+    k·2 scalars per query.  Both public factories delegate here so the
+    collective schedule cannot diverge between the legacy and encoder
+    entry points.
     """
-    if config is None:
-        legacy = {k: v for k, v in dict(top_c=top_c, band=band, topk=topk,
-                                        backend=backend).items()
-                  if v is not None}
-        config = config_from_legacy_kwargs("make_query_fn", legacy)
-    elif any(v is not None for v in (top_c, band, topk, backend)):
-        raise TypeError("make_query_fn() takes either config= or legacy "
-                        "top_c/band/topk/backend kwargs, not both")
     if config.band is None:
-        raise ValueError("make_query_fn requires a band radius "
+        raise ValueError("the sharded query fn requires a band radius "
                          "(config.band is None)")
     top_c, band, topk = config.top_c, config.band, config.topk
     backend = config.backend
@@ -96,14 +78,9 @@ def make_query_fn(params: SSHParams, mesh: Mesh, *, length: int,
     n_shards = int(mesh.devices.size)
     local_c = max(topk, top_c // n_shards)
 
-    def local_query(series, sigs, filters, cws, q):
-        from repro.core import minhash, shingle, sketch
+    def local_query(series, sigs, state, q):
         from repro.kernels import ops
-        cwsp = minhash.CWSParams(**cws)
-        bits = sketch.sketch_bits(q, filters, params.step)
-        counts = shingle.shingle_histogram(bits, params.ngram)
-        sig = minhash.cws_hash(counts, cwsp)                  # (K,)
-
+        sig = encode(q, state)                                # (K,)
         coll = jnp.sum((sigs == sig[None, :]).astype(jnp.int32), axis=-1)
         _, cand = jax.lax.top_k(coll, local_c)                # local ids
         d = ops.dtw_rerank(q, jnp.take(series, cand, axis=0), band,
@@ -120,8 +97,71 @@ def make_query_fn(params: SSHParams, mesh: Mesh, *, length: int,
 
     return shard_map_nocheck(
         local_query, mesh,
-        in_specs=(P(axes, None), P(axes, None), P(), P(), P()),
+        in_specs=(P(axes, None), P(axes, None), P(), P()),
         out_specs=(P(), P()))
+
+
+def make_query_fn(params: SSHParams, mesh: Mesh, *, length: int,
+                  config: Optional[SearchConfig] = None,
+                  top_c: Optional[int] = None, band: Optional[int] = None,
+                  topk: Optional[int] = None,
+                  backend: Optional[str] = None):
+    """Returns query(series_shard, sigs_shard, filters, cws, q) -> (ids, d).
+
+    Canonical form: ``make_query_fn(params, mesh, length=m, config=cfg)``
+    — ``cfg.top_c``/``cfg.band``/``cfg.topk`` set the probe and re-rank
+    widths, and ``cfg.backend`` selects the shard-local DTW
+    implementation via the shared dispatch (``repro.kernels.ops``): the
+    Pallas wavefront kernel on TPU, the ``dtw_batch`` scan oracle
+    elsewhere — the same knob as the local re-rank pipeline (DESIGN.md
+    §3).  A band radius is required (the shard-local re-rank is banded).
+    The filter bank and CWS fields stay call-time operands (historical
+    signature); the schedule itself is :func:`_make_query_core`.
+
+    Deprecation shim (one release): the loose ``top_c=/band=/topk=/
+    backend=`` kwargs still work under a ``DeprecationWarning``.
+    """
+    if config is None:
+        legacy = {k: v for k, v in dict(top_c=top_c, band=band, topk=topk,
+                                        backend=backend).items()
+                  if v is not None}
+        config = config_from_legacy_kwargs("make_query_fn", legacy)
+    elif any(v is not None for v in (top_c, band, topk, backend)):
+        raise TypeError("make_query_fn() takes either config= or legacy "
+                        "top_c/band/topk/backend kwargs, not both")
+    if config.band is None:
+        raise ValueError("make_query_fn requires a band radius "
+                         "(config.band is None)")
+
+    def encode(q, state):
+        from repro.core import minhash, shingle, sketch
+        from repro.encoders.pipeline import CWSHasher
+        cwsp = CWSHasher.cws_params(state)   # one home for the cws/ prefix
+        bits = sketch.sketch_bits(q, state["filters"], params.step)
+        counts = shingle.shingle_histogram(bits, params.ngram)
+        return minhash.cws_hash(counts, cwsp)                 # (K,)
+
+    core = _make_query_core(encode, mesh, config)
+
+    def query(series, sigs, filters, cws, q):
+        state = {"filters": filters,
+                 **{f"cws/{k}": v for k, v in cws.items()}}
+        return core(series, sigs, state, q)
+
+    return query
+
+
+def make_encoder_query_fn(encoder, mesh: Mesh, *,
+                          config: SearchConfig):
+    """Encoder-generic twin of :func:`make_query_fn` — the facade path.
+
+    Returns ``query(series_shard, sigs_shard, state, q) -> (ids, dists)``
+    where ``state`` is the encoder's materialised array dict
+    (``encoder.state()``, replicated).  Any registered encoder whose
+    ``pure_encode_fn`` is shard_map-safe serves unchanged — ``"ssh"``,
+    ``"srp"``, ``"ssh-multires"``, or out-of-tree.
+    """
+    return _make_query_core(encoder.pure_encode_fn(), mesh, config)
 
 
 def index_shardings(mesh: Mesh) -> Tuple[NamedSharding, NamedSharding]:

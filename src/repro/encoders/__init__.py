@@ -1,0 +1,31 @@
+"""repro.encoders — pluggable encoder pipeline API (DESIGN.md §7).
+
+Public API:
+  IndexSpec                          — frozen build-time spec (the twin of
+                                       ``repro.db.SearchConfig``)
+  Encoder / Sketcher / Shingler / Hasher
+                                     — the facade + stage protocols
+  register_encoder / available_encoders / encoder_class / make_encoder
+                                     — the encoder registry
+
+Built-ins (registered on first registry lookup): ``"ssh"`` (the paper's
+sketch→shingle→CWS pipeline, bit-identical to the historical
+``SSHParams`` path), ``"srp"`` (signed-random-projection baseline,
+subsumes ``core/srp.py``), and ``"ssh-multires"`` (concatenated
+multi-resolution shingle histograms — beyond-paper).
+
+``IndexSpec`` and the protocols import eagerly (they are light and sit
+below the legacy entry points in the import graph); the stage
+implementations load lazily through the registry so
+``from repro.encoders import IndexSpec`` never drags the kernel stack in.
+"""
+from repro.encoders.base import (Encoder, Hasher, IndexSpec, Shingler,
+                                 Sketcher)
+from repro.encoders.registry import (available_encoders, encoder_class,
+                                     make_encoder, register_encoder)
+
+__all__ = [
+    "IndexSpec", "Encoder", "Sketcher", "Shingler", "Hasher",
+    "register_encoder", "available_encoders", "encoder_class",
+    "make_encoder",
+]

@@ -1,0 +1,299 @@
+"""Encoder API core — ``IndexSpec`` and the stage/encoder protocols.
+
+The paper frames SSH as a *composition* of interchangeable LSH stages
+(Fig. 5): a sketcher turns a series into a bit-profile, a shingler turns
+the bit-profile into a weighted set, a hasher turns the weighted set into
+a fixed-width signature.  ``repro.encoders`` makes that composition a
+first-class API (DESIGN.md §7):
+
+* **`IndexSpec`** — the frozen *build-time* twin of
+  ``repro.db.SearchConfig``: encoder name + stage params + seed.  It is
+  what the index *is*; everything a query can vary stays on
+  ``SearchConfig``.  Specs serialise (``to_dict``/``from_dict``) and are
+  persisted inside every saved database directory so ``load()`` can
+  reconstruct the encoder through the registry.
+* **Stage protocols** (`Sketcher`, `Shingler`, `Hasher`) — the contract
+  each pipeline stage satisfies; `repro.encoders.pipeline` ships the
+  paper's implementations and composes them into the ``"ssh"`` and
+  ``"ssh-multires"`` encoders.
+* **`Encoder`** — the facade every index build/query path consumes:
+  ``materialize`` samples the data-independent random functions,
+  ``encode``/``encode_batch`` produce ``(K,)`` int32 signatures (with the
+  same ``backend="pallas"|"jnp"|"auto"`` knob as the search side),
+  ``band_keys`` folds K hashes into L bucket keys, and
+  ``arrays``/``load_arrays`` round-trip the materialised state for
+  persistence (``load_arrays`` *refuses* artifacts that do not match the
+  spec).
+
+This module is import-light (no ``repro.core.index``) so the legacy
+entry points can shim through it without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Dict, Iterable, Mapping, Optional, Protocol, \
+    runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import minhash
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """What the index *is*: encoder name + stage params + seed.
+
+    ``params`` holds the encoder's stage hyper-parameters (e.g. for
+    ``"ssh"``: window/step/ngram/num_filters/num_hashes/num_tables);
+    unset keys take the encoder's documented defaults.  Two indexes
+    built from equal specs over equal data are bit-identical — the spec
+    plus the materialised arrays is the complete identity of an index,
+    which is why persistence stores both and refuses a mismatch.
+    """
+
+    encoder: str = "ssh"
+    params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    seed: int = 7
+
+    def __post_init__(self):
+        # defensive copy (a caller mutating the dict they passed must not
+        # mutate a frozen spec) + normalisation: sequence params become
+        # tuples so from_dict(to_dict(spec)) == spec survives the JSON
+        # list/tuple round-trip
+        params = {k: tuple(v) if isinstance(v, (list, tuple)) else v
+                  for k, v in dict(self.params).items()}
+        object.__setattr__(self, "params", params)
+
+    # -- validation -------------------------------------------------------
+    def validate(self) -> "IndexSpec":
+        """Raise ``ValueError`` on an unknown encoder name or
+        inconsistent stage params; returns ``self`` for chaining."""
+        if not isinstance(self.encoder, str) or not self.encoder:
+            raise ValueError(
+                f"encoder must be a non-empty string, got {self.encoder!r}")
+        from repro.encoders import registry
+        cls = registry.encoder_class(self.encoder)     # raises if unknown
+        cls.validate_params(self)
+        return self
+
+    # -- derived ----------------------------------------------------------
+    def replace(self, **changes: Any) -> "IndexSpec":
+        """``dataclasses.replace`` + ``validate`` in one step."""
+        return dataclasses.replace(self, **changes).validate()
+
+    def with_params(self, **params: Any) -> "IndexSpec":
+        """New spec with ``params`` merged over the current stage params."""
+        return self.replace(params={**self.params, **params})
+
+    def __hash__(self):
+        # the generated frozen-dataclass hash would raise on the dict
+        # field; a spec is a value type (cache keys, memoised builds)
+        return hash((self.encoder, tuple(sorted(self.params.items())),
+                     self.seed))
+
+    # -- (de)serialisation ------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {"encoder": self.encoder, "params": dict(self.params),
+                "seed": self.seed}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "IndexSpec":
+        """Tolerant inverse of ``to_dict``: unknown top-level keys (a
+        spec written by a newer release) are dropped with a warning."""
+        known = {f.name for f in dataclasses.fields(cls)}
+        extra = sorted(set(d) - known)
+        if extra:
+            warnings.warn(f"IndexSpec.from_dict: ignoring unknown fields "
+                          f"{extra}", RuntimeWarning, stacklevel=2)
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+# --------------------------------------------------------------------------
+# stage protocols — what pipeline.py composes, what out-of-tree encoders
+# implement
+# --------------------------------------------------------------------------
+
+@runtime_checkable
+class Sketcher(Protocol):
+    """Stage 1: series ``(..., m)`` → bit-profile ``(..., N_B, F)``."""
+
+    def materialize(self, key) -> Dict[str, jnp.ndarray]:
+        """Sample the stage's random state (e.g. the filter bank)."""
+
+    def sketch(self, x: jnp.ndarray, state: Dict[str, jnp.ndarray]
+               ) -> jnp.ndarray:
+        """Reference (jnp) bit extraction."""
+
+
+@runtime_checkable
+class Shingler(Protocol):
+    """Stage 2: bit-profile ``(N_B, F)`` → weighted set ``(D,)``."""
+
+    @property
+    def dim(self) -> int:
+        """D — the weighted-set dimensionality the hasher is sized to."""
+
+    @property
+    def min_bits(self) -> int:
+        """Fewest bit-profile rows that still hold one full shingle."""
+
+    def histogram(self, bits: jnp.ndarray) -> jnp.ndarray: ...
+
+    def histogram_masked(self, bits: jnp.ndarray, valid_bits) -> jnp.ndarray:
+        """Histogram counting only shingles fully inside the first
+        ``valid_bits`` rows (the fused multiprobe path)."""
+
+
+@runtime_checkable
+class Hasher(Protocol):
+    """Stage 3: weighted set ``(D,)`` → signature ``(K,)`` int32."""
+
+    def materialize(self, key, dim: int) -> Dict[str, jnp.ndarray]: ...
+
+    def hash(self, counts: jnp.ndarray, state: Dict[str, jnp.ndarray]
+             ) -> jnp.ndarray: ...
+
+
+# --------------------------------------------------------------------------
+# Encoder base
+# --------------------------------------------------------------------------
+
+class Encoder:
+    """Base class / protocol for index-side encoders.
+
+    Lifecycle: ``cls(spec)`` parses the stage params; ``materialize``
+    samples the data-independent random state (idempotent) — or
+    ``load_arrays`` restores a persisted state, refusing arrays whose
+    shapes disagree with the spec.  After either, ``encode*`` produce
+    signatures and ``band_keys`` folds them into bucket keys.
+    """
+
+    #: registry name, set by ``@register_encoder``
+    name: str = ""
+
+    def __init__(self, spec: IndexSpec):
+        self.spec = spec
+
+    # -- registry hooks ---------------------------------------------------
+    @classmethod
+    def validate_params(cls, spec: IndexSpec) -> None:
+        """Raise ``ValueError`` on inconsistent stage params (unknown
+        keys, K % L != 0, ...).  Called by ``IndexSpec.validate``."""
+
+    @classmethod
+    def _check_param_names(cls, spec: IndexSpec,
+                           known: Iterable[str]) -> None:
+        unknown = sorted(set(spec.params) - set(known))
+        if unknown:
+            raise ValueError(
+                f"unknown params {unknown} for encoder "
+                f"{spec.encoder!r}; known: {sorted(known)}")
+
+    # -- capabilities -----------------------------------------------------
+    #: whether the encoder has shift-alignment classes to multiprobe
+    #: (``encode_multiprobe`` works); the facade clamps
+    #: ``multiprobe_offsets`` to 1 for encoders without them
+    supports_multiprobe: bool = False
+
+    # -- shape identity ---------------------------------------------------
+    @property
+    def num_hashes(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def num_tables(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def materialized(self) -> bool:
+        raise NotImplementedError
+
+    # -- lifecycle --------------------------------------------------------
+    def materialize(self, length: Optional[int] = None) -> "Encoder":
+        """Sample the random functions (idempotent).  ``length`` is the
+        series length m — required by encoders whose state is sized to
+        it (``"srp"``), ignored by the SSH family."""
+        raise NotImplementedError
+
+    # -- encoding ---------------------------------------------------------
+    def encode(self, x: jnp.ndarray, *, backend: str = "auto"
+               ) -> jnp.ndarray:
+        """One series ``(m,)`` → signature ``(K,)`` int32."""
+        raise NotImplementedError
+
+    def encode_batch(self, xs: jnp.ndarray, *, backend: str = "auto"
+                     ) -> jnp.ndarray:
+        """Series block ``(B, m)`` → ``(B, K)`` int32, one dispatch."""
+        raise NotImplementedError
+
+    def encode_chunked(self, series: jnp.ndarray, *, batch: int = 256,
+                       backend: str = "auto") -> jnp.ndarray:
+        """Database build: ``(N, m)`` → ``(N, K)`` int32, chunked so the
+        per-dispatch working set stays bounded.  Reuses the cached
+        compiled batch fn — chunked builds and streaming inserts pay
+        trace cost once per chunk *shape*, not once per call."""
+        n = int(series.shape[0])
+        out = []
+        for lo in range(0, n, batch):
+            out.append(np.asarray(
+                self.encode_batch(series[lo:lo + batch], backend=backend)))
+        return jnp.asarray(np.concatenate(out, axis=0))
+
+    def encode_multiprobe(self, q: jnp.ndarray, offsets: int, *,
+                          backend: str = "auto") -> jnp.ndarray:
+        """Signatures of ``offsets`` shifted copies of ``q`` → (O, K).
+
+        Row o equals ``encode(q[o:])`` bit-for-bit.  Encoders without a
+        shift-alignment structure raise ``ValueError``.
+        """
+        raise ValueError(
+            f"encoder {self.spec.encoder!r} has no shift-alignment "
+            "classes; use multiprobe_offsets=1")
+
+    def encode_batch_multiprobe(self, qs: jnp.ndarray, offsets: int, *,
+                                backend: str = "auto") -> jnp.ndarray:
+        """(B, m) → (B, O, K); row [b, o] equals ``encode(qs[b, o:])``."""
+        raise ValueError(
+            f"encoder {self.spec.encoder!r} has no shift-alignment "
+            "classes; use multiprobe_offsets=1")
+
+    def band_keys(self, signatures: jnp.ndarray) -> jnp.ndarray:
+        """(..., K) signatures → (..., L) uint32 bucket keys."""
+        return minhash.combine_bands(signatures, self.num_tables)
+
+    # -- distributed hooks ------------------------------------------------
+    def pure_encode_fn(self):
+        """A pure ``fn(x, state) -> (K,) int32`` over the encoder's
+        materialised array ``state`` — the form ``shard_map`` needs (the
+        random state rides as an explicit replicated operand; the stage
+        hyper-parameters are closed over as static Python values)."""
+        raise NotImplementedError
+
+    def state(self) -> Dict[str, jnp.ndarray]:
+        """Materialised random state as device arrays (what
+        ``pure_encode_fn`` consumes)."""
+        raise NotImplementedError
+
+    # -- persistence ------------------------------------------------------
+    def arrays(self) -> Dict[str, np.ndarray]:
+        """Materialised random state as named host arrays (the leaves
+        persistence stores under ``encoder/<name>``)."""
+        raise NotImplementedError
+
+    def load_arrays(self, arrays: Mapping[str, np.ndarray]) -> "Encoder":
+        """Adopt persisted state.  MUST raise ``ValueError`` when the
+        array names/shapes disagree with what the spec implies — the
+        spec/artifact-mismatch refusal of the persistence contract."""
+        raise NotImplementedError
+
+    def _mismatch(self, detail: str) -> "ValueError":
+        return ValueError(
+            f"saved encoder arrays do not match IndexSpec("
+            f"encoder={self.spec.encoder!r}, params={dict(self.spec.params)!r}"
+            f"): {detail}")
+
+    def __repr__(self) -> str:
+        return (f"{type(self).__name__}(spec={self.spec!r}, "
+                f"materialized={self.materialized})")

@@ -1,0 +1,460 @@
+"""Sketch → Shingle → Hash stage implementations and their composition.
+
+``PipelineEncoder`` composes a :class:`Sketcher`, a :class:`Shingler`,
+and a :class:`Hasher` (the three stages of paper Fig. 5) into one
+:class:`repro.encoders.Encoder`.  Two built-ins register here:
+
+* ``"ssh"`` — the paper's pipeline: Gaussian filter-bank sketch (§4.1),
+  n-gram shingle histogram (§4.2), 0-bit CWS (§4.3).  Bit-identical to
+  the historical ``SSHParams``/``SSHFunctions`` path (same PRNG key
+  schedule, same stage functions) — the golden test in
+  ``tests/test_encoders.py`` pins this.
+* ``"ssh-multires"`` — beyond-paper scenario: the shingle stage emits
+  the *concatenation* of n-gram histograms at several resolutions, so
+  one signature carries both short-motif and long-motif statistics
+  (multi-resolution shingles; CWS hashes the concatenated weighted set,
+  which is the weighted-Jaccard of the union — per-resolution evidence
+  is averaged with histogram-mass weights).
+
+Backend knob: signature *builds* route the sketch stage through the
+Pallas ``kernels.ops.sketch_conv`` kernel when ``backend`` resolves to
+Pallas — the (B, N_B·F) strided-matvec is the build hot path — and
+through the jnp reference otherwise.  Integer signatures mean results
+are backend-independent wherever the sign bits agree (projections are
+computed identically up to float reassociation).
+
+Compiled-function caching: every jitted encode path is constructed ONCE
+per materialised encoder and cached on the instance, so chunked builds
+and streaming inserts stop paying per-call retrace overhead (the
+historical ``build_signatures`` re-wrapped ``jax.jit`` on every call).
+The fused multiprobe path evaluates every δ-offset inside one program
+(shifted fixed-length slices + mask-aware histograms), replacing the
+per-offset programs that each compiled against a distinct query length.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import minhash, shingle, sketch
+from repro.encoders.base import Encoder, IndexSpec
+from repro.encoders.registry import register_encoder
+from repro.kernels import ops
+
+
+# --------------------------------------------------------------------------
+# stages
+# --------------------------------------------------------------------------
+
+class GaussianFilterSketcher:
+    """§4.1 — sign bits of a strided random filter-bank convolution."""
+
+    def __init__(self, window: int, step: int, num_filters: int = 1):
+        if window < 1 or step < 1 or num_filters < 1:
+            raise ValueError("window, step, num_filters must be >= 1")
+        self.window, self.step, self.num_filters = window, step, num_filters
+
+    def materialize(self, key) -> Dict[str, jnp.ndarray]:
+        return {"filters": sketch.make_filter(key, self.window,
+                                              self.num_filters)}
+
+    def sketch(self, x: jnp.ndarray, state: Mapping[str, jnp.ndarray]
+               ) -> jnp.ndarray:
+        return sketch.sketch_bits(x, state["filters"], self.step)
+
+    def sketch_batch_pallas(self, xs: jnp.ndarray,
+                            state: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+        """(B, m) → (B, N_B, F) bits through the Pallas strided-matvec
+        kernel (interpret mode off-TPU)."""
+        return ops.sketch_bits(xs, state["filters"], self.step,
+                               use_pallas=True)
+
+    def num_bits(self, o, m: int):
+        """Valid window count for a query shifted by ``o`` (traced ok)."""
+        return (m - o - self.window) // self.step + 1
+
+
+class NgramShingler:
+    """§4.2 — dense n-gram histogram over the bit-profile."""
+
+    def __init__(self, ngram: int, num_filters: int = 1):
+        self.ngram, self.num_filters = ngram, num_filters
+
+    @property
+    def dim(self) -> int:
+        return shingle.shingle_space(self.ngram, self.num_filters)
+
+    @property
+    def min_bits(self) -> int:
+        return self.ngram
+
+    def histogram(self, bits: jnp.ndarray) -> jnp.ndarray:
+        return shingle.shingle_histogram(bits, self.ngram)
+
+    def histogram_masked(self, bits: jnp.ndarray, valid_bits) -> jnp.ndarray:
+        return shingle.shingle_histogram_masked(bits, self.ngram, valid_bits)
+
+
+class MultiResShingler:
+    """Concatenated n-gram histograms at several resolutions.
+
+    The weighted set is the disjoint union of the per-n shingle sets, so
+    the CWS collision probability becomes the histogram-mass-weighted
+    average of the per-resolution weighted-Jaccard similarities.
+    """
+
+    def __init__(self, ngrams: Sequence[int], num_filters: int = 1):
+        self.ngrams: Tuple[int, ...] = tuple(int(n) for n in ngrams)
+        self.num_filters = num_filters
+
+    @property
+    def dim(self) -> int:
+        return sum(shingle.shingle_space(n, self.num_filters)
+                   for n in self.ngrams)
+
+    @property
+    def min_bits(self) -> int:
+        return max(self.ngrams)
+
+    def histogram(self, bits: jnp.ndarray) -> jnp.ndarray:
+        return jnp.concatenate(
+            [shingle.shingle_histogram(bits, n) for n in self.ngrams])
+
+    def histogram_masked(self, bits: jnp.ndarray, valid_bits) -> jnp.ndarray:
+        return jnp.concatenate(
+            [shingle.shingle_histogram_masked(bits, n, valid_bits)
+             for n in self.ngrams])
+
+
+class CWSHasher:
+    """§4.3 — 0-bit Consistent Weighted Sampling, K independent hashes."""
+
+    def __init__(self, num_hashes: int):
+        self.num_hashes = num_hashes
+
+    def materialize(self, key, dim: int) -> Dict[str, jnp.ndarray]:
+        cws = minhash.make_cws(key, self.num_hashes, dim)
+        return {f"cws/{f}": getattr(cws, f) for f in cws._fields}
+
+    @staticmethod
+    def cws_params(state: Mapping[str, jnp.ndarray]) -> minhash.CWSParams:
+        return minhash.CWSParams(
+            **{f: state[f"cws/{f}"] for f in minhash.CWSParams._fields})
+
+    def hash(self, counts: jnp.ndarray, state: Mapping[str, jnp.ndarray]
+             ) -> jnp.ndarray:
+        return minhash.cws_hash(counts, self.cws_params(state))
+
+
+# --------------------------------------------------------------------------
+# the composed encoder
+# --------------------------------------------------------------------------
+
+class PipelineEncoder(Encoder):
+    """Sketcher ∘ Shingler ∘ Hasher behind the one Encoder facade.
+
+    Subclasses parse ``spec.params`` into the three stages in
+    ``_build_stages``; everything else (materialisation key schedule,
+    cached jitted encode paths, fused multiprobe, persistence arrays) is
+    shared.
+    """
+
+    supports_multiprobe = True       # δ-residue shingle alignment classes
+
+    def __init__(self, spec: IndexSpec):
+        super().__init__(spec)
+        self.sketcher, self.shingler, self.hasher, self._num_tables = \
+            self._build_stages(spec)
+        self._state: Optional[Dict[str, jnp.ndarray]] = None
+
+    # subclasses implement -------------------------------------------------
+    @classmethod
+    def _build_stages(cls, spec: IndexSpec):
+        raise NotImplementedError
+
+    # -- shape identity ---------------------------------------------------
+    @property
+    def num_hashes(self) -> int:
+        return self.hasher.num_hashes
+
+    @property
+    def num_tables(self) -> int:
+        return self._num_tables
+
+    @property
+    def materialized(self) -> bool:
+        return self._state is not None
+
+    # -- lifecycle --------------------------------------------------------
+    def materialize(self, length: Optional[int] = None) -> "PipelineEncoder":
+        if self._state is None:
+            # key schedule identical to the historical SSHFunctions.create
+            key = jax.random.PRNGKey(self.spec.seed)
+            kf, kc = jax.random.split(key)
+            state = dict(self.sketcher.materialize(kf))
+            state.update(self.hasher.materialize(kc, self.shingler.dim))
+            self._adopt(state)
+        return self
+
+    def _adopt(self, state: Dict[str, jnp.ndarray]) -> None:
+        """Install materialised state and build the cached jitted encode
+        paths (once per encoder — chunked builds and streaming inserts
+        reuse them instead of re-tracing)."""
+        self._state = {k: jnp.asarray(v) for k, v in state.items()}
+        # trace-time counters: incremented when jax (re)traces a path, not
+        # on every call — tests pin "compiled once" with these
+        self.trace_counts: Dict[str, int] = collections.defaultdict(int)
+
+        def _count(name: str) -> None:
+            self.trace_counts[name] += 1
+
+        def one(x):
+            _count("one")
+            bits = self.sketcher.sketch(x, self._state)
+            return self.hasher.hash(self.shingler.histogram(bits),
+                                    self._state)
+
+        def batch(xs):
+            _count("batch")
+            return jax.vmap(one)(xs)
+
+        def batch_pallas(xs):
+            _count("batch_pallas")
+            bits = self.sketcher.sketch_batch_pallas(xs, self._state)
+            return jax.vmap(lambda b: self.hasher.hash(
+                self.shingler.histogram(b), self._state))(bits)
+
+        def multiprobe(q, offsets: int):
+            # one program for all δ-offsets: offset o encodes the fixed-
+            # length shifted slice and masks the histogram down to the
+            # shingles of q[o:] — bit-identical to encode(q[o:]) without
+            # compiling a distinct program per offset length
+            _count("multiprobe")
+            m = q.shape[-1]
+            qpad = jnp.pad(q, (0, offsets - 1))
+
+            def one_offset(o):
+                x = jax.lax.dynamic_slice(qpad, (o,), (m,))
+                bits = self.sketcher.sketch(x, self._state)
+                v = self.sketcher.num_bits(o, m)
+                counts = self.shingler.histogram_masked(bits, v)
+                return self.hasher.hash(counts, self._state)
+
+            return jax.vmap(one_offset)(jnp.arange(offsets))
+
+        def batch_multiprobe(qs, offsets: int):
+            return jax.vmap(lambda q: multiprobe(q, offsets))(qs)
+
+        def batch_multiprobe_pallas(qs, offsets: int):
+            # same fused-offset semantics, sketch stage through the
+            # Pallas kernel: all B·O shifted slices ride ONE kernel
+            # launch, then mask-aware histograms + CWS per row
+            _count("batch_multiprobe_pallas")
+            b, m = qs.shape
+            qpad = jnp.pad(qs, ((0, 0), (0, offsets - 1)))
+            xs = jnp.stack([qpad[:, o:o + m] for o in range(offsets)],
+                           axis=1).reshape(b * offsets, m)
+            bits = self.sketcher.sketch_batch_pallas(xs, self._state)
+            offs = jnp.tile(jnp.arange(offsets), b)
+
+            def one_row(bits_row, o):
+                v = self.sketcher.num_bits(o, m)
+                counts = self.shingler.histogram_masked(bits_row, v)
+                return self.hasher.hash(counts, self._state)
+
+            sigs = jax.vmap(one_row)(bits, offs)
+            return sigs.reshape(b, offsets, -1)
+
+        self._encode_one = jax.jit(one)
+        self._encode_batch = jax.jit(batch)
+        self._encode_batch_pallas = jax.jit(batch_pallas)
+        self._encode_multiprobe = jax.jit(
+            multiprobe, static_argnames=("offsets",))
+        self._encode_batch_multiprobe = jax.jit(
+            batch_multiprobe, static_argnames=("offsets",))
+        self._encode_batch_multiprobe_pallas = jax.jit(
+            batch_multiprobe_pallas, static_argnames=("offsets",))
+
+    def _require_state(self) -> None:
+        if self._state is None:
+            raise RuntimeError(
+                f"encoder {self.spec.encoder!r} is not materialized; call "
+                "materialize() or load_arrays() first")
+
+    @staticmethod
+    def _use_pallas(backend: str) -> bool:
+        return ops.backend_name(ops.resolve_backend(backend)) == "pallas"
+
+    # -- encoding ---------------------------------------------------------
+    def encode(self, x: jnp.ndarray, *, backend: str = "auto"
+               ) -> jnp.ndarray:
+        self._require_state()
+        if self._use_pallas(backend):
+            return self._encode_batch_pallas(x[None, :])[0]
+        return self._encode_one(x)
+
+    def encode_batch(self, xs: jnp.ndarray, *, backend: str = "auto"
+                     ) -> jnp.ndarray:
+        self._require_state()
+        if self._use_pallas(backend):
+            return self._encode_batch_pallas(xs)
+        return self._encode_batch(xs)
+
+    def encode_multiprobe(self, q: jnp.ndarray, offsets: int, *,
+                          backend: str = "auto") -> jnp.ndarray:
+        self._require_state()
+        self._check_offsets(int(q.shape[-1]), offsets)
+        if self._use_pallas(backend):
+            return self._encode_batch_multiprobe_pallas(
+                q[None, :], offsets=offsets)[0]
+        return self._encode_multiprobe(q, offsets=offsets)
+
+    def encode_batch_multiprobe(self, qs: jnp.ndarray, offsets: int, *,
+                                backend: str = "auto") -> jnp.ndarray:
+        self._require_state()
+        self._check_offsets(int(qs.shape[-1]), offsets)
+        if self._use_pallas(backend):
+            return self._encode_batch_multiprobe_pallas(qs, offsets=offsets)
+        return self._encode_batch_multiprobe(qs, offsets=offsets)
+
+    def _check_offsets(self, m: int, offsets: int) -> None:
+        if offsets < 1:
+            raise ValueError(f"offsets must be >= 1, got {offsets}")
+        if m - (offsets - 1) < self.sketcher.window:
+            raise ValueError(
+                f"query length {m} too short for {offsets} offsets at "
+                f"window {self.sketcher.window}")
+        # the last offset's bit-profile must still hold a full shingle,
+        # matching encode(q[o:]) which would raise — without this a short
+        # query silently hashed an all-masked (empty) histogram
+        min_bits = self.sketcher.num_bits(offsets - 1, m)
+        if min_bits < self.shingler.min_bits:
+            raise ValueError(
+                f"query length {m} yields only {min_bits} sketch bits at "
+                f"offset {offsets - 1} — fewer than the shingle length "
+                f"{self.shingler.min_bits}")
+
+    # -- distributed hooks ------------------------------------------------
+    def pure_encode_fn(self):
+        sketcher, shingler, hasher = self.sketcher, self.shingler, self.hasher
+
+        def encode(x, state):
+            bits = sketcher.sketch(x, state)
+            return hasher.hash(shingler.histogram(bits), state)
+
+        return encode
+
+    def state(self) -> Dict[str, jnp.ndarray]:
+        self._require_state()
+        return dict(self._state)
+
+    # -- persistence ------------------------------------------------------
+    def arrays(self) -> Dict[str, np.ndarray]:
+        self._require_state()
+        return {k: np.asarray(v) for k, v in self._state.items()}
+
+    def expected_shapes(self) -> Dict[str, Tuple[int, ...]]:
+        """Persistence leaf names/shapes for the DEFAULT stages (Gaussian
+        filter sketcher + CWS hasher).  A subclass composing custom
+        stages whose ``materialize`` emits different leaves must override
+        this (and ``load_arrays`` validates against it)."""
+        k, d = self.num_hashes, self.shingler.dim
+        shapes = {"filters": (self.sketcher.window,
+                              self.sketcher.num_filters)}
+        shapes.update({f"cws/{f}": (k, d)
+                       for f in minhash.CWSParams._fields})
+        return shapes
+
+    def load_arrays(self, arrays: Mapping[str, np.ndarray]
+                    ) -> "PipelineEncoder":
+        want = self.expected_shapes()
+        if sorted(arrays) != sorted(want):
+            raise self._mismatch(
+                f"array names {sorted(arrays)} != expected {sorted(want)}")
+        for name, shape in want.items():
+            got = tuple(np.shape(arrays[name]))
+            if got != shape:
+                raise self._mismatch(
+                    f"array {name!r} has shape {got}, spec implies {shape}")
+        self._adopt(dict(arrays))
+        return self
+
+
+@register_encoder("ssh")
+class SSHEncoder(PipelineEncoder):
+    """The paper's encoder (Fig. 5) — sketch, shingle, CWS-hash.
+
+    Params (defaults = historical ``SSHParams`` defaults): ``window``,
+    ``step``, ``ngram``, ``num_filters``, ``num_hashes``, ``num_tables``.
+    """
+
+    DEFAULTS = dict(window=80, step=3, ngram=15, num_filters=1,
+                    num_hashes=20, num_tables=20)
+
+    @classmethod
+    def _build_stages(cls, spec: IndexSpec):
+        p = {**cls.DEFAULTS, **spec.params}
+        sketcher = GaussianFilterSketcher(p["window"], p["step"],
+                                          p["num_filters"])
+        return (sketcher, NgramShingler(p["ngram"], p["num_filters"]),
+                CWSHasher(p["num_hashes"]), p["num_tables"])
+
+    @classmethod
+    def validate_params(cls, spec: IndexSpec) -> None:
+        cls._check_param_names(spec, cls.DEFAULTS)
+        p = {**cls.DEFAULTS, **spec.params}
+        if p["num_hashes"] % p["num_tables"]:
+            raise ValueError("num_hashes must be divisible by num_tables")
+        if p["ngram"] > 20:
+            raise ValueError("shingle space 2^n exceeds 1M bins; use n<=20")
+
+    def legacy_functions(self):
+        """The materialised state as a historical ``SSHFunctions`` (the
+        ``SSHIndex.fns`` compatibility view)."""
+        from repro.core.index import SSHFunctions, SSHParams
+        self._require_state()
+        p = {**self.DEFAULTS, **self.spec.params}
+        params = SSHParams(window=p["window"], step=p["step"],
+                           ngram=p["ngram"], num_filters=p["num_filters"],
+                           num_hashes=p["num_hashes"],
+                           num_tables=p["num_tables"], seed=self.spec.seed)
+        return SSHFunctions(params=params, filters=self._state["filters"],
+                            cws=CWSHasher.cws_params(self._state))
+
+
+@register_encoder("ssh-multires")
+class MultiResSSHEncoder(PipelineEncoder):
+    """Beyond-paper: SSH with concatenated multi-resolution shingles.
+
+    Params: ``window``, ``step``, ``ngrams`` (tuple of shingle lengths),
+    ``num_filters``, ``num_hashes``, ``num_tables``.
+    """
+
+    DEFAULTS = dict(window=80, step=3, ngrams=(10, 15), num_filters=1,
+                    num_hashes=20, num_tables=20)
+
+    @classmethod
+    def _build_stages(cls, spec: IndexSpec):
+        p = {**cls.DEFAULTS, **spec.params}
+        sketcher = GaussianFilterSketcher(p["window"], p["step"],
+                                          p["num_filters"])
+        return (sketcher, MultiResShingler(p["ngrams"], p["num_filters"]),
+                CWSHasher(p["num_hashes"]), p["num_tables"])
+
+    @classmethod
+    def validate_params(cls, spec: IndexSpec) -> None:
+        cls._check_param_names(spec, cls.DEFAULTS)
+        p = {**cls.DEFAULTS, **spec.params}
+        ngrams = tuple(p["ngrams"])
+        if not ngrams:
+            raise ValueError("ngrams must name at least one resolution")
+        if any(n > 20 for n in ngrams):
+            raise ValueError("shingle space 2^n exceeds 1M bins; use n<=20")
+        if len(set(ngrams)) != len(ngrams):
+            raise ValueError(f"duplicate shingle resolutions in {ngrams}")
+        if p["num_hashes"] % p["num_tables"]:
+            raise ValueError("num_hashes must be divisible by num_tables")

@@ -1,0 +1,64 @@
+"""Encoder registry — ``IndexSpec.encoder`` names how series are hashed.
+
+Mirrors :mod:`repro.db.registry` (the search-side registry): built-ins
+register at import of :mod:`repro.encoders`; ``register_encoder`` lets
+out-of-tree code plug in new encoders without touching the facade —
+``TimeSeriesDB.build(spec=IndexSpec(encoder="my-encoder", ...))`` and
+persistence work unchanged once the class is registered.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Type
+
+from repro.encoders.base import Encoder, IndexSpec
+
+_ENCODERS: Dict[str, Type[Encoder]] = {}
+_BUILTINS_LOADED = False
+
+
+def _ensure_builtins() -> None:
+    """Import the built-in encoder modules once, on first lookup — keeps
+    ``from repro.encoders import IndexSpec`` free of the kernel stack.
+    The flag is only set on success so a failed import surfaces its real
+    error on every lookup instead of a misleading empty registry."""
+    global _BUILTINS_LOADED
+    if not _BUILTINS_LOADED:
+        import repro.encoders.pipeline    # noqa: F401  "ssh", "ssh-multires"
+        import repro.encoders.srp         # noqa: F401  "srp"
+        _BUILTINS_LOADED = True
+
+
+def register_encoder(name: str) -> Callable[[Type[Encoder]], Type[Encoder]]:
+    """Class decorator: register an :class:`Encoder` subclass under
+    ``name`` (overwrites a prior registration, latest wins)."""
+    def deco(cls: Type[Encoder]) -> Type[Encoder]:
+        cls.name = name
+        _ENCODERS[name] = cls
+        return cls
+    return deco
+
+
+def available_encoders() -> List[str]:
+    _ensure_builtins()
+    return sorted(_ENCODERS)
+
+
+def encoder_class(name: str) -> Type[Encoder]:
+    _ensure_builtins()
+    try:
+        return _ENCODERS[name]
+    except KeyError:
+        raise ValueError(f"unknown encoder {name!r}; registered: "
+                         f"{available_encoders()}") from None
+
+
+def make_encoder(spec: IndexSpec, *, length: Optional[int] = None,
+                 materialize: bool = True) -> Encoder:
+    """Instantiate (and by default materialise) the encoder named by
+    ``spec.encoder``.  ``length`` is the series length m, forwarded to
+    encoders whose random state is sized to it (``"srp"``)."""
+    spec.validate()
+    enc = encoder_class(spec.encoder)(spec)
+    if materialize:
+        enc.materialize(length)
+    return enc

@@ -1,0 +1,138 @@
+"""``"srp"`` encoder — Signed Random Projection behind the one facade.
+
+The paper's sanity-check baseline (§5.2): the whole series is one long
+vector hashed by K signed random projections (cosine LSH).  Historically
+this lived as a parallel one-off path (``core/srp.py`` + ``srp_search``);
+registering it as an encoder subsumes that fork — the same
+``TimeSeriesDB.build(spec=IndexSpec(encoder="srp"))`` / search / save /
+load story as SSH, with collision counts over the K sign bits playing
+the role CWS-hash agreement plays for ``"ssh"`` (ranking identical to
+the legacy Hamming-similarity ranking: agreement *count* is K times the
+agreement *fraction*).
+
+Unlike the SSH family the random state is sized to the series length m,
+so ``materialize`` requires ``length`` (the registry forwards it) and
+``load_arrays`` recovers it from the persisted planes.  SRP has no
+shift-alignment structure — multiprobe raises (use
+``multiprobe_offsets=1``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import srp as srp_mod
+from repro.encoders.base import Encoder, IndexSpec
+from repro.encoders.registry import register_encoder
+from repro.kernels import ops
+
+
+@register_encoder("srp")
+class SRPEncoder(Encoder):
+    """Params: ``num_hashes`` (K sign bits), ``num_tables`` (L bands).
+
+    Defaults match the historical baseline setting (K=64 planes, as in
+    ``benchmarks/table2_precision.py``); the planes are sampled from
+    ``PRNGKey(seed)`` exactly as ``core.srp.make_srp`` always did, so a
+    spec with ``seed=s`` reproduces the legacy ``make_srp(PRNGKey(s))``
+    planes bit-for-bit.
+    """
+
+    DEFAULTS = dict(num_hashes=64, num_tables=16)
+
+    def __init__(self, spec: IndexSpec):
+        super().__init__(spec)
+        p = {**self.DEFAULTS, **spec.params}
+        self._num_hashes = int(p["num_hashes"])
+        self._num_tables_ = int(p["num_tables"])
+        self._state: Optional[Dict[str, jnp.ndarray]] = None
+
+    @classmethod
+    def validate_params(cls, spec: IndexSpec) -> None:
+        cls._check_param_names(spec, cls.DEFAULTS)
+        p = {**cls.DEFAULTS, **spec.params}
+        if p["num_hashes"] % p["num_tables"]:
+            raise ValueError("num_hashes must be divisible by num_tables")
+
+    # -- shape identity ---------------------------------------------------
+    @property
+    def num_hashes(self) -> int:
+        return self._num_hashes
+
+    @property
+    def num_tables(self) -> int:
+        return self._num_tables_
+
+    @property
+    def materialized(self) -> bool:
+        return self._state is not None
+
+    # -- lifecycle --------------------------------------------------------
+    def materialize(self, length: Optional[int] = None) -> "SRPEncoder":
+        if self._state is None:
+            if length is None:
+                raise ValueError(
+                    "the 'srp' encoder's planes are sized to the series "
+                    "length; pass length= (make_encoder forwards it)")
+            planes = srp_mod.make_srp(jax.random.PRNGKey(self.spec.seed),
+                                      self._num_hashes, int(length))
+            self._adopt({"planes": planes})
+        return self
+
+    def _adopt(self, state: Dict[str, jnp.ndarray]) -> None:
+        self._state = {k: jnp.asarray(v) for k, v in state.items()}
+        planes = self._state["planes"]
+
+        def one(x):
+            return srp_mod.srp_bits(x, planes).astype(jnp.int32)
+
+        self._encode_one = jax.jit(one)
+        self._encode_batch = jax.jit(jax.vmap(one))
+
+    def _require_state(self) -> None:
+        if self._state is None:
+            raise RuntimeError("'srp' encoder is not materialized; call "
+                               "materialize(length) or load_arrays() first")
+
+    # -- encoding ---------------------------------------------------------
+    def encode(self, x: jnp.ndarray, *, backend: str = "auto"
+               ) -> jnp.ndarray:
+        self._require_state()
+        ops.resolve_backend(backend)     # validate the knob; one matmul —
+        return self._encode_one(x)       # XLA already owns this shape
+
+    def encode_batch(self, xs: jnp.ndarray, *, backend: str = "auto"
+                     ) -> jnp.ndarray:
+        self._require_state()
+        ops.resolve_backend(backend)
+        return self._encode_batch(xs)
+
+    # -- distributed hooks ------------------------------------------------
+    def pure_encode_fn(self):
+        def encode(x, state):
+            return srp_mod.srp_bits(x, state["planes"]).astype(jnp.int32)
+        return encode
+
+    def state(self) -> Dict[str, jnp.ndarray]:
+        self._require_state()
+        return dict(self._state)
+
+    # -- persistence ------------------------------------------------------
+    def arrays(self) -> Dict[str, np.ndarray]:
+        self._require_state()
+        return {k: np.asarray(v) for k, v in self._state.items()}
+
+    def load_arrays(self, arrays: Mapping[str, np.ndarray]) -> "SRPEncoder":
+        if sorted(arrays) != ["planes"]:
+            raise self._mismatch(
+                f"array names {sorted(arrays)} != expected ['planes']")
+        shape = tuple(np.shape(arrays["planes"]))
+        if len(shape) != 2 or shape[1] != self._num_hashes:
+            raise self._mismatch(
+                f"planes shape {shape} incompatible with "
+                f"num_hashes={self._num_hashes} (want (length, K))")
+        self._adopt(dict(arrays))
+        return self

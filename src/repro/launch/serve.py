@@ -56,7 +56,8 @@ def _ssh_db(arch, config, db_dir=None):
     series = jnp.asarray(extract_subsequences(stream, length,
                                               stride=1, znorm=True))
     if tsdb is None:
-        tsdb = TimeSeriesDB.build(series, arch.smoke_config, config)
+        tsdb = TimeSeriesDB.build(series, spec=arch.index_spec(smoke=True),
+                                  config=config)
     return series, tsdb
 
 

@@ -96,7 +96,6 @@ def batch_probe(queries: jnp.ndarray, index: SSHIndex, top_c: int,
     Per-row decisions identical to the sequential ``hash_probe``: the same
     collision counts feed the same ``lax.top_k`` (ties → lowest id).
     """
-    p = index.fns.params
     b = queries.shape[0]
     top_c = min(top_c, int(index.signatures.shape[0]))
     if multiprobe_offsets > 1:
@@ -109,7 +108,7 @@ def batch_probe(queries: jnp.ndarray, index: SSHIndex, top_c: int,
     if rank_by_signature:
         qk, db = flat, index.signatures
     else:
-        qk = minhash.combine_bands(flat, p.num_tables).astype(jnp.int32)
+        qk = minhash.combine_bands(flat, index.num_tables).astype(jnp.int32)
         db = index.keys.astype(jnp.int32)
     counts = ops.collision_count_batch(qk, db, use_pallas=use_pallas,
                                        interpret=interpret)   # (B·O, N)

@@ -107,16 +107,16 @@ class DistributedSearcher:
         self.index = index
         self.config = config
         self.mesh = mesh
-        p = index.fns.params
-        length = int(index.series.shape[1])
         sig_sh, series_sh = dist_index.index_shardings(mesh)
         import jax
         self._series = jax.device_put(index.series, series_sh)
         self._sigs = jax.device_put(index.signatures, sig_sh)
-        self._cws = index.fns.cws._asdict()
-        self._filters = index.fns.filters
-        self._query_fn = dist_index.make_query_fn(
-            p, mesh, length=length, config=config)
+        # encoder-generic shard fan-out: the encoder's materialised state
+        # rides as a replicated operand; "ssh"/"srp"/"ssh-multires" (and
+        # out-of-tree encoders) all serve through the same schedule
+        self._state = index.enc.state()
+        self._query_fn = dist_index.make_encoder_query_fn(
+            index.enc, mesh, config=config)
 
     def search_batch(self, queries: jnp.ndarray) -> BatchSearchResult:
         t0 = time.perf_counter()
@@ -124,8 +124,8 @@ class DistributedSearcher:
         n = int(self.index.signatures.shape[0])
         ids, dists = [], []
         for i in range(b):                       # fan-out per query row
-            gid, d = self._query_fn(self._series, self._sigs, self._filters,
-                                    self._cws, queries[i])
+            gid, d = self._query_fn(self._series, self._sigs, self._state,
+                                    queries[i])
             ids.append(np.asarray(gid))
             dists.append(np.asarray(d))
         top_c = self.config.top_c

@@ -1,0 +1,394 @@
+"""repro.encoders: IndexSpec validation/round-trip, registry, the three
+built-in encoders behind one facade, fused multiprobe equality, compile
+caching, persistence spec-mismatch refusal, and the SSHParams shim.
+
+Acceptance (ISSUE 4): ``TimeSeriesDB.build(spec=IndexSpec(encoder="srp"))``
+and ``encoder="ssh-multires"`` save/load round-trip bit-identically across
+all four searchers, and the default ``"ssh"`` spec reproduces
+pre-refactor signatures exactly (golden values captured from the
+pre-encoder ``SSHParams``/``_signature_one`` code path).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SSHParams, srp_search
+from repro.core.index import SSHFunctions, SSHIndex, build_signatures
+from repro.core.srp import make_srp, srp_bits
+from repro.data.timeseries import extract_subsequences, synthetic_ecg
+from repro.db import SearchConfig, TimeSeriesDB
+from repro.encoders import (IndexSpec, available_encoders, make_encoder,
+                            register_encoder)
+from repro.encoders.base import Encoder
+
+pytestmark = pytest.mark.encoders
+
+SMOKE = dict(window=24, step=3, ngram=8, num_hashes=40, num_tables=20)
+SPECS = {
+    "ssh": IndexSpec(encoder="ssh", params=SMOKE),
+    "srp": IndexSpec(encoder="srp"),
+    "ssh-multires": IndexSpec(
+        encoder="ssh-multires",
+        params=dict(window=24, step=3, ngrams=(6, 8), num_hashes=40,
+                    num_tables=20)),
+}
+
+
+def _waves(m, b=3):
+    t = np.arange(m, dtype=np.float32)
+    rows = [np.sin(t * 0.1 * (i + 1)) + 0.3 * np.cos(t * 0.037 * (i + 2))
+            for i in range(b)]
+    return jnp.asarray(np.stack(rows).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def series():
+    stream = synthetic_ecg(2000, seed=5)
+    return jnp.asarray(extract_subsequences(stream, 128, stride=4,
+                                            znorm=True))   # ~469 series
+
+
+# ---------------------------------------------------------------------------
+# IndexSpec
+# ---------------------------------------------------------------------------
+
+def test_spec_validate_and_replace():
+    spec = IndexSpec(encoder="ssh", params=SMOKE).validate()
+    assert spec.replace(seed=11).seed == 11
+    assert spec.with_params(ngram=10).params["ngram"] == 10
+    with pytest.raises(ValueError, match="unknown encoder"):
+        IndexSpec(encoder="warp-drive").validate()
+    with pytest.raises(ValueError, match="divisible"):
+        IndexSpec(encoder="ssh", params=dict(num_hashes=13,
+                                             num_tables=5)).validate()
+    with pytest.raises(ValueError, match="unknown params"):
+        IndexSpec(encoder="ssh", params=dict(windw=24)).validate()
+    with pytest.raises(ValueError, match="resolution"):
+        IndexSpec(encoder="ssh-multires", params=dict(ngrams=())).validate()
+    with pytest.raises(ValueError, match="divisible"):
+        IndexSpec(encoder="srp", params=dict(num_hashes=10,
+                                             num_tables=3)).validate()
+
+
+def test_spec_dict_roundtrip_and_json():
+    for spec in SPECS.values():
+        # through json, as persistence stores it (tuples become lists
+        # and are normalised back)
+        again = IndexSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+        assert again == spec
+    with pytest.warns(RuntimeWarning, match="unknown"):
+        got = IndexSpec.from_dict({**SPECS["ssh"].to_dict(), "new": 1})
+    assert got == SPECS["ssh"]
+
+
+def test_registry_roundtrip_same_signatures(series):
+    """to_dict → from_dict → make_encoder reproduces signatures exactly
+    for every built-in."""
+    assert set(available_encoders()) >= {"ssh", "srp", "ssh-multires"}
+    m = int(series.shape[1])
+    for name, spec in SPECS.items():
+        enc = make_encoder(spec, length=m)
+        enc2 = make_encoder(IndexSpec.from_dict(spec.to_dict()), length=m)
+        np.testing.assert_array_equal(
+            np.asarray(enc.encode_batch(series[:16])),
+            np.asarray(enc2.encode_batch(series[:16])), err_msg=name)
+
+
+def test_register_out_of_tree_encoder(series):
+    """Any registered Encoder serves through make_encoder and the facade
+    (the DESIGN.md §7 extension contract)."""
+    from repro.encoders.srp import SRPEncoder
+
+    @register_encoder("test-srp-alias")
+    class AliasEncoder(SRPEncoder):
+        pass
+
+    enc = make_encoder(IndexSpec(encoder="test-srp-alias"),
+                       length=int(series.shape[1]))
+    assert enc.materialized and enc.num_hashes == 64
+
+
+# ---------------------------------------------------------------------------
+# golden: the "ssh" encoder is bit-identical to the pre-refactor path
+# ---------------------------------------------------------------------------
+
+# Captured from the pre-encoder code (SSHFunctions.create +
+# _signature_one) at commit 65ed0a2: paper-default SSHParams() on a
+# deterministic length-256 wave, and the smoke params on length 128.
+GOLDEN_DEFAULT_256 = [
+    [32736, 15, 32704, 1023, 32256, 8184, 31, 32736, 2046, 127, 16391, 15,
+     127, 1023, 63, 63, 24579, 30720, 8184, 31],
+    [4033, 31775, 3971, 24824, 31775, 1985, 28798, 24828, 7943, 30783,
+     1008, 1985, 7943, 4033, 496, 28798, 30783, 1985, 3971, 3971],
+    [1822, 28897, 1822, 30833, 25031, 15416, 15416, 14449, 17295, 15416,
+     14448, 14576, 7288, 3854, 1806, 18311, 25027, 25031, 3854, 14576]]
+GOLDEN_SMOKE_128_ROW0 = [
+    254, 255, 255, 254, 252, 240, 252, 128, 192, 255, 1, 63, 127, 240,
+    255, 248, 255, 192, 255, 127, 255, 255, 252, 255, 192, 127, 255, 255,
+    255, 255, 7, 63, 31, 3, 31, 255, 3, 1, 255, 0]
+GOLDEN_SMOKE_KEYS_ROW0 = [
+    3167855509, 518545684, 400133464, 400133352, 255942612, 333821994,
+    858512673, 518545694, 518545750, 518545559, 518545687, 400133481,
+    255942228, 518545687, 518545687, 2023939067, 4165311659, 4165311919,
+    3698660204, 518545430]
+
+
+def test_golden_default_spec_reproduces_prerefactor_signatures():
+    enc = make_encoder(IndexSpec())          # encoder="ssh", all defaults
+    sigs = enc.encode_chunked(_waves(256))
+    np.testing.assert_array_equal(np.asarray(sigs),
+                                  np.asarray(GOLDEN_DEFAULT_256, np.int32))
+
+
+def test_golden_smoke_signatures_and_band_keys():
+    enc = make_encoder(IndexSpec(encoder="ssh", params=SMOKE))
+    sigs = enc.encode_chunked(_waves(128))
+    np.testing.assert_array_equal(
+        np.asarray(sigs)[0], np.asarray(GOLDEN_SMOKE_128_ROW0, np.int32))
+    keys = np.asarray(enc.band_keys(sigs)).astype(np.int64)
+    np.testing.assert_array_equal(
+        keys[0], np.asarray(GOLDEN_SMOKE_KEYS_ROW0, np.int64))
+
+
+# ---------------------------------------------------------------------------
+# the SSHParams deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_sshparams_shim_warns_and_is_bit_identical(series):
+    params = SSHParams(**SMOKE)
+    with pytest.warns(DeprecationWarning, match="SSHParams"):
+        legacy = SSHIndex.build(series, params)
+    modern = SSHIndex.build(series, spec=params.to_spec())
+    np.testing.assert_array_equal(np.asarray(legacy.signatures),
+                                  np.asarray(modern.signatures))
+    np.testing.assert_array_equal(np.asarray(legacy.keys),
+                                  np.asarray(modern.keys))
+    # the legacy module fn agrees too (no jit re-wrap regression risk)
+    np.testing.assert_array_equal(
+        np.asarray(build_signatures(series[:32],
+                                    SSHFunctions.create(params))),
+        np.asarray(modern.signatures)[:32])
+    with pytest.raises(TypeError, match="not both"):
+        SSHIndex.build(series, params, spec=params.to_spec())
+    with pytest.warns(DeprecationWarning, match="SSHParams"):
+        TimeSeriesDB.build(series, params,
+                           SearchConfig(topk=3, band=8, top_c=32))
+
+
+def test_legacy_fns_index_materialises_same_encoder(series):
+    """An SSHIndex constructed the historical way (fns only) lazily
+    builds an encoder from the SAME arrays — queries are bit-identical
+    to a spec-built index."""
+    params = SSHParams(**SMOKE)
+    fns = SSHFunctions.create(params)
+    sigs = build_signatures(series, fns)
+    legacy = SSHIndex(fns=fns, signatures=sigs,
+                      keys=legacy_keys(sigs, params), series=series)
+    modern = SSHIndex.build(series, spec=params.to_spec())
+    q = series[7]
+    np.testing.assert_array_equal(np.asarray(legacy.query_signature(q)),
+                                  np.asarray(modern.query_signature(q)))
+    np.testing.assert_array_equal(np.asarray(legacy.query_keys(q)),
+                                  np.asarray(modern.query_keys(q)))
+
+
+def legacy_keys(sigs, params):
+    from repro.core.index import band_keys
+    return band_keys(sigs, params)
+
+
+# ---------------------------------------------------------------------------
+# "srp" via the facade ≡ the legacy one-off path
+# ---------------------------------------------------------------------------
+
+def test_srp_facade_matches_legacy_srp_search(series):
+    planes = make_srp(jax.random.PRNGKey(0), 64, int(series.shape[1]))
+    db_bits = srp_bits(series, planes)
+    cfg = SearchConfig(topk=10, top_c=10, use_lb_cascade=False,
+                       searcher="local")
+    db = TimeSeriesDB.build(series, spec=IndexSpec(encoder="srp", seed=0),
+                            config=cfg)
+    np.testing.assert_array_equal(
+        np.asarray(db.index.enc.arrays()["planes"]), np.asarray(planes))
+    for qid in (3, 100, 250):
+        legacy = srp_search(series[qid], series, planes, db_bits, topk=10)
+        got = db.search(series[qid])
+        # same top-k candidate set; the facade re-orders it by DTW
+        assert (set(np.asarray(legacy.ids).tolist())
+                == set(np.asarray(got.ids).tolist())), qid
+
+
+def test_srp_has_no_multiprobe(series):
+    enc = make_encoder(IndexSpec(encoder="srp"),
+                       length=int(series.shape[1]))
+    with pytest.raises(ValueError, match="shift-alignment"):
+        enc.encode_multiprobe(series[0], 3)
+    # the facade clamps rather than letting every search raise after a
+    # completed build: a multiprobe config on an srp index folds to 1
+    cfg = SearchConfig(topk=3, band=8, top_c=32, multiprobe_offsets=3)
+    db = TimeSeriesDB.build(series[:64], spec=IndexSpec(encoder="srp"),
+                            config=cfg)
+    assert db.config.multiprobe_offsets == 1
+    assert db.search(series[5]).ids[0] == 5
+    assert db.reconfigure(multiprobe_offsets=3) \
+        .config.multiprobe_offsets == 1
+
+
+# ---------------------------------------------------------------------------
+# fused multiprobe: one program, bit-identical to per-offset hashing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["ssh", "ssh-multires"])
+def test_multiprobe_fused_equals_per_offset(series, name):
+    enc = make_encoder(SPECS[name])
+    q = series[11]
+    offsets = 3
+    fused = enc.encode_multiprobe(q, offsets)
+    for o in range(offsets):
+        np.testing.assert_array_equal(
+            np.asarray(fused[o]), np.asarray(enc.encode(q[o:])),
+            err_msg=f"{name} offset {o}")
+    batched = enc.encode_batch_multiprobe(series[3:6], offsets)
+    for b in range(3):
+        for o in range(offsets):
+            np.testing.assert_array_equal(
+                np.asarray(batched[b, o]),
+                np.asarray(enc.encode(series[3 + b, o:])),
+                err_msg=f"{name} b={b} o={o}")
+
+
+def test_multiprobe_backends_agree_and_short_queries_raise(series):
+    """The fused multiprobe honours the backend knob (Pallas sketch,
+    same signatures) and rejects queries whose last offset cannot hold a
+    full shingle — matching encode(q[o:]), which would raise."""
+    enc = make_encoder(SPECS["ssh"])
+    q = series[0]
+    np.testing.assert_array_equal(
+        np.asarray(enc.encode_multiprobe(q, 3, backend="pallas")),
+        np.asarray(enc.encode_multiprobe(q, 3, backend="jnp")))
+    np.testing.assert_array_equal(
+        np.asarray(enc.encode_batch_multiprobe(series[3:6], 3,
+                                               backend="pallas")),
+        np.asarray(enc.encode_batch_multiprobe(series[3:6], 3,
+                                               backend="jnp")))
+    # window=24, step=3, ngram=8: m=48 gives 9 bits at offset 0 but only
+    # 7 < ngram at offset 5 — must raise, not hash an empty histogram
+    with pytest.raises(ValueError, match="shingle"):
+        enc.encode_multiprobe(series[0][:48], 6)
+
+
+def test_multiprobe_compiles_once_for_all_offsets(series):
+    """The fused path traces ONE program per (shape, offsets) — not one
+    per offset length as the historical q[o:] slicing did."""
+    enc = make_encoder(SPECS["ssh"])
+    q = series[0]
+    enc.encode_multiprobe(q, 3)
+    n = enc.trace_counts["multiprobe"]
+    enc.encode_multiprobe(q, 3)
+    enc.encode_multiprobe(series[1], 3)     # same shape: cached
+    assert enc.trace_counts["multiprobe"] == n
+
+
+def test_chunked_build_and_insert_reuse_compiled_fn(series):
+    """Satellite: the batch encode path compiles once per chunk shape;
+    chunked builds and streaming inserts stop paying retrace cost."""
+    enc = make_encoder(SPECS["ssh"])
+    enc.encode_chunked(series[:128], batch=64)    # two chunks, one shape
+    n = enc.trace_counts["batch"]
+    assert n == 1
+    enc.encode_chunked(series[:128], batch=64)
+    assert enc.trace_counts["batch"] == n
+    idx = SSHIndex.build(series[:128], spec=SPECS["ssh"], batch=64)
+    n = idx.enc.trace_counts["batch"]
+    idx.insert(series[128:160])               # new chunk shape: one trace
+    idx.insert(series[160:192])               # same shape again: cached
+    assert idx.enc.trace_counts["batch"] == n + 1
+
+
+def test_encode_backends_agree(series):
+    """backend="pallas" (interpret off-TPU) and "jnp" produce the same
+    integer signatures — the knob changes kernels, not answers."""
+    for name in ("ssh", "ssh-multires"):
+        enc = make_encoder(SPECS[name])
+        np.testing.assert_array_equal(
+            np.asarray(enc.encode_batch(series[:16], backend="pallas")),
+            np.asarray(enc.encode_batch(series[:16], backend="jnp")),
+            err_msg=name)
+    with pytest.raises(ValueError, match="backend"):
+        make_encoder(SPECS["ssh"]).encode_batch(series[:4], backend="cuda")
+
+
+# ---------------------------------------------------------------------------
+# acceptance: srp + ssh-multires round-trip bit-identically, 4 searchers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["srp", "ssh-multires"])
+def test_build_save_load_roundtrip_all_searchers(series, name, tmp_path):
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    n_usable = (int(series.shape[0]) // jax.device_count()) \
+        * jax.device_count()
+    sub = series[:n_usable]
+    cfg = SearchConfig(topk=5, band=8, top_c=64)
+    db = TimeSeriesDB.build(sub, spec=SPECS[name], config=cfg)
+    out = tmp_path / "db"
+    db.save(out)
+    for searcher in ("local", "batched", "distributed", "engine"):
+        c2 = cfg.replace(searcher=searcher)
+        with db.with_config(c2) as before, \
+                TimeSeriesDB.load(out, c2, mesh=mesh) as after:
+            before.mesh = mesh
+            for qid in (3, 250):
+                want = before.search(sub[qid])
+                got = after.search(sub[qid])
+                np.testing.assert_array_equal(
+                    want.ids, got.ids,
+                    err_msg=f"{name}/{searcher} qid={qid}")
+                np.testing.assert_array_equal(
+                    np.asarray(want.dists), np.asarray(got.dists),
+                    err_msg=f"{name}/{searcher} qid={qid}")
+    loaded = TimeSeriesDB.load(out)
+    assert loaded.spec == SPECS[name]
+    # streaming add after load keeps hashing with the same functions
+    loaded.add(sub[:2] * 1.01)
+    assert len(loaded) == n_usable + 2
+
+
+def test_load_refuses_spec_artifact_mismatch(series, tmp_path):
+    """Tampering the persisted spec (a *valid* spec that disagrees with
+    the stored arrays) must refuse to load, not silently mis-hash."""
+    cfg = SearchConfig(topk=3, band=8, top_c=32)
+    db = TimeSeriesDB.build(series[:64], spec=SPECS["ssh"], config=cfg)
+    out = tmp_path / "db"
+    db.save(out)
+    meta_path = out / "ssh_db.json"
+    meta = json.loads(meta_path.read_text())
+    meta["spec"]["params"]["num_hashes"] = 20     # valid spec, wrong arrays
+    meta_path.write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="match IndexSpec"):
+        TimeSeriesDB.load(out)
+    # a tampered table count passes spec validation AND the encoder
+    # state shapes (they depend only on K and dim) — the band-key width
+    # check must still refuse it
+    meta = json.loads((out / "ssh_db.json").read_text())
+    meta["spec"]["params"]["num_hashes"] = 40
+    meta["spec"]["params"]["num_tables"] = 8      # divides 40
+    meta_path.write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="spec/artifact mismatch"):
+        TimeSeriesDB.load(out)
+    # a different registered encoder is refused too
+    meta["spec"] = IndexSpec(encoder="srp").to_dict()
+    meta_path.write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="match IndexSpec"):
+        TimeSeriesDB.load(out)
+
+
+def test_unmaterialized_encoder_raises():
+    from repro.encoders import encoder_class
+    enc = encoder_class("ssh")(SPECS["ssh"])
+    with pytest.raises(RuntimeError, match="not materialized"):
+        enc.encode(jnp.zeros(128))
+    with pytest.raises(ValueError, match="length"):
+        make_encoder(IndexSpec(encoder="srp"))    # srp needs length
