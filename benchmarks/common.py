@@ -3,17 +3,25 @@
 Scale knobs: BENCH_SCALE ∈ {"smoke", "small", "full"} via env var.  The
 paper's 20M-series scale is exercised by the multi-pod dry-run; these
 benchmarks validate the paper's *relative* claims at container scale.
+
+Reporting: every module emits its historical ``name,us_per_call,derived``
+CSV line through :func:`report`, which — when ``benchmarks.run`` has
+installed a :class:`repro.bench.BenchRunner` (``--json``) — also records
+a schema-versioned ``BenchResult`` (latency percentiles, per-stage
+encode/probe/lb/dtw breakdown, pruning/quality, build time) into the
+module's ``BENCH_<module>.json`` trajectory file (DESIGN.md §8).
 """
 from __future__ import annotations
 
 import os
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.bench import BenchCase, BenchResult, BenchRunner
 from repro.core import SSHParams
 from repro.data.timeseries import (extract_subsequences, random_walk,
                                    synthetic_ecg)
@@ -105,3 +113,141 @@ def emit(name: str, us_per_call: float, derived: Dict) -> None:
     """CSV contract: name,us_per_call,derived"""
     kv = ";".join(f"{k}={v}" for k, v in derived.items())
     print(f"{name},{us_per_call:.1f},{kv}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# structured reporting (repro.bench)
+# ---------------------------------------------------------------------------
+
+_RUNNER: Optional[BenchRunner] = None
+
+
+def set_runner(runner: Optional[BenchRunner]) -> None:
+    """Install the BenchRunner ``report`` records into (benchmarks.run)."""
+    global _RUNNER
+    _RUNNER = runner
+
+
+def percentile(xs, p: float) -> float:
+    """Nearest-rank percentile (matches ServingMetrics.LatencyTracker)."""
+    xs = sorted(xs)
+    rank = min(len(xs) - 1, max(0, round(p / 100.0 * (len(xs) - 1))))
+    return float(xs[rank])
+
+
+def report(name: str, us_per_query: float, derived: Dict, *,
+           stats=None, case: Optional[BenchCase] = None,
+           samples_us=None, stage_us: Optional[Dict[str, float]] = None,
+           lb_pruned_frac: Optional[float] = None,
+           precision_at_k: Optional[float] = None,
+           build_s: Optional[float] = None) -> None:
+    """Emit the CSV row AND record a BenchResult when a runner is live.
+
+    ``stats`` (a ``SearchStats``) supplies the stage breakdown and
+    pruning fraction unless given explicitly; ``samples_us`` (per-query
+    latency samples, µs) supplies p50/p95.
+    """
+    emit(name, us_per_query, derived)
+    if _RUNNER is None:
+        return
+    if stats is not None:
+        if stage_us is None:
+            stage_us = stats.stage_us
+        if lb_pruned_frac is None:
+            lb_pruned_frac = stats.lb_pruned_frac
+    _RUNNER.record(BenchResult(
+        name=name, us_per_query=float(us_per_query),
+        us_p50=percentile(samples_us, 50) if samples_us else None,
+        us_p95=percentile(samples_us, 95) if samples_us else None,
+        stage_us=stage_us,
+        lb_pruned_frac=(None if lb_pruned_frac is None
+                        else float(lb_pruned_frac)),
+        precision_at_k=(None if precision_at_k is None
+                        else float(precision_at_k)),
+        build_s=None if build_s is None else float(build_s),
+        case=case,
+        derived={str(k): v for k, v in derived.items()}))
+
+
+def case_for(kind: str, length: int, n_database: int, *, batch: int = 1,
+             spec=None, config=None) -> BenchCase:
+    """Frozen workload identity for a benchmark row."""
+    from repro.kernels import ops
+    backend = "jnp"
+    if config is not None:
+        backend = ops.backend_name(ops.resolve_backend(config.backend))
+    return BenchCase(
+        dataset=kind, length=length, n_database=n_database, batch=batch,
+        spec=None if spec is None else spec.to_dict(),
+        config=None if config is None else config.to_dict(),
+        backend=backend)
+
+
+def stage_mean_us(stats_list) -> Optional[Dict[str, float]]:
+    """Mean per-stage µs over SearchStats samples (None when empty or
+    telemetry was off)."""
+    dicts = [s.stage_us for s in stats_list
+             if s is not None and s.stage_us is not None]
+    if not dicts:
+        return None
+    keys = sorted({k for d in dicts for k in d})
+    return {k: float(np.mean([d.get(k, 0.0) for d in dicts]))
+            for k in keys}
+
+
+_TSDB_CACHE = {}
+
+
+def tsdb_cached(kind: str, length: int):
+    """One sequential-searcher TimeSeriesDB per (dataset, length), shared
+    across benchmark modules (amortises the index build)."""
+    from repro.db import TimeSeriesDB
+    key = (kind, length)
+    if key not in _TSDB_CACHE:
+        db, _ = dataset_cached(kind, length)
+        _TSDB_CACHE[key] = TimeSeriesDB.build(
+            db, spec=PARAMS[kind].to_spec(),
+            config=search_config(kind, length, searcher="local"))
+    return _TSDB_CACHE[key]
+
+
+def timed_search_samples(search_fn: Callable, queries, *, warmup: int = 1,
+                         iters: int = 2):
+    """Warm per-query latency samples (µs) + the last pass's results.
+
+    Runs ``search_fn(q)`` ``warmup`` times on the first query, then
+    ``iters`` passes over all queries, keeping only the final pass —
+    the sequential path has value-dependent intermediate shapes, so
+    earlier passes pay per-query XLA compiles that would swamp the
+    trajectory with compile noise.  Latencies come from
+    ``SearchResult.wall_seconds`` (which brackets the synchronized
+    stage timers).
+    """
+    for _ in range(warmup):
+        search_fn(queries[0])
+    samples_us, results = [], []
+    for it in range(iters):
+        samples_us, results = [], []
+        for q in queries:
+            res = search_fn(q)
+            results.append(res)
+            samples_us.append(res.wall_seconds * 1e6)
+    return results, samples_us
+
+
+def hotpath_report(name: str, kind: str, length: int) -> None:
+    """One stage-instrumented sequential hot-path row (shared helper so
+    every module's BENCH json carries an encode/probe/lb/dtw breakdown).
+    """
+    db, queries = dataset_cached(kind, length)
+    tsdb = tsdb_cached(kind, length)
+    results, samples_us = timed_search_samples(tsdb.search, queries)
+    stage_us = stage_mean_us([r.stats for r in results])
+    report(name, float(np.mean(samples_us)),
+           {"p50_us": round(percentile(samples_us, 50), 1),
+            "p95_us": round(percentile(samples_us, 95), 1),
+            "n_samples": len(samples_us)},
+           stats=results[-1].stats, stage_us=stage_us,
+           samples_us=samples_us,
+           case=case_for(kind, length, len(tsdb), spec=tsdb.spec,
+                         config=tsdb.config))

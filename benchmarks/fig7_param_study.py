@@ -8,9 +8,10 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (PARAMS, band_for,
+from benchmarks.common import (PARAMS, band_for, case_for,
                                dataset_cached as dataset,
-                               gold_topk_cached, emit, search_config)
+                               gold_topk_cached, report, search_config,
+                               stage_mean_us)
 from repro.core import (SSHIndex, brute_force_topk, precision_at_k,
                         ssh_search)
 
@@ -53,12 +54,20 @@ def _study(kind: str, param: str, values) -> None:
         # multiprobe tracks the *swept* stride (δ-residue classes)
         cfg = search_config(kind, LENGTH,
                             multiprobe_offsets=params.step)
-        precs = [precision_at_k(ssh_search(q, index, config=cfg).ids, g, 10)
-                 for q, g in zip(queries, golds)]
-        emit(f"fig_param/{kind}/{param}={v}",
-             t_build / db.shape[0] * 1e6,
-             {"precision_at10": round(float(np.mean(precs)), 3),
-              "build_s": round(t_build, 3)})
+        ssh_search(queries[0], index, config=cfg)    # warm compiles
+        results = [ssh_search(q, index, config=cfg) for q in queries]
+        precs = [precision_at_k(r.ids, g, 10)
+                 for r, g in zip(results, golds)]
+        report(f"fig_param/{kind}/{param}={v}",
+               t_build / db.shape[0] * 1e6,
+               {"precision_at10": round(float(np.mean(precs)), 3),
+                "build_s": round(t_build, 3)},
+               precision_at_k=float(np.mean(precs)),
+               build_s=t_build,
+               stats=results[-1].stats,
+               stage_us=stage_mean_us([r.stats for r in results]),
+               case=case_for(kind, LENGTH, int(db.shape[0]),
+                             spec=params.to_spec(), config=cfg))
 
 
 def run() -> None:

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import hotpath_report, report, timed
 from repro.core import lower_bounds as lb
 from repro.core import rerank as rr
 from repro.kernels import ref
@@ -40,7 +40,7 @@ def _bench_rerank_path(rng) -> None:
     d, t = timed(pipeline)
     n_surv = int(d.shape[0])
     _, t_full = timed(lambda: rr.dtw_candidates(q, cands, band, "jnp"))
-    emit("kernel/rerank_pipeline/jnp", t * 1e6,
+    report("kernel/rerank_pipeline/jnp", t * 1e6,
          {"survivors": n_surv, "of": c,
           "lb_pruned_frac": round(1 - n_surv / c, 3),
           "speedup_vs_no_cascade": round(t_full / t, 2),
@@ -51,7 +51,7 @@ def _bench_rerank_path(rng) -> None:
     cs = jnp.asarray(rng.normal(size=(256, m)), jnp.float32)
     _, t = timed(lambda: rr.dtw_pairs_chunked(qs, cs, band, "jnp"))
     cells = 256 * m * (2 * band + 1)
-    emit("kernel/dtw_pairs/ref", t * 1e6,
+    report("kernel/dtw_pairs/ref", t * 1e6,
          {"mcells_per_s": round(cells / t / 1e6, 1),
           "tpu_kernel": "pairs wavefront: query per lane beside candidate"})
 
@@ -72,7 +72,7 @@ def _bench_signature_build(rng) -> None:
     for backend in ("jnp", "pallas"):
         _, t = timed(lambda: enc.encode_batch(xs, backend=backend),
                      warmup=1, iters=1 if backend == "pallas" else 3)
-        emit(f"kernel/signature_build/{backend}", t * 1e6,
+        report(f"kernel/signature_build/{backend}", t * 1e6,
              {"signatures_per_s": round(b / t, 1),
               "tpu_kernel": "sketch_conv strided-matvec feeds the MXU; "
                             "CWS scan keeps B shardable"})
@@ -85,7 +85,7 @@ def run() -> None:
     filt = jnp.asarray(rng.normal(size=(80, 1)), jnp.float32)
     _, t = timed(ref.sketch_conv_ref, x, filt, 3)
     flops = 2 * 256 * ((2048 - 80) // 3 + 1) * 80
-    emit("kernel/sketch_conv/ref", t * 1e6,
+    report("kernel/sketch_conv/ref", t * 1e6,
          {"gflops": round(flops / t / 1e9, 2),
           "tpu_bound": "memory (AI≈27 FLOP/B at F=1)"})
 
@@ -94,7 +94,7 @@ def run() -> None:
     c = jnp.asarray(rng.normal(size=(128, 512)), jnp.float32)
     _, t = timed(lambda: ref.dtw_wavefront_ref(q, c, band=26))
     cells = 128 * 512 * 53
-    emit("kernel/dtw_rerank/ref", t * 1e6,
+    report("kernel/dtw_rerank/ref", t * 1e6,
          {"mcells_per_s": round(cells / t / 1e6, 1),
           "tpu_kernel": "wavefront: 2m steps x (band,128) VPU tiles"})
 
@@ -102,12 +102,15 @@ def run() -> None:
     db = jnp.asarray(rng.integers(0, 1 << 30, (1_000_000, 40)), jnp.int32)
     qk = jnp.asarray(rng.integers(0, 1 << 30, (40,)), jnp.int32)
     _, t = timed(lambda: ref.collision_count_ref(qk, db))
-    emit("kernel/collision_count/ref", t * 1e6,
+    report("kernel/collision_count/ref", t * 1e6,
          {"gB_per_s": round(db.nbytes / t / 1e9, 2),
           "tpu_bound": "HBM bandwidth"})
 
     _bench_rerank_path(rng)
     _bench_signature_build(rng)
+    # the end-to-end hot path with the per-stage breakdown the kernels
+    # above feed (encode -> probe -> lb -> dtw, shared cached index)
+    hotpath_report("kernel/hotpath/ecg/len128", "ecg", 128)
 
 
 if __name__ == "__main__":

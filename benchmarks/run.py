@@ -1,13 +1,20 @@
 """Benchmark harness — one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only table3] [BENCH_SCALE=small]
+  PYTHONPATH=src python -m benchmarks.run [--only table3] [--scale smoke]
+      [--json] [--out DIR] [--baseline [DIR]] [--threshold F]
 
 Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
+With ``--json``, additionally writes one schema-validated
+``BENCH_<module>.json`` trajectory file per module (repro.bench), each
+carrying the per-stage encode/probe/lb/dtw hot-path breakdown; with
+``--baseline`` the run is diffed against a committed baseline directory
+and exits nonzero on perf regressions beyond the noise threshold
+(the CI ``bench-smoke`` gate — DESIGN.md §8).
 """
 import argparse
+import os
 import sys
 import time
-
 
 MODULES = [
     ("table1_lb_pruning", "Table 1: LB pruning collapse vs length"),
@@ -16,24 +23,117 @@ MODULES = [
     ("table4_pruning", "Table 4: candidates pruned"),
     ("fig7_param_study", "Figs 7-12: W / delta / n parameter studies"),
     ("kernel_bench", "kernel micro-benchmarks"),
+    ("serving_bench", "serving throughput: batched engine vs sequential"),
 ]
 
+#: Committed smoke-scale baseline (regenerate with
+#: ``--json --scale smoke --out benchmarks/baselines/smoke``).
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                                "smoke")
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", type=str, default=None)
-    args = ap.parse_args()
+
+def _parse_args(argv):
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run",
+        description="SSH-repro benchmark harness (see module docstring)")
+    ap.add_argument("--only", type=str, default=None,
+                    help="run only modules whose name contains this "
+                         "substring (errors if nothing matches)")
+    ap.add_argument("--scale", choices=("smoke", "small", "full"),
+                    default=None,
+                    help="workload scale (overrides $BENCH_SCALE)")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<module>.json trajectory files")
+    ap.add_argument("--out", type=str, default=".",
+                    help="directory for BENCH_*.json output (default: cwd)")
+    ap.add_argument("--baseline", nargs="?", const=DEFAULT_BASELINE,
+                    default=None, metavar="DIR",
+                    help="diff this run against a baseline report dir "
+                         f"(default when bare: {DEFAULT_BASELINE}); "
+                         "exits nonzero on regression — implies --json")
+    ap.add_argument("--threshold", type=float, default=None,
+                    help="relative slowdown allowed before an entry is a "
+                         "regression (1.0 = 2x baseline; default from "
+                         "repro.bench.regression)")
+    ap.add_argument("--min-us", type=float, default=None,
+                    help="ignore timing entries under this many µs "
+                         "(noise floor)")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = _parse_args(argv)
+    if args.scale:
+        # must land before benchmarks.common is imported (it reads the
+        # env at import time to size the datasets)
+        if "benchmarks.common" in sys.modules \
+                and sys.modules["benchmarks.common"].SCALE != args.scale:
+            print("error: --scale given after benchmarks.common was "
+                  "imported at a different scale", file=sys.stderr)
+            return 2
+        os.environ["BENCH_SCALE"] = args.scale
+    if args.baseline is not None:
+        args.json = True
+
+    modules = MODULES
+    if args.only:
+        modules = [(m, d) for m, d in MODULES if args.only in m]
+        if not modules:
+            names = ", ".join(m for m, _ in MODULES)
+            print(f"error: --only {args.only!r} matches no benchmark "
+                  f"module; valid module names: {names}", file=sys.stderr)
+            return 2
+
+    from repro.bench import BenchRunner
+    from benchmarks import common
+    runner = BenchRunner(scale=common.SCALE, out_dir=args.out,
+                         write_json=args.json)
+    common.set_runner(runner)
+
     t0 = time.time()
-    for mod_name, desc in MODULES:
-        if args.only and args.only not in mod_name:
-            continue
+    for mod_name, desc in modules:
         print(f"# === {mod_name}: {desc} ===", flush=True)
+        runner.start_module(mod_name)
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
         t = time.time()
         mod.run()
+        path = runner.finish_module()
+        if path is not None:
+            print(f"# wrote {path}", flush=True)
         print(f"# {mod_name} done in {time.time()-t:.1f}s", flush=True)
     print(f"# all benchmarks done in {time.time()-t0:.1f}s")
 
+    if args.baseline is not None:
+        return _gate(args, [m for m, _ in modules])
+    return 0
+
+
+def _gate(args, module_names) -> int:
+    """Baseline diff over the modules that just ran; nonzero on failure."""
+    from repro.bench import regression as reg
+    from repro.bench import compare_dirs
+
+    kw = {}
+    if args.threshold is not None:
+        kw["rel_threshold"] = args.threshold
+    if args.min_us is not None:
+        kw["min_us"] = args.min_us
+    findings, missing = compare_dirs(args.out, args.baseline,
+                                     modules=module_names, **kw)
+
+    for f in findings:
+        print(f"# baseline: {f}")
+    for name in missing:
+        print(f"# baseline: MISSING REPORT {name} (in baseline, not "
+              "emitted by this run)")
+    n_fail = len(reg.failures(findings)) + len(missing)
+    if n_fail:
+        print(f"# baseline: FAIL ({n_fail} regression(s)/missing "
+              f"entr(ies) vs {args.baseline})")
+        return 1
+    print(f"# baseline: OK (no regressions vs {args.baseline})")
+    return 0
+
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -43,10 +43,11 @@ os.environ.setdefault(
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (PARAMS, dataset_cached as dataset,
-                               emit, search_config)
+from benchmarks.common import (PARAMS, case_for, dataset_cached as dataset,
+                               report, search_config, stage_mean_us)
 from repro.core import SSHIndex, ssh_search
 from repro.serving import ServingEngine
+from repro.serving.metrics import ServingMetrics
 
 BATCH_SIZES = (1, 2, 4, 8)
 N_WORK_QUERIES = 64          # workload size (divisible by every batch size)
@@ -70,18 +71,19 @@ def _workload(db, n: int) -> jnp.ndarray:
 
 
 def _time_sequential(queries, index, cfg):
-    """(cold_seconds, warm_seconds) over the whole workload."""
+    """(cold_seconds, warm_seconds, warm stage_us mean) over the workload."""
     t0 = time.perf_counter()
     for q in queries:
         ssh_search(q, index, config=cfg)
     cold = time.perf_counter() - t0
-    warm = float("inf")
+    warm, stage_us = float("inf"), None
     for _ in range(N_ROUNDS // 2):
         t0 = time.perf_counter()
-        for q in queries:
-            ssh_search(q, index, config=cfg)
-        warm = min(warm, time.perf_counter() - t0)
-    return cold, warm
+        stats = [ssh_search(q, index, config=cfg).stats for q in queries]
+        elapsed = time.perf_counter() - t0
+        if elapsed < warm:
+            warm, stage_us = elapsed, stage_mean_us(stats)
+    return cold, warm, stage_us
 
 
 def _time_batched(queries, index, base_cfg):
@@ -93,6 +95,9 @@ def _time_batched(queries, index, base_cfg):
                   for i in range(0, len(queries), batch)]
         for blk in blocks:                     # warm the compiled chunks
             engine.search_batch(blk)
+        # metrics restart post-warmup: the snapshot's stage/pruning means
+        # cover only the timed (compiled) rounds
+        engine.metrics = ServingMetrics()
         cells[batch] = (engine, blocks, [float("inf")] * len(blocks))
     for _ in range(N_ROUNDS):
         for engine, blocks, best in cells.values():
@@ -101,9 +106,9 @@ def _time_batched(queries, index, base_cfg):
                 engine.search_batch(blk)
                 best[i] = min(best[i], time.perf_counter() - t0)
     times = {batch: sum(best) for batch, (_, _, best) in cells.items()}
-    lb_fracs = {batch: eng.metrics.snapshot()["lb_pruned_frac_mean"]
-                for batch, (eng, _, _) in cells.items()}
-    return times, lb_fracs
+    snaps = {batch: eng.metrics.snapshot()
+             for batch, (eng, _, _) in cells.items()}
+    return times, snaps
 
 
 def run() -> None:
@@ -116,22 +121,41 @@ def run() -> None:
         queries = _workload(db, N_WORK_QUERIES)
         n = N_WORK_QUERIES
 
-        t_cold, t_warm = _time_sequential(queries, index, cfg)
-        emit(f"serving/{kind}/len{length}/sequential_cold", t_cold / n * 1e6,
-             {"qps": round(n / t_cold, 2), "n_queries": n})
-        emit(f"serving/{kind}/len{length}/sequential_warm", t_warm / n * 1e6,
-             {"qps": round(n / t_warm, 2), "n_queries": n})
+        t_cold, t_warm, seq_stage_us = _time_sequential(queries, index,
+                                                        cfg)
+        seq_case = case_for(kind, length, int(db.shape[0]),
+                            spec=params.to_spec(), config=cfg)
+        report(f"serving/{kind}/len{length}/sequential_cold",
+               t_cold / n * 1e6,
+               {"qps": round(n / t_cold, 2), "n_queries": n},
+               case=seq_case)
+        report(f"serving/{kind}/len{length}/sequential_warm",
+               t_warm / n * 1e6,
+               {"qps": round(n / t_warm, 2), "n_queries": n},
+               stage_us=seq_stage_us, case=seq_case)
 
-        times, lb_fracs = _time_batched(queries, index, cfg)
+        times, snaps = _time_batched(queries, index, cfg)
         prev_qps = 0.0
         for batch in BATCH_SIZES:
             qps = n / times[batch]
-            emit(f"serving/{kind}/len{length}/batch{batch}",
-                 times[batch] / n * 1e6,
-                 {"qps": round(qps, 2),
-                  "speedup_vs_cold": round(qps / (n / t_cold), 2),
-                  "lb_pruned_frac": round(lb_fracs[batch], 3),
-                  "monotone": bool(qps >= prev_qps)})
+            snap = snaps[batch]
+            # per-query stage breakdown: the engine's per-batch stage
+            # means divided by the cell's batch size
+            stage_us = {s: snap[f"stage_{s}_us_per_batch_mean"] / batch
+                        for s in ("encode", "probe", "lb", "dtw")
+                        if f"stage_{s}_us_per_batch_mean" in snap}
+            report(f"serving/{kind}/len{length}/batch{batch}",
+                   times[batch] / n * 1e6,
+                   {"qps": round(qps, 2),
+                    "speedup_vs_cold": round(qps / (n / t_cold), 2),
+                    "lb_pruned_frac": round(snap["lb_pruned_frac_mean"],
+                                            3),
+                    "monotone": bool(qps >= prev_qps)},
+                   stage_us=stage_us or None,
+                   lb_pruned_frac=snap["lb_pruned_frac_mean"],
+                   case=case_for(kind, length, int(db.shape[0]),
+                                 batch=batch, spec=params.to_spec(),
+                                 config=cfg.replace(max_batch=batch)))
             prev_qps = qps
 
 

@@ -6,8 +6,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (LENGTHS, band_for, dataset_cached,
-                               gold_topk_cached, emit)
+from benchmarks.common import (LENGTHS, band_for, case_for, dataset_cached,
+                               gold_topk_cached, hotpath_report, report,
+                               timed)
 from repro.core import brute_force_topk
 from repro.core.lower_bounds import cascade_stats
 
@@ -20,14 +21,25 @@ def run() -> None:
             fracs = {"kim": [], "keogh": [], "keogh2": [], "combined": []}
             from repro.core.dtw import dtw_batch
             golds = gold_topk_cached(kind, length, 10, band)
+            t_cascade = []
             for q, gold in zip(queries, golds):
                 d10 = dtw_batch(q, db[jnp.asarray(gold)], band=band)
                 best = jnp.sort(d10)[-1]
-                stats = cascade_stats(q, db, band, best)
+                stats, t = timed(cascade_stats, q, db, band, best,
+                                 warmup=1, iters=2)
+                t_cascade.append(t)
                 for k in fracs:
                     fracs[k].append(float(stats[k]))
-            emit(f"table1/{kind}/len{length}", 0.0,
-                 {k: round(float(np.mean(v)), 4) for k, v in fracs.items()})
+            report(f"table1/{kind}/len{length}", float(np.mean(t_cascade))
+                   * 1e6,
+                   {k: round(float(np.mean(v)), 4) for k, v in fracs.items()},
+                   lb_pruned_frac=float(np.mean(fracs["combined"])),
+                   case=case_for(kind, length, int(db.shape[0])))
+            # the stage-instrumented hot path at the same setting (the
+            # cascade above is the whole-database UCR bound; this is
+            # where those bounds sit inside SSH's Alg. 2)
+            hotpath_report(f"table1/{kind}/len{length}/hotpath", kind,
+                           length)
 
 
 if __name__ == "__main__":

@@ -7,8 +7,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (LENGTHS, PARAMS, band_for, dataset_cached,
-                               gold_topk_cached, emit, search_config)
+from benchmarks.common import (LENGTHS, PARAMS, band_for, case_for,
+                               dataset_cached, gold_topk_cached, report,
+                               search_config, stage_mean_us)
 from repro.core import ndcg_at_k, precision_at_k
 from repro.db import TimeSeriesDB
 from repro.encoders import IndexSpec
@@ -40,13 +41,16 @@ def run() -> None:
             dbs = {}
             for name, spec in _specs(kind).items():
                 # the facade clamps multiprobe for encoders without
-                # shift-alignment classes ("srp")
+                # shift-alignment classes ("srp"); the sequential
+                # searcher surfaces per-query SearchStats (stage
+                # telemetry for the BENCH trajectory)
                 dbs[name] = TimeSeriesDB.build(
-                    db_series, spec=spec, config=search_config(kind,
-                                                               length))
+                    db_series, spec=spec,
+                    config=search_config(kind, length, searcher="local"))
             for k in KS:
                 golds = gold_topk_cached(kind, length, k, band)
                 rows = {}
+                ssh_prec, ssh_results = 0.0, []
                 for name, db in dbs.items():
                     # srp keeps the paper's §5.2 semantics: top-k purely
                     # by Hamming ranking (top_c=k), DTW only ordering
@@ -54,16 +58,29 @@ def run() -> None:
                     db.reconfigure(topk=k,
                                    **({"top_c": k} if name == "srp"
                                       else {}))
-                    prec, ndcg = [], []
+                    prec, ndcg, results = [], [], []
+                    db.search(queries[0])      # warm the compiled shapes
                     for q, gold in zip(queries, golds):
                         res = db.search(q)
+                        results.append(res)
                         prec.append(precision_at_k(res.ids, gold, k))
                         ndcg.append(ndcg_at_k(res.ids, gold, k))
                     rows[f"{name}_precision"] = round(float(np.mean(prec)),
                                                       3)
                     if name == "ssh":
                         rows["ssh_ndcg"] = round(float(np.mean(ndcg)), 3)
-                emit(f"table2/{kind}/len{length}/top{k}", 0.0, rows)
+                        ssh_prec, ssh_results = float(np.mean(prec)), \
+                            results
+                ssh_db = dbs["ssh"]
+                report(f"table2/{kind}/len{length}/top{k}",
+                       float(np.mean([r.wall_seconds
+                                      for r in ssh_results])) * 1e6,
+                       rows, precision_at_k=ssh_prec,
+                       stats=ssh_results[-1].stats,
+                       stage_us=stage_mean_us([r.stats
+                                               for r in ssh_results]),
+                       case=case_for(kind, length, len(ssh_db), spec=ssh_db.spec,
+                                     config=ssh_db.config))
 
 
 if __name__ == "__main__":

@@ -5,39 +5,46 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (LENGTHS, PARAMS, band_for,
-                               dataset_cached as dataset, emit, timed,
-                               search_config)
+from benchmarks.common import (LENGTHS, band_for, case_for,
+                               dataset_cached as dataset, percentile,
+                               report, stage_mean_us, timed,
+                               timed_search_samples, tsdb_cached)
 from repro.core import brute_force_topk, ucr_search
-from repro.db import TimeSeriesDB
 
 
 def run() -> None:
     for kind in ("ecg", "randomwalk"):
-        params = PARAMS[kind]
         for length in LENGTHS:
             db, queries = dataset(kind, length)
             band = band_for(length)
             # facade build precomputes the envelopes at config.band:
             # LB_Keogh2 needs no per-query candidate envelopes (§3);
             # the "local" searcher is the sequential path under timing
-            cfg = search_config(kind, length, searcher="local")
-            tsdb = TimeSeriesDB.build(db, spec=params.to_spec(), config=cfg)
+            tsdb = tsdb_cached(kind, length)
+            results, samples_us = timed_search_samples(tsdb.search,
+                                                       queries)
+            t_ssh = float(np.mean(samples_us)) / 1e6
             q = queries[0]
-            res, t_ssh = timed(lambda: tsdb.search(q), warmup=1, iters=2)
             _, t_ucr = timed(
                 lambda: ucr_search(q, db, topk=10, band=band),
                 warmup=1, iters=2)
             _, t_brute = timed(
                 lambda: brute_force_topk(q, db, 10, band=band),
                 warmup=1, iters=1)
-            emit(f"table3/{kind}/len{length}", t_ssh * 1e6,
-                 {"ssh_s": round(t_ssh, 4), "ucr_s": round(t_ucr, 4),
-                  "brute_s": round(t_brute, 4),
-                  "speedup_vs_ucr": round(t_ucr / t_ssh, 2),
-                  "speedup_vs_brute": round(t_brute / t_ssh, 2),
-                  "lb_pruned_frac": round(res.stats.lb_pruned_frac, 3),
-                  "rerank_backend": res.stats.backend})
+            res = results[-1]
+            report(f"table3/{kind}/len{length}", t_ssh * 1e6,
+                   {"ssh_s": round(t_ssh, 4), "ucr_s": round(t_ucr, 4),
+                    "brute_s": round(t_brute, 4),
+                    "speedup_vs_ucr": round(t_ucr / t_ssh, 2),
+                    "speedup_vs_brute": round(t_brute / t_ssh, 2),
+                    "ssh_p95_us": round(percentile(samples_us, 95), 1),
+                    "lb_pruned_frac": round(res.stats.lb_pruned_frac, 3),
+                    "rerank_backend": res.stats.backend},
+                   stats=res.stats,
+                   stage_us=stage_mean_us([r.stats for r in results]),
+                   samples_us=samples_us,
+                   case=case_for(kind, length, len(tsdb), spec=tsdb.spec,
+                                 config=tsdb.config))
 
 
 if __name__ == "__main__":

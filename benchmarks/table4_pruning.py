@@ -4,9 +4,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (LENGTHS, PARAMS, band_for,
-                               dataset_cached as dataset, emit,
-                               search_config)
+from benchmarks.common import (LENGTHS, PARAMS, band_for, case_for,
+                               dataset_cached as dataset, report,
+                               search_config, stage_mean_us)
 from repro.core import SSHIndex, ssh_search, ucr_search
 
 
@@ -18,17 +18,24 @@ def run() -> None:
             band = band_for(length)
             index = SSHIndex.build(db, spec=params.to_spec())
             cfg = search_config(kind, length)   # cascade on by default
-            hash_only, full, ucr = [], [], []
+            hash_only, full, ucr, results = [], [], [], []
+            ssh_search(queries[0], index, config=cfg)   # warm compiles
             for q in queries:
                 res = ssh_search(q, index, config=cfg)
+                results.append(res)
                 hash_only.append(res.pruned_by_hash_frac)
                 full.append(res.pruned_total_frac)
                 ucr.append(ucr_search(q, db, topk=10,
                                       band=band).pruned_total_frac)
-            emit(f"table4/{kind}/len{length}", 0.0,
-                 {"ssh_full": round(float(np.mean(full)), 4),
-                  "ssh_hash_alone": round(float(np.mean(hash_only)), 4),
-                  "ucr_bnb": round(float(np.mean(ucr)), 4)})
+            report(f"table4/{kind}/len{length}",
+                   float(np.mean([r.wall_seconds for r in results])) * 1e6,
+                   {"ssh_full": round(float(np.mean(full)), 4),
+                    "ssh_hash_alone": round(float(np.mean(hash_only)), 4),
+                    "ucr_bnb": round(float(np.mean(ucr)), 4)},
+                   stats=results[-1].stats,
+                   stage_us=stage_mean_us([r.stats for r in results]),
+                   case=case_for(kind, length, int(db.shape[0]),
+                                 spec=params.to_spec(), config=cfg))
 
 
 if __name__ == "__main__":

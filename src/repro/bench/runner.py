@@ -1,0 +1,133 @@
+"""BenchRunner — collects BenchResults and writes BENCH_<module>.json.
+
+The benchmark modules stay importable, printable scripts (their
+``run()`` still emits the historical CSV lines); when a runner is
+installed (``benchmarks.run --json``), ``benchmarks.common.report``
+additionally records a :class:`BenchResult` into the runner's current
+module bucket, and the driver flushes one schema-validated
+``BENCH_<module>.json`` per module — the machine-readable perf
+trajectory that the CI gate and later PRs diff against.
+"""
+from __future__ import annotations
+
+import platform
+import subprocess
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.bench.schema import (BenchReport, BenchResult, dump_report,
+                                load_report)
+from repro.bench import regression as reg
+
+
+def git_sha(repo_dir: Optional[str] = None) -> str:
+    """Current commit sha ("" outside a git checkout / without git)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=repo_dir,
+            capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() if out.returncode == 0 else ""
+    except (OSError, subprocess.TimeoutExpired):
+        return ""
+
+
+def host_fingerprint() -> Dict[str, str]:
+    import jax
+    return {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "device_count": str(jax.device_count()),
+    }
+
+
+class BenchRunner:
+    """Accumulates results per benchmark module; writes one report each.
+
+    ``write_json=False`` keeps the reports in memory only (the CSV-only
+    historical behaviour of ``benchmarks.run`` without ``--json``) while
+    still letting tests inspect ``reports``.
+    """
+
+    def __init__(self, scale: str, out_dir: str | Path = ".",
+                 write_json: bool = True, sha: Optional[str] = None):
+        self.scale = scale
+        self.out_dir = Path(out_dir)
+        self.write_json = write_json
+        self.sha = git_sha() if sha is None else sha
+        self.host = host_fingerprint()
+        self.reports: Dict[str, BenchReport] = {}
+        self._module: Optional[str] = None
+        self._results: List[BenchResult] = []
+
+    # -- module lifecycle (driven by benchmarks/run.py) -------------------
+    def start_module(self, name: str) -> None:
+        if self._module is not None:
+            raise RuntimeError(f"module {self._module!r} still open")
+        self._module = name
+        self._results = []
+
+    def record(self, result: BenchResult) -> None:
+        if self._module is None:
+            raise RuntimeError("record() outside start_module/finish_module")
+        self._results.append(result)
+
+    def finish_module(self) -> Optional[Path]:
+        """Validate + (optionally) write the open module's report.
+
+        Returns the written path, or None when nothing was recorded or
+        JSON output is off.
+        """
+        name, results = self._module, self._results
+        self._module, self._results = None, []
+        if not results:
+            return None
+        report = BenchReport(
+            name=name, scale=self.scale, git_sha=self.sha,
+            results=results, host=self.host, created_unix=time.time())
+        self.reports[name] = report
+        if not self.write_json:
+            return None
+        return dump_report(report, self.out_dir / f"BENCH_{name}.json")
+
+
+# ---------------------------------------------------------------------------
+# baseline diffing over report directories
+# ---------------------------------------------------------------------------
+
+def compare_dirs(current_dir: str | Path, baseline_dir: str | Path, *,
+                 modules: Optional[List[str]] = None,
+                 rel_threshold: float = reg.DEFAULT_REL_THRESHOLD,
+                 min_us: float = reg.DEFAULT_MIN_US,
+                 precision_tol: float = reg.DEFAULT_PRECISION_TOL):
+    """Diff baseline ``BENCH_*.json`` files against their counterparts.
+
+    The ONE home of the gate's file-level semantics (``benchmarks/run.py
+    --baseline`` calls straight through here).  ``modules`` restricts
+    the diff to ``BENCH_<module>.json`` names (a partial ``--only`` run
+    must not flag the unran modules); ``None`` diffs every baseline
+    file.  Returns ``(findings, missing_reports)`` where
+    ``missing_reports`` names baseline files with no counterpart in
+    ``current_dir`` (a vanished benchmark module must fail the gate
+    just like a vanished entry).  Baseline-less current reports are
+    ignored — a brand-new benchmark has no trajectory yet.
+    """
+    current_dir, baseline_dir = Path(current_dir), Path(baseline_dir)
+    if modules is None:
+        names = sorted(p.name for p in baseline_dir.glob("BENCH_*.json"))
+    else:
+        names = [f"BENCH_{m}.json" for m in modules
+                 if (baseline_dir / f"BENCH_{m}.json").exists()]
+    findings, missing = [], []
+    for name in names:
+        cur_path = current_dir / name
+        if not cur_path.exists():
+            missing.append(name)
+            continue
+        findings.extend(reg.compare_reports(
+            load_report(cur_path), load_report(baseline_dir / name),
+            rel_threshold=rel_threshold, min_us=min_us,
+            precision_tol=precision_tol))
+    return findings, missing

@@ -33,12 +33,13 @@ to the sequential one — ``tests/test_rerank.py`` holds both.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.bench.timing import DISABLED, StageTimer
 from repro.core import lower_bounds as lb
 from repro.core.index import SSHIndex
 from repro.kernels import ops
@@ -57,6 +58,14 @@ class SearchStats:
     bound that fired (cascade order: Kim → Keogh → Keogh2), with the
     seeded candidates — which are exempt from pruning — never counted,
     so ``n_in == pruned_kim + pruned_keogh + pruned_keogh2 + n_dtw``.
+
+    ``stage_seconds`` holds the per-stage wall clock of the whole query
+    (``repro.bench.timing.STAGES``: encode → probe → lb → dtw, device-
+    synchronized at each boundary; the ``lb`` stage includes the seed
+    DTW that buys the pruning threshold).  ``None`` when telemetry was
+    off (``SearchConfig(stage_timings=False)``); the distributed
+    fan-out reports its unsplittable shard_map program under the single
+    ``"fused"`` key instead.
     """
     n_in: int = 0            # candidates entering the re-rank stage
     pruned_kim: int = 0      # first pruned by LB_Kim
@@ -65,6 +74,7 @@ class SearchStats:
     forced_kept: int = 0     # seeds kept despite a bound firing
     n_dtw: int = 0           # survivors that paid full DTW
     backend: str = "jnp"     # resolved DTW backend ("pallas" | "jnp")
+    stage_seconds: Optional[Dict[str, float]] = None
 
     @property
     def lb_pruned(self) -> int:
@@ -73,6 +83,13 @@ class SearchStats:
     @property
     def lb_pruned_frac(self) -> float:
         return self.lb_pruned / self.n_in if self.n_in else 0.0
+
+    @property
+    def stage_us(self) -> Optional[Dict[str, float]]:
+        """``stage_seconds`` in microseconds (None when telemetry off)."""
+        if self.stage_seconds is None:
+            return None
+        return {k: v * 1e6 for k, v in self.stage_seconds.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -162,7 +179,8 @@ def _gathered_env(index: SSHIndex, ids, band: int):
 
 def rerank(query: jnp.ndarray, cand_ids: jnp.ndarray, index: SSHIndex,
            topk: int, band: Optional[int], *, use_lb_cascade: bool = True,
-           backend: str = "auto", seed_size: Optional[int] = None):
+           backend: str = "auto", seed_size: Optional[int] = None,
+           timer: StageTimer = DISABLED):
     """Candidate ids -> (global ids, dists, stats), best first.
 
     Stage 2+3 of Alg. 2 for one query: seed DTW → LB cascade → survivor
@@ -173,6 +191,11 @@ def rerank(query: jnp.ndarray, cand_ids: jnp.ndarray, index: SSHIndex,
     up-front DTW.  Top-k results are unchanged either way — the
     threshold is always a valid upper bound on the final k-th distance,
     so a pruned candidate can never belong to the answer set.
+
+    An enabled ``timer`` (shared with ``hash_probe`` so one dict carries
+    all four stages) records seed DTW + cascade as ``lb`` and the
+    survivor DTW + top-k as ``dtw``; the accumulated timings are
+    published on ``stats.stage_seconds``.
     """
     backend_used = ops.backend_name(ops.resolve_backend(backend))
     cands = index.series[cand_ids]
@@ -180,31 +203,37 @@ def rerank(query: jnp.ndarray, cand_ids: jnp.ndarray, index: SSHIndex,
     stats = SearchStats(n_in=n_hash, backend=backend_used)
 
     if use_lb_cascade and band is not None and n_hash > topk:
-        # best-so-far: topk-th best DTW over the seeded best-hash hits.
-        # The seed is clamped to >= topk (validate() also enforces it):
-        # a smaller seed would make the threshold an upper bound on a
-        # better-than-kth distance, unsoundly pruning true answers.
-        s = min(max(seed_size or 0, topk), n_hash)
-        seed = dtw_candidates(query, cands[:s], band, backend)
-        best = jnp.sort(seed)[min(topk, s) - 1]
-        env = _gathered_env(index, cand_ids, band)
-        k1, k2, k3 = _staged_keep(query, cands, band, best, env)
-        forced = np.zeros(n_hash, bool)
-        forced[:s] = True                     # never drop the seeded set
-        keep, p1, p2, p3, fk = _count_stages(k1, k2, k3, forced)
-        stats.pruned_kim, stats.pruned_keogh, stats.pruned_keogh2 = \
-            p1, p2, p3
-        stats.forced_kept = fk
-        keep_j = jnp.asarray(keep)
-        cand_ids = cand_ids[keep_j]
-        cands = cands[keep_j]
+        with timer.stage("lb") as sync:
+            # best-so-far: topk-th best DTW over the seeded best-hash
+            # hits.  The seed is clamped to >= topk (validate() also
+            # enforces it): a smaller seed would make the threshold an
+            # upper bound on a better-than-kth distance, unsoundly
+            # pruning true answers.
+            s = min(max(seed_size or 0, topk), n_hash)
+            seed = dtw_candidates(query, cands[:s], band, backend)
+            best = jnp.sort(seed)[min(topk, s) - 1]
+            env = _gathered_env(index, cand_ids, band)
+            k1, k2, k3 = _staged_keep(query, cands, band, best, env)
+            forced = np.zeros(n_hash, bool)
+            forced[:s] = True                 # never drop the seeded set
+            keep, p1, p2, p3, fk = _count_stages(k1, k2, k3, forced)
+            stats.pruned_kim, stats.pruned_keogh, stats.pruned_keogh2 = \
+                p1, p2, p3
+            stats.forced_kept = fk
+            keep_j = jnp.asarray(keep)
+            cand_ids = sync(cand_ids[keep_j])
+            cands = sync(cands[keep_j])
     stats.n_dtw = int(cands.shape[0])
 
-    d = dtw_candidates(query, cands, band, backend)
-    k = min(topk, int(cands.shape[0]))
-    vals, idx = jax.lax.top_k(-d, k)
-    ids = np.asarray(cand_ids)[np.asarray(idx)]
-    return ids, np.asarray(-vals), stats
+    with timer.stage("dtw") as sync:
+        d = dtw_candidates(query, cands, band, backend)
+        k = min(topk, int(cands.shape[0]))
+        vals, idx = jax.lax.top_k(-d, k)
+        ids = np.asarray(cand_ids)[np.asarray(idx)]
+        dists = np.asarray(-sync(vals))
+    if timer.enabled:
+        stats.stage_seconds = dict(timer.timings)
+    return ids, dists, stats
 
 
 # ---------------------------------------------------------------------------
@@ -214,7 +243,8 @@ def rerank(query: jnp.ndarray, cand_ids: jnp.ndarray, index: SSHIndex,
 def rerank_batch(queries: jnp.ndarray, ids: np.ndarray, valid: np.ndarray,
                  index: SSHIndex, topk: int, band: Optional[int], *,
                  use_lb_cascade: bool = True, backend: str = "auto",
-                 seed_size: Optional[int] = None):
+                 seed_size: Optional[int] = None,
+                 timer: StageTimer = DISABLED):
     """Batched stage 2+3 over per-query candidate blocks.
 
     queries (B, m); ids (B, C) int candidate ids; valid (B, C) bool.
@@ -238,67 +268,73 @@ def rerank_batch(queries: jnp.ndarray, ids: np.ndarray, valid: np.ndarray,
     seed_k = min(max(seed_size or 0, topk), c)
 
     if use_lb_cascade and band is not None:
-        seed_series = index.series[jnp.asarray(ids[:, :seed_k])]
-        seed_d = np.asarray(_seed_dtw_backend(queries, seed_series, band,
-                                              backend))
-        if seed_size is not None:
-            # a widened seed may overrun a row's valid candidates (only
-            # possible when seed_k > topk); mask those slots so the
-            # threshold matches the sequential min(seed_size, n_hash)
-            col = np.arange(seed_k)[None, :]
-            seed_d = np.where(col < n_hash[:, None], seed_d, np.inf)
-            kth = np.sort(seed_d, axis=1)[:, min(topk, seed_k) - 1]
-            best = jnp.asarray(kth.astype(np.float32))
-        else:
-            best = jnp.asarray(seed_d.max(axis=1))        # per-query kth-best
-        cand_series = index.series[jnp.asarray(ids)]      # (B, C, m)
-        env = _gathered_env(index, ids, band)
-        if env is not None:
-            k1, k2, k3 = _cascade_rows_env(queries, cand_series, band,
-                                           best, env[0], env[1])
-        else:
-            k1, k2, k3 = _cascade_rows(queries, cand_series, band, best)
-        k1, k2, k3 = np.asarray(k1), np.asarray(k2), np.asarray(k3)
-        # sequential skips the cascade entirely when n_hash <= topk, and
-        # never drops the seeded set; the first seed_k slots ARE the first
-        # seed_k valid candidates whenever the cascade applies (top_k
-        # sorts positive counts first)
-        forced = np.zeros((b, c), bool)
-        forced[:, :seed_k] = True
-        forced[n_hash <= topk] = True
-        # stage counters only over valid candidates that entered the
-        # cascade (invalid slots never reach DTW; forced slots are exempt)
-        enter = valid & ~forced
-        stats.pruned_kim = int(np.sum(enter & ~k1))
-        stats.pruned_keogh = int(np.sum(enter & k1 & ~k2))
-        stats.pruned_keogh2 = int(np.sum(enter & k1 & k2 & ~k3))
-        stats.forced_kept = int(np.sum(valid & forced & ~(k1 & k2 & k3)))
-        ok = valid & (forced | (k1 & k2 & k3))
+        with timer.stage("lb"):
+            seed_series = index.series[jnp.asarray(ids[:, :seed_k])]
+            seed_d = np.asarray(_seed_dtw_backend(queries, seed_series,
+                                                  band, backend))
+            if seed_size is not None:
+                # a widened seed may overrun a row's valid candidates
+                # (only possible when seed_k > topk); mask those slots so
+                # the threshold matches the sequential
+                # min(seed_size, n_hash)
+                col = np.arange(seed_k)[None, :]
+                seed_d = np.where(col < n_hash[:, None], seed_d, np.inf)
+                kth = np.sort(seed_d, axis=1)[:, min(topk, seed_k) - 1]
+                best = jnp.asarray(kth.astype(np.float32))
+            else:
+                best = jnp.asarray(seed_d.max(axis=1))    # per-query kth-best
+            cand_series = index.series[jnp.asarray(ids)]  # (B, C, m)
+            env = _gathered_env(index, ids, band)
+            if env is not None:
+                k1, k2, k3 = _cascade_rows_env(queries, cand_series, band,
+                                               best, env[0], env[1])
+            else:
+                k1, k2, k3 = _cascade_rows(queries, cand_series, band, best)
+            k1, k2, k3 = np.asarray(k1), np.asarray(k2), np.asarray(k3)
+            # sequential skips the cascade entirely when n_hash <= topk,
+            # and never drops the seeded set; the first seed_k slots ARE
+            # the first seed_k valid candidates whenever the cascade
+            # applies (top_k sorts positive counts first)
+            forced = np.zeros((b, c), bool)
+            forced[:, :seed_k] = True
+            forced[n_hash <= topk] = True
+            # stage counters only over valid candidates that entered the
+            # cascade (invalid slots never reach DTW; forced exempt)
+            enter = valid & ~forced
+            stats.pruned_kim = int(np.sum(enter & ~k1))
+            stats.pruned_keogh = int(np.sum(enter & k1 & ~k2))
+            stats.pruned_keogh2 = int(np.sum(enter & k1 & k2 & ~k3))
+            stats.forced_kept = int(np.sum(valid & forced
+                                           & ~(k1 & k2 & k3)))
+            ok = valid & (forced | (k1 & k2 & k3))
     else:
         ok = valid
     n_final = ok.sum(axis=1)                              # (B,)
 
-    # flattened survivor pairs, gathered through the deduped union table
-    rows_idx, cols_idx = np.nonzero(ok)                   # (P,) row-major
-    pair_ids = ids[rows_idx, cols_idx]
-    union = np.unique(pair_ids)                           # (U,) sorted
-    union_series = index.series[jnp.asarray(union)]       # (U, m)
-    pos = np.searchsorted(union, pair_ids)
-    c_rows = union_series[jnp.asarray(pos)]               # (P, m)
-    q_rows = queries[jnp.asarray(rows_idx)]               # (P, m)
-    pair_d = dtw_pairs_chunked(q_rows, c_rows, band, backend)   # (P,)
-    stats.n_dtw = int(pair_d.shape[0])
+    with timer.stage("dtw") as sync:
+        # flattened survivor pairs, through the deduped union table
+        rows_idx, cols_idx = np.nonzero(ok)               # (P,) row-major
+        pair_ids = ids[rows_idx, cols_idx]
+        union = np.unique(pair_ids)                       # (U,) sorted
+        union_series = index.series[jnp.asarray(union)]   # (U, m)
+        pos = np.searchsorted(union, pair_ids)
+        c_rows = union_series[jnp.asarray(pos)]           # (P, m)
+        q_rows = queries[jnp.asarray(rows_idx)]           # (P, m)
+        pair_d = dtw_pairs_chunked(q_rows, c_rows, band, backend)   # (P,)
+        stats.n_dtw = int(pair_d.shape[0])
 
-    # per-query top-k (lax.top_k for sequential-identical tie-breaks)
-    cand_d = np.full((b, c), BIG, np.float32)             # candidate order
-    cand_d[rows_idx, cols_idx] = pair_d
-    neg, idx = jax.lax.top_k(-jnp.asarray(cand_d), k_out)
-    idx = np.asarray(idx)
-    out_ids = np.take_along_axis(ids, idx, axis=1)
-    out_d = -np.asarray(neg)
+        # per-query top-k (lax.top_k for sequential-identical tie-breaks)
+        cand_d = np.full((b, c), BIG, np.float32)         # candidate order
+        cand_d[rows_idx, cols_idx] = pair_d
+        neg, idx = jax.lax.top_k(-jnp.asarray(cand_d), k_out)
+        idx = np.asarray(idx)
+        out_ids = np.take_along_axis(ids, idx, axis=1)
+        out_d = -np.asarray(sync(neg))
     # rows with fewer than k_out survivors: mark the filler tail (fixed
     # output shapes; callers trim these, matching sequential lengths)
     out_ids = np.where(out_d < BIG * 0.5, out_ids, -1)
+    if timer.enabled:
+        stats.stage_seconds = dict(timer.timings)
     return (out_ids.astype(np.int64), out_d.astype(np.float32),
             n_final.astype(np.int64), int(union.shape[0]), stats)
 

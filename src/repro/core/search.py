@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.bench.timing import DISABLED, STAGES, StageTimer
 from repro.core.dtw import dtw_batch
 from repro.core import lower_bounds as lb
 from repro.core import rerank as rr
@@ -44,7 +45,8 @@ def hash_probe(query: jnp.ndarray, index: SSHIndex, top_c: int,
                multiprobe_offsets: int = 1,
                use_host_buckets: bool = False,
                topk: int = 10,
-               backend: str = "auto") -> jnp.ndarray:
+               backend: str = "auto",
+               timer: StageTimer = DISABLED) -> jnp.ndarray:
     """Stage 1 of Alg. 2: candidate ids ranked by hash collisions.
 
     Returns at most ``top_c`` candidate ids with a positive collision
@@ -53,37 +55,47 @@ def hash_probe(query: jnp.ndarray, index: SSHIndex, top_c: int,
     ``repro.serving.batched`` (identical per-query decisions).  The
     ``backend`` knob routes the collision count through the Pallas kernel
     or the jnp reference — integer counts, so candidate sets are identical
-    either way.
+    either way.  An enabled ``timer`` records the query signature build
+    as the ``encode`` stage and the collision scan + top-C as ``probe``.
     """
     n = int(index.keys.shape[0])
     use_pallas = ops.resolve_backend(backend)
     if use_host_buckets and index.host_buckets is not None:
-        qkeys = index.query_keys(query)
-        cand_ids = index.host_buckets.probe(np.asarray(qkeys))
-        cand_ids = jnp.asarray(cand_ids[: max(top_c, topk)], jnp.int32)
+        with timer.stage("encode") as sync:
+            qkeys = sync(index.query_keys(query))
+        with timer.stage("probe") as sync:
+            cand_ids = index.host_buckets.probe(np.asarray(qkeys))
+            cand_ids = jnp.asarray(cand_ids[: max(top_c, topk)], jnp.int32)
     elif multiprobe_offsets > 1:
         # one probe row per δ-offset, combined by per-candidate max —
         # same qk/db selection as the batched batch_probe
         from repro.core import minhash
-        qsigs = index.query_signatures_multiprobe(query, multiprobe_offsets)
-        if rank_by_signature:
-            qk, db = qsigs, index.signatures
-        else:
-            qk = minhash.combine_bands(qsigs, index.num_tables)
-            db = index.keys
-        counts_max = jnp.max(jnp.stack(
-            [ops.collision_count(row, db, use_pallas=use_pallas)
-             for row in qk]), axis=0)
-        vals, ids = jax.lax.top_k(counts_max, min(top_c, n))
-        cand_ids = ids[vals > 0]
+        with timer.stage("encode") as sync:
+            qsigs = index.query_signatures_multiprobe(query,
+                                                      multiprobe_offsets)
+            if rank_by_signature:
+                qk, db = qsigs, index.signatures
+            else:
+                qk = minhash.combine_bands(qsigs, index.num_tables)
+                db = index.keys
+            qk = sync(qk)
+        with timer.stage("probe") as sync:
+            counts_max = jnp.max(jnp.stack(
+                [ops.collision_count(row, db, use_pallas=use_pallas)
+                 for row in qk]), axis=0)
+            vals, ids = jax.lax.top_k(counts_max, min(top_c, n))
+            cand_ids = sync(ids[vals > 0])
     else:
-        if rank_by_signature:
-            qk, db = index.query_signature(query), index.signatures
-        else:
-            qk, db = index.query_keys(query), index.keys
-        counts = ops.collision_count(qk, db, use_pallas=use_pallas)
-        vals, ids = jax.lax.top_k(counts, min(top_c, n))
-        cand_ids = ids[vals > 0]
+        with timer.stage("encode") as sync:
+            if rank_by_signature:
+                qk, db = index.query_signature(query), index.signatures
+            else:
+                qk, db = index.query_keys(query), index.keys
+            qk = sync(qk)
+        with timer.stage("probe") as sync:
+            counts = ops.collision_count(qk, db, use_pallas=use_pallas)
+            vals, ids = jax.lax.top_k(counts, min(top_c, n))
+            cand_ids = sync(ids[vals > 0])
     if cand_ids.shape[0] == 0:           # degenerate: fall back to top_c ids
         cand_ids = jnp.arange(min(top_c, n), dtype=jnp.int32)
     return cand_ids
@@ -117,19 +129,22 @@ def ssh_search(query: jnp.ndarray, index: SSHIndex,
                         "search kwargs, not both: "
                         f"{sorted(legacy_kwargs)}")
     t0 = time.perf_counter()
+    timer = StageTimer(enabled=config.stage_timings, prefill=STAGES)
     n = int(index.keys.shape[0])
     cand_ids = hash_probe(query, index, config.top_c,
                           rank_by_signature=config.rank_by_signature,
                           multiprobe_offsets=config.multiprobe_offsets,
                           use_host_buckets=config.use_host_buckets,
-                          topk=config.topk, backend=config.backend)
+                          topk=config.topk, backend=config.backend,
+                          timer=timer)
     n_hash = int(cand_ids.shape[0])
 
     ids, dists, stats = rr.rerank(query, cand_ids, index, config.topk,
                                   config.band,
                                   use_lb_cascade=config.use_lb_cascade,
                                   backend=config.backend,
-                                  seed_size=config.seed_size)
+                                  seed_size=config.seed_size,
+                                  timer=timer)
     n_final = stats.n_dtw
     wall = time.perf_counter() - t0
     return SearchResult(

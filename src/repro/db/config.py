@@ -72,6 +72,16 @@ class SearchConfig:
     * ``max_batch`` / ``max_wait_ms`` — dynamic-batcher policy
       (latency/throughput trade-off; "engine" searcher and
       ``ServingEngine`` only).
+
+    Telemetry:
+
+    * ``stage_timings`` — record per-stage wall clock (encode → probe →
+      LB cascade → banded DTW) into ``SearchStats.stage_seconds``,
+      device-synchronized at each stage boundary
+      (``repro.bench.timing.StageTimer``).  Results are unaffected; the
+      stage barriers cost nothing on CPU (the pipeline already syncs at
+      those points) but serialize overlapping dispatch on accelerators —
+      set False on a latency-critical TPU deployment.
     """
 
     topk: int = 10
@@ -86,6 +96,7 @@ class SearchConfig:
     searcher: str = "batched"
     max_batch: int = 8
     max_wait_ms: float = 2.0
+    stage_timings: bool = True
 
     def __post_init__(self):
         """Subclass hook (the deprecated ``EngineConfig`` warns here)."""

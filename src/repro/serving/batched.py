@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.bench.timing import DISABLED, STAGES, StageTimer
 from repro.core import minhash
 from repro.core import rerank as rr
 from repro.core.index import SSHIndex
@@ -90,31 +91,39 @@ def batch_probe(queries: jnp.ndarray, index: SSHIndex, top_c: int,
                 rank_by_signature: bool = True,
                 multiprobe_offsets: int = 1,
                 use_pallas: Optional[bool] = None,
-                interpret: bool = False):
+                interpret: bool = False,
+                timer: StageTimer = DISABLED):
     """Stage 1+2 for a query block: (B, m) -> ids (B, C), counts (B, C).
 
     Per-row decisions identical to the sequential ``hash_probe``: the same
     collision counts feed the same ``lax.top_k`` (ties → lowest id).
+    An enabled ``timer`` records the batched signature build as
+    ``encode`` and the collision scan + top-C as ``probe``.
     """
     b = queries.shape[0]
     top_c = min(top_c, int(index.signatures.shape[0]))
-    if multiprobe_offsets > 1:
-        sigs = index.query_signatures_batch_multiprobe(
-            queries, multiprobe_offsets)                  # (B, O, K)
-        flat = sigs.reshape(-1, sigs.shape[-1])           # (B·O, K)
-    else:
-        sigs = index.query_signatures_batch(queries)      # (B, K)
-        flat = sigs
-    if rank_by_signature:
-        qk, db = flat, index.signatures
-    else:
-        qk = minhash.combine_bands(flat, index.num_tables).astype(jnp.int32)
-        db = index.keys.astype(jnp.int32)
-    counts = ops.collision_count_batch(qk, db, use_pallas=use_pallas,
-                                       interpret=interpret)   # (B·O, N)
-    if multiprobe_offsets > 1:
-        counts = counts.reshape(b, multiprobe_offsets, -1).max(axis=1)
-    vals, ids = jax.lax.top_k(counts, top_c)
+    with timer.stage("encode") as sync:
+        if multiprobe_offsets > 1:
+            sigs = index.query_signatures_batch_multiprobe(
+                queries, multiprobe_offsets)              # (B, O, K)
+            flat = sigs.reshape(-1, sigs.shape[-1])       # (B·O, K)
+        else:
+            sigs = index.query_signatures_batch(queries)  # (B, K)
+            flat = sigs
+        if rank_by_signature:
+            qk, db = flat, index.signatures
+        else:
+            qk = minhash.combine_bands(flat,
+                                       index.num_tables).astype(jnp.int32)
+            db = index.keys.astype(jnp.int32)
+        qk = sync(qk)
+    with timer.stage("probe") as sync:
+        counts = ops.collision_count_batch(qk, db, use_pallas=use_pallas,
+                                           interpret=interpret)   # (B·O, N)
+        if multiprobe_offsets > 1:
+            counts = counts.reshape(b, multiprobe_offsets, -1).max(axis=1)
+        vals, ids = jax.lax.top_k(counts, top_c)
+        ids, vals = sync((ids, vals))
     return ids, vals
 
 
@@ -150,6 +159,7 @@ def ssh_search_batch(queries: jnp.ndarray, index: SSHIndex,
                         "legacy search kwargs, not both: "
                         f"{sorted(legacy_kwargs)}")
     t0 = time.perf_counter()
+    timer = StageTimer(enabled=config.stage_timings, prefill=STAGES)
     queries = jnp.asarray(queries)
     b, m = queries.shape
     n = int(index.signatures.shape[0])
@@ -161,7 +171,7 @@ def ssh_search_batch(queries: jnp.ndarray, index: SSHIndex,
     ids_j, vals_j = batch_probe(queries, index, c,
                                 rank_by_signature=config.rank_by_signature,
                                 multiprobe_offsets=config.multiprobe_offsets,
-                                use_pallas=use_pallas)
+                                use_pallas=use_pallas, timer=timer)
     ids = np.asarray(ids_j, np.int64)                     # (B, C)
     valid = np.asarray(vals_j) > 0                        # (B, C)
     empty = ~valid.any(axis=1)
@@ -174,7 +184,7 @@ def ssh_search_batch(queries: jnp.ndarray, index: SSHIndex,
     out_ids, out_d, n_final, n_union, stats = rr.rerank_batch(
         queries, ids, valid, index, config.topk, config.band,
         use_lb_cascade=config.use_lb_cascade, backend=config.backend,
-        seed_size=config.seed_size)
+        seed_size=config.seed_size, timer=timer)
 
     wall = time.perf_counter() - t0
     return BatchSearchResult(

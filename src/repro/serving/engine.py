@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.index import SSHIndex
+from repro.core.rerank import SearchStats
 from repro.core.search import SearchResult
 from repro.db.config import SearchConfig
 from repro.serving.batched import BatchSearchResult, ssh_search_batch
@@ -119,16 +120,29 @@ class DistributedSearcher:
             index.enc, mesh, config=config)
 
     def search_batch(self, queries: jnp.ndarray) -> BatchSearchResult:
+        from repro.bench.timing import StageTimer
+        from repro.kernels import ops
         t0 = time.perf_counter()
+        timer = StageTimer(enabled=self.config.stage_timings)
         b = int(queries.shape[0])
         n = int(self.index.signatures.shape[0])
         ids, dists = [], []
         for i in range(b):                       # fan-out per query row
-            gid, d = self._query_fn(self._series, self._sigs, self._state,
-                                    queries[i])
+            # the shard_map program fuses encode/probe/DTW into one
+            # dispatch, so its wall clock lands under the single
+            # "fused" stage key (a per-stage split would need an
+            # on-device profiler, not host timers)
+            with timer.stage("fused") as sync:
+                gid, d = sync(self._query_fn(self._series, self._sigs,
+                                             self._state, queries[i]))
             ids.append(np.asarray(gid))
             dists.append(np.asarray(d))
         top_c = self.config.top_c
+        stats = SearchStats(
+            backend=ops.backend_name(ops.resolve_backend(
+                self.config.backend)))
+        if timer.enabled:
+            stats.stage_seconds = dict(timer.timings)
         return BatchSearchResult(
             ids=np.stack(ids).astype(np.int64),
             dists=np.stack(dists).astype(np.float32),
@@ -136,7 +150,7 @@ class DistributedSearcher:
             n_candidates=np.full(b, min(top_c, n), np.int64),
             pruned_by_hash_frac=np.full(b, 1.0 - min(top_c, n) / n),
             pruned_total_frac=np.full(b, 1.0 - min(top_c, n) / n),
-            wall_seconds=time.perf_counter() - t0)
+            wall_seconds=time.perf_counter() - t0, stats=stats)
 
     def insert(self, series: jnp.ndarray) -> None:
         raise NotImplementedError(
@@ -146,8 +160,15 @@ class DistributedSearcher:
 
 def _lb_fracs(res: BatchSearchResult):
     """Batch-aggregate LB-cascade pruning fraction for metrics (empty when
-    the backend reports no rerank stats, e.g. the distributed fan-out)."""
-    return [res.stats.lb_pruned_frac] if res.stats is not None else []
+    the backend ran no re-rank cascade, e.g. the distributed fan-out —
+    whose stats exist only to carry stage timings, with n_in == 0)."""
+    return ([res.stats.lb_pruned_frac]
+            if res.stats is not None and res.stats.n_in else [])
+
+
+def _stage_seconds(res: BatchSearchResult):
+    """Per-stage batch wall clock for metrics (None when telemetry off)."""
+    return res.stats.stage_seconds if res.stats is not None else None
 
 
 @dataclasses.dataclass
@@ -293,7 +314,8 @@ class ServingEngine:
             list(res.pruned_by_hash_frac[:b]),
             list(res.pruned_total_frac[:b]),
             self._queue.qsize(),
-            lb_pruned_frac=_lb_fracs(res))
+            lb_pruned_frac=_lb_fracs(res),
+            stage_seconds=_stage_seconds(res))
         return [res.per_query(i) for i in range(b)]
 
     def flush_inserts(self) -> None:
@@ -378,4 +400,5 @@ class ServingEngine:
                 list(res.pruned_by_hash_frac[:len(batch)]),
                 list(res.pruned_total_frac[:len(batch)]),
                 self._queue.qsize(),
-                lb_pruned_frac=_lb_fracs(res))
+                lb_pruned_frac=_lb_fracs(res),
+                stage_seconds=_stage_seconds(res))

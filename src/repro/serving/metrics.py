@@ -1,6 +1,6 @@
 """Serving metrics — latency percentiles, queue depth, throughput, pruning.
 
-Single process, thread-safe, dependency-free.  The engine records into a
+Single process, thread-safe.  The engine records into a
 ``ServingMetrics`` instance; ``snapshot()`` renders a flat dict suitable
 for logging or a /metrics endpoint.  Latencies keep a bounded reservoir
 (most recent ``window`` samples) so percentiles track the live traffic
@@ -12,6 +12,10 @@ import threading
 import time
 from collections import deque
 from typing import Dict, Optional
+
+# the canonical pipeline stages plus the distributed fan-out's
+# unsplittable "fused" program — one definition, owned by the schema
+from repro.bench.schema import STAGE_KEYS
 
 
 class LatencyTracker:
@@ -101,6 +105,8 @@ class ServingMetrics:
         self.pruned_by_hash = RunningMean()
         self.pruned_total = RunningMean()
         self.lb_pruned = RunningMean()     # LB-cascade fraction of top-C
+        # per-batch stage wall clock (repro.bench stage telemetry)
+        self.stage_seconds = {s: RunningMean() for s in STAGE_KEYS}
         self.requests_total = 0
         self.batches_total = 0
         self.inserts_total = 0
@@ -117,7 +123,8 @@ class ServingMetrics:
 
     def on_batch(self, batch_size: int, latencies_s, queue_waits_s,
                  pruned_by_hash_frac, pruned_total_frac,
-                 depth_after: int, lb_pruned_frac=()) -> None:
+                 depth_after: int, lb_pruned_frac=(),
+                 stage_seconds: Optional[Dict[str, float]] = None) -> None:
         with self._lock:
             self.batches_total += 1
             self.requests_total += batch_size
@@ -134,6 +141,9 @@ class ServingMetrics:
                 self.pruned_total.record(f)
             for f in lb_pruned_frac:
                 self.lb_pruned.record(f)
+            for stage, sec in (stage_seconds or {}).items():
+                if stage in self.stage_seconds:
+                    self.stage_seconds[stage].record(sec)
 
     def on_insert(self, n_series: int) -> None:
         with self._lock:
@@ -142,7 +152,11 @@ class ServingMetrics:
     # -- readout ----------------------------------------------------------
     def snapshot(self) -> Dict[str, float]:
         with self._lock:
+            stage_rows = {
+                f"stage_{s}_us_per_batch_mean": m.mean * 1e6
+                for s, m in self.stage_seconds.items() if m.n}
             return {
+                **stage_rows,
                 "requests_total": self.requests_total,
                 "batches_total": self.batches_total,
                 "inserts_total": self.inserts_total,
