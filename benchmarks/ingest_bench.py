@@ -1,0 +1,174 @@
+"""Streaming ingest — sketch throughput, shard merge cost, memory.
+
+Measures the DESIGN.md §9 subsystem end to end at bench scale:
+
+* ``hotpath`` — one stage-instrumented sequential search through an
+  ``"ssh-cs"`` database (full encode/probe/lb/dtw breakdown, so this
+  module's BENCH json satisfies the trajectory contract).
+* ``append/<encoder>`` — ``StreamIngestor.append`` µs/series for the
+  count-sketch encoder vs exact ``"ssh"``; the sketch adds O(1)-per-
+  shingle update work on top of the shared signature build.
+* ``merge/shards<S>`` — ``merge_all`` wall time over S shard-local
+  ingestors holding the same total workload.  The combine is segment
+  concatenation + one sketch addition per merge, so cost grows with the
+  shard count, never with the stream length.
+* ``memory`` — ``SSHIndex.nbytes`` and encoder-state bytes for the same
+  data under ``"ssh-cs"`` vs exact ``"ssh"``: the sketch bounds the
+  shingle-indexed state at (rows·width) against the exact F·2^n.
+
+CSV rows: ingest/<kind>/len<L>/<cell>, us_per_call, derived.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (PARAMS, case_for, dataset_cached,
+                               percentile, report, search_config,
+                               stage_mean_us, timed_search_samples,
+                               tsdb_cached)
+from repro.encoders import IndexSpec
+
+KIND, LENGTH = "ecg", 128
+
+# same SSH stage geometry as the exact "ecg" bench params so the memory
+# and append rows compare like against like; the sketch knobs bound the
+# shingle state at rows·width = 16384 vs the exact F·2^n = 32768
+SKETCH = dict(rows=4, width=4096, base_bits=4)
+
+N_APPEND = 64          # series per append-throughput cell
+APPEND_BLOCK = 16      # series per append() call
+N_MERGE_ROUNDS = 5     # merge is cheap; keep the best round
+SHARD_COUNTS = (2, 4, 8)
+
+
+def _sshcs_spec() -> IndexSpec:
+    p = PARAMS[KIND]
+    return IndexSpec(encoder="ssh-cs", params=dict(
+        window=p.window, step=p.step, ngram=p.ngram,
+        num_hashes=p.num_hashes, num_tables=p.num_tables, **SKETCH))
+
+
+_CS_DB = None
+
+
+def _sshcs_db():
+    """One "ssh-cs" TimeSeriesDB over the shared bench dataset."""
+    global _CS_DB
+    if _CS_DB is None:
+        from repro.db import TimeSeriesDB
+        db, _ = dataset_cached(KIND, LENGTH)
+        _CS_DB = TimeSeriesDB.build(
+            db, spec=_sshcs_spec(),
+            config=search_config(KIND, LENGTH, searcher="local"))
+    return _CS_DB
+
+
+def _encoder_state_bytes(enc) -> int:
+    return sum(int(a.size) * a.dtype.itemsize for a in enc.state().values())
+
+
+def _hotpath() -> None:
+    _, queries = dataset_cached(KIND, LENGTH)
+    tsdb = _sshcs_db()
+    results, samples_us = timed_search_samples(tsdb.search, queries)
+    report(f"ingest/{KIND}/len{LENGTH}/hotpath",
+           float(np.mean(samples_us)),
+           {"p50_us": round(percentile(samples_us, 50), 1),
+            "p95_us": round(percentile(samples_us, 95), 1),
+            "n_samples": len(samples_us)},
+           stats=results[-1].stats,
+           stage_us=stage_mean_us([r.stats for r in results]),
+           samples_us=samples_us,
+           case=case_for(KIND, LENGTH, len(tsdb), spec=tsdb.spec,
+                         config=tsdb.config))
+
+
+def _append_workload() -> jnp.ndarray:
+    db, _ = dataset_cached(KIND, LENGTH)
+    rng = np.random.default_rng(11)
+    return db[jnp.asarray(rng.integers(0, db.shape[0], N_APPEND))]
+
+
+def _time_append(encoder, series: jnp.ndarray, backend: str) -> float:
+    """Warm seconds for appending ``series`` in APPEND_BLOCK blocks."""
+    from repro.streaming import StreamIngestor
+    blocks = [series[i:i + APPEND_BLOCK]
+              for i in range(0, int(series.shape[0]), APPEND_BLOCK)]
+    ing = StreamIngestor(encoder, backend=backend)     # compile warm-up
+    ing.append(blocks[0])
+    ing = StreamIngestor(encoder, backend=backend)
+    t0 = time.perf_counter()
+    for blk in blocks:
+        ing.append(blk)
+    if ing.sketch is not None:
+        ing.sketch.block_until_ready()
+    return time.perf_counter() - t0
+
+
+def _append_rows() -> None:
+    series = _append_workload()
+    cs_db, exact_db = _sshcs_db(), tsdb_cached(KIND, LENGTH)
+    for label, db in (("ssh-cs", cs_db), ("ssh", exact_db)):
+        secs = _time_append(db.index.enc, series, db.index.build_backend)
+        report(f"ingest/{KIND}/len{LENGTH}/append/{label}",
+               secs / N_APPEND * 1e6,
+               {"series_per_s": round(N_APPEND / secs, 1),
+                "block": APPEND_BLOCK, "n_series": N_APPEND,
+                "sketching": label == "ssh-cs"},
+               case=case_for(KIND, LENGTH, N_APPEND, spec=db.spec,
+                             config=db.config))
+
+
+def _merge_rows() -> None:
+    from repro.streaming import StreamIngestor
+    series = _append_workload()
+    db = _sshcs_db()
+    enc, backend = db.index.enc, db.index.build_backend
+    for shards in SHARD_COUNTS:
+        per = int(series.shape[0]) // shards
+        ingestors = []
+        for s in range(shards):
+            ing = StreamIngestor(enc, shard=f"shard{s}", backend=backend)
+            ing.append(series[s * per:(s + 1) * per], seq=s)
+            ingestors.append(ing)
+        best = float("inf")
+        for _ in range(N_MERGE_ROUNDS):
+            t0 = time.perf_counter()
+            merged = StreamIngestor.merge_all(ingestors)
+            merged.sketch.block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        report(f"ingest/{KIND}/len{LENGTH}/merge/shards{shards}",
+               best * 1e6,
+               {"shards": shards, "n_series": len(merged),
+                "us_per_merge": round(best * 1e6 / (shards - 1), 1)},
+               case=case_for(KIND, LENGTH, len(merged), spec=db.spec,
+                             config=db.config))
+
+
+def _memory_row() -> None:
+    cs_db, exact_db = _sshcs_db(), tsdb_cached(KIND, LENGTH)
+    cs_bytes, exact_bytes = cs_db.index.nbytes(), exact_db.index.nbytes()
+    report(f"ingest/{KIND}/len{LENGTH}/memory", 0.0,
+           {"index_bytes_sshcs": cs_bytes,
+            "index_bytes_ssh": exact_bytes,
+            "encoder_bytes_sshcs": _encoder_state_bytes(cs_db.index.enc),
+            "encoder_bytes_ssh": _encoder_state_bytes(exact_db.index.enc),
+            "encoder_ratio": round(
+                _encoder_state_bytes(exact_db.index.enc)
+                / _encoder_state_bytes(cs_db.index.enc), 3)},
+           case=case_for(KIND, LENGTH, len(cs_db), spec=cs_db.spec,
+                         config=cs_db.config))
+
+
+def run() -> None:
+    _hotpath()
+    _append_rows()
+    _merge_rows()
+    _memory_row()
+
+
+if __name__ == "__main__":
+    run()

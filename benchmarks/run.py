@@ -24,6 +24,8 @@ MODULES = [
     ("fig7_param_study", "Figs 7-12: W / delta / n parameter studies"),
     ("kernel_bench", "kernel micro-benchmarks"),
     ("serving_bench", "serving throughput: batched engine vs sequential"),
+    ("ingest_bench", "streaming ingest: sketch throughput, shard merge, "
+                     "memory"),
 ]
 
 #: Committed smoke-scale baseline (regenerate with

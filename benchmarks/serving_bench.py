@@ -150,6 +150,7 @@ def run() -> None:
                     "speedup_vs_cold": round(qps / (n / t_cold), 2),
                     "lb_pruned_frac": round(snap["lb_pruned_frac_mean"],
                                             3),
+                    "index_bytes": int(snap["index_bytes"]),
                     "monotone": bool(qps >= prev_qps)},
                    stage_us=stage_us or None,
                    lb_pruned_frac=snap["lb_pruned_frac_mean"],

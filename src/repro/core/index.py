@@ -385,6 +385,59 @@ class SSHIndex:
             self.env_upper = jnp.concatenate([self.env_upper, u], axis=0)
             self.env_lower = jnp.concatenate([self.env_lower, l], axis=0)
 
+    def insert_encoded(self, series: Optional[jnp.ndarray],
+                       signatures: jnp.ndarray,
+                       keys: jnp.ndarray) -> None:
+        """Fold pre-encoded rows (a ``StreamIngestor`` fold) into the
+        index — the streaming ingest path (DESIGN.md §9).  No re-hashing:
+        the artifacts carry signatures + band keys computed shard-side;
+        only the probe structures and envelope caches extend here.
+        """
+        sigs = jnp.asarray(signatures)
+        keys = jnp.asarray(keys)
+        if int(sigs.shape[-1]) != self.num_hashes:
+            raise ValueError(
+                f"artifact signatures have K={int(sigs.shape[-1])}, "
+                f"index expects K={self.num_hashes}")
+        if int(keys.shape[-1]) != self.num_tables:
+            raise ValueError(
+                f"artifact keys have L={int(keys.shape[-1])}, "
+                f"index expects L={self.num_tables}")
+        base = int(self.signatures.shape[0])
+        self.signatures = jnp.concatenate([self.signatures, sigs], axis=0)
+        self.keys = jnp.concatenate([self.keys, keys], axis=0)
+        if self.series is not None:
+            if series is None:
+                raise ValueError(
+                    "index stores raw series for re-ranking; artifacts "
+                    "must include them")
+            self.series = jnp.concatenate(
+                [self.series, jnp.asarray(series)], axis=0)
+        if self.host_buckets is not None:
+            self.host_buckets.insert(np.asarray(keys), base_id=base)
+        if (self.env_radius is not None and self.env_upper is not None
+                and series is not None):
+            u, l = _envelopes_chunked(jnp.asarray(series), self.env_radius)
+            self.env_upper = jnp.concatenate([self.env_upper, u], axis=0)
+            self.env_lower = jnp.concatenate([self.env_lower, l], axis=0)
+
+    def nbytes(self) -> int:
+        """Resident bytes of the index: derived artifacts (signatures,
+        keys, stored series, envelope caches) plus the encoder's
+        materialised state.  The encoder term is where the sketch-vs-
+        exact memory story lives — CWS fields are sized to the shingle
+        dimensionality (F·2^n exact vs rows·width for ``"ssh-cs"``).
+        """
+        arrays = [self.signatures, self.keys, self.series,
+                  self.env_upper, self.env_lower]
+        total = sum(int(a.size) * a.dtype.itemsize
+                    for a in arrays if a is not None)
+        enc = self.enc
+        if enc.materialized:
+            total += sum(int(a.size) * a.dtype.itemsize
+                         for a in enc.state().values())
+        return total
+
 
 def _envelopes_chunked(series: jnp.ndarray, radius: int,
                        chunk: int = 512):

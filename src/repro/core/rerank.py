@@ -75,6 +75,10 @@ class SearchStats:
     n_dtw: int = 0           # survivors that paid full DTW
     backend: str = "jnp"     # resolved DTW backend ("pallas" | "jnp")
     stage_seconds: Optional[Dict[str, float]] = None
+    # resident bytes of the index that served this query (artifacts +
+    # encoder state — ``SSHIndex.nbytes``); makes the sketch-vs-exact
+    # memory claim machine-readable next to the latency it bought
+    index_bytes: Optional[int] = None
 
     @property
     def lb_pruned(self) -> int:

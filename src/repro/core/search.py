@@ -146,6 +146,7 @@ def ssh_search(query: jnp.ndarray, index: SSHIndex,
                                   seed_size=config.seed_size,
                                   timer=timer)
     n_final = stats.n_dtw
+    stats.index_bytes = index.nbytes()
     wall = time.perf_counter() - t0
     return SearchResult(
         ids=ids, dists=dists,

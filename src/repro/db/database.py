@@ -52,6 +52,7 @@ class TimeSeriesDB:
                     else SearchConfig()).validate())
         self.mesh = mesh
         self._searcher = None
+        self._ingestor = None      # lazy shard-local StreamIngestor
 
     @staticmethod
     def _fit_config(index: SSHIndex, config: SearchConfig) -> SearchConfig:
@@ -158,14 +159,66 @@ class TimeSeriesDB:
         else:
             self.index.insert(series)
 
+    def add_stream(self, series: jnp.ndarray, *, seq: Optional[int] = None,
+                   shard: str = "local") -> None:
+        """Continuous ingest: encode *now*, fold into the searchable
+        index on :meth:`flush` (DESIGN.md §9).
+
+        Appends may arrive out of order — tag each with its stream
+        position ``seq`` (auto-increment when omitted); the fold orders
+        rows by seq, so any arrival order yields the same index.  With
+        the ``"ssh-cs"`` encoder the pending sketch aggregate rides
+        along and merges into the persisted ``cs/agg`` at flush time.
+        Accepts ``(m,)`` or ``(B, m)``.
+        """
+        if self._ingestor is None:
+            from repro.streaming import StreamIngestor
+            self._ingestor = StreamIngestor(
+                self.index.enc, shard=shard,
+                backend=self.index.build_backend)
+        self._ingestor.append(series, seq=seq)
+
+    def flush(self) -> None:
+        """Fold pending :meth:`add_stream` appends into the index (no-op
+        when nothing is pending).  Queries see the rows afterwards."""
+        ingestor, self._ingestor = self._ingestor, None
+        if ingestor is not None and len(ingestor):
+            self.apply_stream(ingestor)
+
+    def apply_stream(self, ingestor) -> None:
+        """Fold a (possibly merged, possibly remote-shard)
+        ``StreamIngestor`` into this database — the global half of a
+        shard-parallel build: no raw series is re-encoded; the rows land
+        in the ingestor's seq order and the shard's sketch aggregate
+        merges into the encoder's persisted one."""
+        if ingestor.encoder.spec != self.spec:
+            raise ValueError(
+                f"cannot fold a stream ingested under "
+                f"{ingestor.encoder.spec!r} into a database built from "
+                f"{self.spec!r}")
+        arts = ingestor.artifacts()
+        if self._searcher is not None:
+            self._searcher.flush()
+            self._searcher.apply_artifacts(arts)
+        else:
+            self.index.insert_encoded(arts.series, arts.signatures,
+                                      arts.keys)
+        if arts.sketch is not None and hasattr(self.index.enc,
+                                               "absorb_sketch"):
+            self.index.enc.absorb_sketch(arts.sketch)
+
     # -- persistence ------------------------------------------------------
     def save(self, directory: str | Path) -> Path:
         """Persist index + config; ``load`` restores bit-identically.
 
         Pending streamed ``add()``s (queued by the engine searcher
-        between batches) are flushed into the index first, so every
-        ``add()`` that returned before ``save()`` is in the snapshot.
+        between batches) and pending ``add_stream()`` appends are
+        flushed into the index first, so every mutation that returned
+        before ``save()`` is in the snapshot — including the ``"ssh-cs"``
+        sketch aggregate, which persists under ``encoder/cs/agg`` so the
+        reloaded database keeps ingesting where this one stopped.
         """
+        self.flush()
         if self._searcher is not None:
             self._searcher.flush()
         return persistence.save_database(directory, self.index, self.config)

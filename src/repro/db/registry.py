@@ -71,6 +71,14 @@ class _SearcherBase:
     def insert(self, series: jnp.ndarray) -> None:
         self.index.insert(series)
 
+    def apply_artifacts(self, artifacts) -> None:
+        """Fold a ``StreamIngestor`` fold (``StreamArtifacts``) into the
+        live index without re-hashing.  Backends with device-resident or
+        serialised state override (engine: under the serve lock;
+        distributed: re-places the sharded rows)."""
+        self.index.insert_encoded(artifacts.series, artifacts.signatures,
+                                  artifacts.keys)
+
     def flush(self) -> None:
         """Make pending inserts visible in the index (no-op for
         synchronous backends; the engine drains its insert queue)."""
@@ -150,6 +158,15 @@ class DistributedSearcher(_SearcherBase):
     def insert(self, series: jnp.ndarray) -> None:
         self._inner.insert(series)          # raises: reshard required
 
+    def apply_artifacts(self, artifacts) -> None:
+        self._inner.apply_artifacts(artifacts)
+
+    def resize(self, mesh) -> None:
+        """Elastic shard move: re-place the encoded rows + encoder state
+        under a new mesh — no raw series is re-encoded or reshuffled."""
+        self.mesh = mesh
+        self._inner.resize(mesh)
+
 
 @register_searcher("engine")
 class EngineSearcher(_SearcherBase):
@@ -187,6 +204,9 @@ class EngineSearcher(_SearcherBase):
 
     def insert(self, series: jnp.ndarray) -> None:
         self.engine.insert(series)
+
+    def apply_artifacts(self, artifacts) -> None:
+        self.engine.apply_artifacts(artifacts)
 
     def flush(self) -> None:
         self.engine.flush_inserts()

@@ -288,6 +288,25 @@ class Encoder:
         spec/artifact-mismatch refusal of the persistence contract."""
         raise NotImplementedError
 
+    def _check_leaves(self, arrays: Mapping[str, np.ndarray],
+                      want: Mapping[str, Any]) -> None:
+        """Refuse saved states whose leaf set differs from the spec's,
+        naming every offending leaf.  Missing leaves mean the artifact
+        predates (or lost) part of the encoder's state; unknown leaves
+        mean the spec no longer describes the artifact — adopting either
+        silently would hand back an encoder that hashes differently than
+        the index it came from."""
+        missing = sorted(set(want) - set(arrays))
+        if missing:
+            raise self._mismatch(
+                f"saved state is missing encoder array leaf(s) "
+                f"{missing}; found only {sorted(arrays)}")
+        unknown = sorted(set(arrays) - set(want))
+        if unknown:
+            raise self._mismatch(
+                f"saved state has unrecognised encoder array leaf(s) "
+                f"{unknown}; this spec expects exactly {sorted(want)}")
+
     def _mismatch(self, detail: str) -> "ValueError":
         return ValueError(
             f"saved encoder arrays do not match IndexSpec("

@@ -197,6 +197,12 @@ class PipelineEncoder(Encoder):
             kf, kc = jax.random.split(key)
             state = dict(self.sketcher.materialize(kf))
             state.update(self.hasher.materialize(kc, self.shingler.dim))
+            if hasattr(self.shingler, "materialize"):
+                # stateful shinglers (the streaming count-sketch) get their
+                # own fold of the root key — the kf/kc split above is pinned
+                # by the "ssh" golden signatures and must never change
+                state.update(self.shingler.materialize(
+                    jax.random.fold_in(key, 2)))
             self._adopt(state)
         return self
 
@@ -205,6 +211,10 @@ class PipelineEncoder(Encoder):
         paths (once per encoder — chunked builds and streaming inserts
         reuse them instead of re-tracing)."""
         self._state = {k: jnp.asarray(v) for k, v in state.items()}
+        if hasattr(self.shingler, "adopt"):
+            # stateful shinglers pick their hash coefficients out of the
+            # adopted state before the closures below trace against them
+            self.shingler.adopt(self._state)
         # trace-time counters: incremented when jax (re)traces a path, not
         # on every call — tests pin "compiled once" with these
         self.trace_counts: Dict[str, int] = collections.defaultdict(int)
@@ -225,6 +235,12 @@ class PipelineEncoder(Encoder):
         def batch_pallas(xs):
             _count("batch_pallas")
             bits = self.sketcher.sketch_batch_pallas(xs, self._state)
+            if hasattr(self.shingler, "histogram_batch_pallas"):
+                # shinglers with their own batched kernel (the count-sketch
+                # scatter) keep the whole weighted-set stage on Pallas
+                counts = self.shingler.histogram_batch_pallas(bits)
+                return jax.vmap(lambda c: self.hasher.hash(
+                    c, self._state))(counts)
             return jax.vmap(lambda b: self.hasher.hash(
                 self.shingler.histogram(b), self._state))(bits)
 
@@ -367,14 +383,14 @@ class PipelineEncoder(Encoder):
                               self.sketcher.num_filters)}
         shapes.update({f"cws/{f}": (k, d)
                        for f in minhash.CWSParams._fields})
+        if hasattr(self.shingler, "extra_shapes"):
+            shapes.update(self.shingler.extra_shapes())
         return shapes
 
     def load_arrays(self, arrays: Mapping[str, np.ndarray]
                     ) -> "PipelineEncoder":
         want = self.expected_shapes()
-        if sorted(arrays) != sorted(want):
-            raise self._mismatch(
-                f"array names {sorted(arrays)} != expected {sorted(want)}")
+        self._check_leaves(arrays, want)
         for name, shape in want.items():
             got = tuple(np.shape(arrays[name]))
             if got != shape:

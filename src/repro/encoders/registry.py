@@ -25,6 +25,7 @@ def _ensure_builtins() -> None:
     if not _BUILTINS_LOADED:
         import repro.encoders.pipeline    # noqa: F401  "ssh", "ssh-multires"
         import repro.encoders.srp         # noqa: F401  "srp"
+        import repro.streaming.encoder    # noqa: F401  "ssh-cs"
         _BUILTINS_LOADED = True
 
 

@@ -126,9 +126,7 @@ class SRPEncoder(Encoder):
         return {k: np.asarray(v) for k, v in self._state.items()}
 
     def load_arrays(self, arrays: Mapping[str, np.ndarray]) -> "SRPEncoder":
-        if sorted(arrays) != ["planes"]:
-            raise self._mismatch(
-                f"array names {sorted(arrays)} != expected ['planes']")
+        self._check_leaves(arrays, {"planes": None})
         shape = tuple(np.shape(arrays["planes"]))
         if len(shape) != 2 or shape[1] != self._num_hashes:
             raise self._mismatch(

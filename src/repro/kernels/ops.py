@@ -15,6 +15,7 @@ from repro.kernels import ref
 from repro.kernels.collision_count import collision_count as _collision_pallas
 from repro.kernels.collision_count import \
     collision_count_batch as _collision_batch_pallas
+from repro.kernels.count_sketch import cs_tables as _cs_tables_pallas
 from repro.kernels.dtw_wavefront import dtw_wavefront as _dtw_pallas
 from repro.kernels.dtw_wavefront import \
     dtw_wavefront_pairs as _dtw_pairs_pallas
@@ -123,6 +124,18 @@ def collision_count_batch(query_keys: jnp.ndarray, db_keys: jnp.ndarray,
         return _collision_batch_pallas(query_keys, db_keys,
                                        interpret=interpret or not _on_tpu())
     return ref.collision_count_batch_ref(query_keys, db_keys)
+
+
+def cs_tables(bucket: jnp.ndarray, sign: jnp.ndarray, width: int,
+              use_pallas: Optional[bool] = None,
+              interpret: bool = False) -> jnp.ndarray:
+    """Count-sketch table accumulation (B, R, S) -> (B, R, width)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _cs_tables_pallas(bucket, sign, width,
+                                 interpret=interpret or not _on_tpu())
+    return ref.cs_tables_ref(bucket, sign, width)
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

@@ -67,6 +67,26 @@ def collision_count_batch_ref(query_keys: jnp.ndarray, db_keys: jnp.ndarray
                              jnp.zeros((b, n), jnp.int32))
 
 
+@functools.partial(jax.jit, static_argnames=("width",))
+def cs_tables_ref(bucket: jnp.ndarray, sign: jnp.ndarray, width: int
+                  ) -> jnp.ndarray:
+    """Signed count-sketch tables. bucket (B, R, S) int32 (−1 invalid),
+    sign (B, R, S) f32 -> (B, R, width) f32.
+
+    Invalid buckets route to a dump bin at index ``width`` that is sliced
+    off — a raw ``.at[-1]`` would wrap to the last real bin.
+    """
+    b, r, s = bucket.shape
+    tgt = jnp.where(bucket >= 0, bucket, width)
+
+    def one_table(t, sg):
+        return jnp.zeros((width + 1,), jnp.float32).at[t].add(sg)[:width]
+
+    tables = jax.vmap(one_table)(tgt.reshape(b * r, s),
+                                 sign.astype(jnp.float32).reshape(b * r, s))
+    return tables.reshape(b, r, width)
+
+
 @functools.partial(jax.jit, static_argnames=("causal",))
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         causal: bool = False) -> jnp.ndarray:

@@ -185,6 +185,8 @@ def ssh_search_batch(queries: jnp.ndarray, index: SSHIndex,
         queries, ids, valid, index, config.topk, config.band,
         use_lb_cascade=config.use_lb_cascade, backend=config.backend,
         seed_size=config.seed_size, timer=timer)
+    if stats is not None:
+        stats.index_bytes = index.nbytes()
 
     wall = time.perf_counter() - t0
     return BatchSearchResult(

@@ -83,6 +83,13 @@ class BatchedSearcher:
     def insert(self, series: jnp.ndarray) -> None:
         self.index.insert(series)
 
+    def apply_artifacts(self, artifacts) -> None:
+        """Fold pre-encoded streaming artifacts (``StreamArtifacts``)
+        into the index — no re-hashing; ``insert_encoded`` keeps the
+        envelope cache aligned."""
+        self.index.insert_encoded(artifacts.series, artifacts.signatures,
+                                  artifacts.keys)
+
 
 class DistributedSearcher:
     """Shard fan-out backend over ``repro.distributed.dist_index``.
@@ -108,16 +115,27 @@ class DistributedSearcher:
         self.index = index
         self.config = config
         self.mesh = mesh
-        sig_sh, series_sh = dist_index.index_shardings(mesh)
-        import jax
-        self._series = jax.device_put(index.series, series_sh)
-        self._sigs = jax.device_put(index.signatures, sig_sh)
+        self._put_index_arrays()
         # encoder-generic shard fan-out: the encoder's materialised state
         # rides as a replicated operand; "ssh"/"srp"/"ssh-multires" (and
         # out-of-tree encoders) all serve through the same schedule
         self._state = index.enc.state()
         self._query_fn = dist_index.make_encoder_query_fn(
             index.enc, mesh, config=config)
+
+    def _put_index_arrays(self) -> None:
+        """(Re-)place the index rows under the mesh's shardings."""
+        import jax
+        from repro.distributed import dist_index
+        n = int(self.index.signatures.shape[0])
+        n_dev = self.mesh.devices.size
+        if n % n_dev:
+            raise ValueError(
+                f"index rows ({n}) must divide the mesh ({n_dev} devices) "
+                f"to row-shard; pad the stream to a multiple of {n_dev}")
+        sig_sh, series_sh = dist_index.index_shardings(self.mesh)
+        self._series = jax.device_put(self.index.series, series_sh)
+        self._sigs = jax.device_put(self.index.signatures, sig_sh)
 
     def search_batch(self, queries: jnp.ndarray) -> BatchSearchResult:
         from repro.bench.timing import StageTimer
@@ -155,7 +173,34 @@ class DistributedSearcher:
     def insert(self, series: jnp.ndarray) -> None:
         raise NotImplementedError(
             "streaming inserts into a sharded index require a reshard; "
-            "rebuild the DistributedSearcher instead")
+            "stream through a StreamIngestor and fold with "
+            "apply_artifacts() instead")
+
+    def apply_artifacts(self, artifacts) -> None:
+        """Fold pre-encoded streaming artifacts into the sharded index.
+
+        The host-side index extends (signatures/keys/series), then the
+        rows re-place under the same shardings — the shards receive
+        *encoded* state, never raw series to re-hash.
+        """
+        self.index.insert_encoded(artifacts.series, artifacts.signatures,
+                                  artifacts.keys)
+        self._put_index_arrays()
+
+    def resize(self, mesh) -> None:
+        """Move the index to a new mesh (elastic shard count).
+
+        Shard moves transfer the already-encoded rows and (via the
+        encoder state operand) the sketch aggregate; nothing is
+        re-encoded and no raw-series reshuffle happens beyond the
+        device_put itself.
+        """
+        from repro.distributed import dist_index
+        self.mesh = mesh
+        self._state = self.index.enc.state()
+        self._query_fn = dist_index.make_encoder_query_fn(
+            self.index.enc, mesh, config=self.config)
+        self._put_index_arrays()
 
 
 def _lb_fracs(res: BatchSearchResult):
@@ -309,6 +354,7 @@ class ServingEngine:
             res = self.searcher.search_batch(queries)
         wall = time.perf_counter() - t0
         b = int(queries.shape[0])
+        self.metrics.set_index_bytes(self.index.nbytes())
         self.metrics.on_batch(
             b, [wall] * b, [0.0] * b,
             list(res.pruned_by_hash_frac[:b]),
@@ -327,6 +373,15 @@ class ServingEngine:
         """
         with self._serve_lock:
             self._drain_inserts()
+
+    def apply_artifacts(self, artifacts) -> None:
+        """Fold pre-encoded streaming artifacts under the serve lock —
+        like ``insert`` it never races an in-flight batch, and queued
+        plain inserts drain first so index row order stays the arrival
+        order."""
+        with self._serve_lock:
+            self._drain_inserts()
+            self.searcher.apply_artifacts(artifacts)
 
     def insert(self, series: jnp.ndarray) -> None:
         """Streaming insert; visible to all queries submitted afterwards."""
@@ -393,6 +448,7 @@ class ServingEngine:
             done = time.perf_counter()
             for i, r in enumerate(batch):
                 r.future.set_result(res.per_query(i))
+            self.metrics.set_index_bytes(self.index.nbytes())
             self.metrics.on_batch(
                 len(batch),
                 [done - r.t_enqueue for r in batch],

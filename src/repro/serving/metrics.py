@@ -111,6 +111,10 @@ class ServingMetrics:
         self.batches_total = 0
         self.inserts_total = 0
         self.queue_depth = 0
+        # resident bytes of the served index (SSHIndex.nbytes) — a gauge,
+        # refreshed per batch so streaming inserts/folds show up; the
+        # sketch-vs-exact memory claim reads straight off serving_bench
+        self.index_bytes = 0
 
     # -- recording hooks (called by the engine) ---------------------------
     def on_start(self) -> None:
@@ -149,6 +153,10 @@ class ServingMetrics:
         with self._lock:
             self.inserts_total += n_series
 
+    def set_index_bytes(self, n: int) -> None:
+        with self._lock:
+            self.index_bytes = int(n)
+
     # -- readout ----------------------------------------------------------
     def snapshot(self) -> Dict[str, float]:
         with self._lock:
@@ -161,6 +169,7 @@ class ServingMetrics:
                 "batches_total": self.batches_total,
                 "inserts_total": self.inserts_total,
                 "queue_depth": self.queue_depth,
+                "index_bytes": self.index_bytes,
                 "batch_size_mean": self.batch_size.mean,
                 "latency_p50_ms": self.latency.percentile(50) * 1e3,
                 "latency_p95_ms": self.latency.percentile(95) * 1e3,

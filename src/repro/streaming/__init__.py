@@ -1,0 +1,25 @@
+"""repro.streaming — mergeable count-sketch indexing for continuous ingest.
+
+The subsystem behind the ``"ssh-cs"`` encoder (DESIGN.md §9): shingle
+histograms become hierarchical count-sketches with O(1) updates and an
+additive ``merge``, so index builds are associative reductions over
+shard-local :class:`StreamIngestor` state instead of batch jobs over raw
+series.  Entry points:
+
+* ``IndexSpec(encoder="ssh-cs", ...)`` — build/search/save/load through
+  the ordinary facade; sketch state persists under ``encoder/cs/*``.
+* ``TimeSeriesDB.add_stream()/flush()`` — continuous appends folded into
+  the live searchable index.
+* :class:`StreamIngestor` — shard-local ingest + the associative merge.
+"""
+from repro.streaming import count_sketch
+from repro.streaming.encoder import CountSketchShingler, StreamingSSHEncoder
+from repro.streaming.ingest import StreamArtifacts, StreamIngestor
+
+__all__ = [
+    "CountSketchShingler",
+    "StreamArtifacts",
+    "StreamIngestor",
+    "StreamingSSHEncoder",
+    "count_sketch",
+]

@@ -1,0 +1,190 @@
+"""Hierarchical count-sketch over the shingle space (repro.streaming core).
+
+The exact shingle histogram of §4.2 is replaced by a fixed-width
+count-sketch (Charikar et al., after the CSH layout — SNIPPETS.md §1):
+``rows`` independent (bucket, sign) hash pairs over a ``width``-bin
+table.  Per shingle the update is O(rows) — O(1) in the stream length —
+and two sketches over disjoint streams combine by plain addition, which
+is what turns shard-parallel index builds into associative reductions
+(``repro.streaming.ingest``).
+
+Hierarchy: level ``h`` sketches the shingle-id *prefix* ``id >>
+(base_bits·h)``; the coarsest level's prefix domain fits the table, so
+heavy hitters are recovered top-down — enumerate the coarse prefixes,
+keep those whose estimate clears the threshold, refine each survivor by
+its ``2^base_bits`` children, descend to level 0 (``find_heavy_hitters``).
+
+Hashing must live in 32-bit space (jax runs with x64 disabled), so the
+classical Mersenne-prime polynomial hashes of the reference
+implementation are replaced by Dietzfelbinger multiply-shift: with ``a``
+odd and ``b`` uniform in uint32, ``(a·x + b) >> (32 − log2 width)`` is
+universal over the bucket range, and the top bit of an independent
+multiply-shift gives the ±1 sign.  All arithmetic wraps mod 2^32 by
+uint32 semantics — no widening needed.
+
+Exactness note: tables are float32 holding sums of ±1 updates.  Integer
+values below 2^24 are exact in float32 and addition of exact integers is
+order-independent, so ``merge(a, b)`` is *bit-identical* to sketching
+the concatenated stream — the property tests in ``tests/test_streaming``
+pin this.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class CSParams(NamedTuple):
+    """Multiply-shift coefficients for ``levels × rows`` hash pairs.
+
+    ``bucket_a``/``sign_a`` are forced odd (multiply-shift universality
+    needs an odd multiplier); all four are (levels, rows) uint32.
+    """
+    bucket_a: jnp.ndarray
+    bucket_b: jnp.ndarray
+    sign_a: jnp.ndarray
+    sign_b: jnp.ndarray
+
+    @property
+    def levels(self) -> int:
+        return self.bucket_a.shape[0]
+
+    @property
+    def rows(self) -> int:
+        return self.bucket_a.shape[1]
+
+
+def num_levels(id_bits: int, width: int, base_bits: int) -> int:
+    """Hierarchy depth: enough levels that the coarsest prefix domain
+    (``id_bits − base_bits·(levels−1)`` bits) fits the table width."""
+    log2w = width.bit_length() - 1
+    extra = max(0, id_bits - log2w)
+    return 1 + -(-extra // base_bits)          # 1 + ceil(extra / base_bits)
+
+
+def make_cs_params(key: jax.Array, levels: int, rows: int) -> CSParams:
+    """Sample the hash coefficients (data-independent, persisted like the
+    filter bank / CWS fields so a reloaded index keeps hashing
+    identically regardless of future PRNG changes)."""
+    ka, kb, kc, kd = jax.random.split(key, 4)
+
+    def u32(k):
+        return jax.random.bits(k, (levels, rows), jnp.uint32)
+
+    return CSParams(bucket_a=u32(ka) | jnp.uint32(1), bucket_b=u32(kb),
+                    sign_a=u32(kc) | jnp.uint32(1), sign_b=u32(kd))
+
+
+def bucket_sign(ids: jnp.ndarray, a, b, sa, sb, width: int
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Multiply-shift bucket + ±1 sign for (possibly invalid) ids.
+
+    ``ids`` int32 with −1 marking invalid entries (padding / masked
+    multiprobe shingles); coefficients broadcast against it.  Returns
+    (bucket int32 with −1 kept invalid, sign float32 with 0 invalid) —
+    both downstream paths (scatter reference and Pallas kernel) treat
+    bucket −1 as "contributes nothing".
+    """
+    shift = 32 - (width.bit_length() - 1)
+    x = ids.astype(jnp.uint32)
+    bkt = ((a * x + b) >> shift).astype(jnp.int32)
+    sgn = 1.0 - 2.0 * ((sa * x + sb) >> 31).astype(jnp.float32)
+    valid = ids >= 0
+    return jnp.where(valid, bkt, -1), jnp.where(valid, sgn, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("base_bits",))
+def update(agg: jnp.ndarray, ids: jnp.ndarray, params: CSParams,
+           base_bits: int) -> jnp.ndarray:
+    """Fold a batch of shingle ids into a hierarchical sketch.
+
+    agg: (levels, rows, width) float32; ids: (...,) int32, −1 invalid.
+    Returns the NEW aggregate (functional — callers own the state).
+    O(levels·rows) per shingle, independent of how much stream the
+    aggregate already holds.
+    """
+    levels, rows, width = agg.shape
+    flat = ids.reshape(-1)
+    # level h sketches the prefix id >> (base_bits·h); arithmetic shift
+    # keeps −1 (invalid) at −1 for every level
+    shifts = base_bits * jnp.arange(levels, dtype=jnp.int32)
+    prefixes = flat[None, :] >> shifts[:, None]                # (levels, S)
+    bkt, sgn = bucket_sign(
+        prefixes[:, None, :], params.bucket_a[:, :, None],
+        params.bucket_b[:, :, None], params.sign_a[:, :, None],
+        params.sign_b[:, :, None], width)                      # (lv, R, S)
+    tgt = jnp.where(bkt >= 0, bkt, width)                      # dump bin
+
+    def one_table(t, s):
+        return jnp.zeros((width + 1,), jnp.float32).at[t].add(s)[:width]
+
+    contrib = jax.vmap(one_table)(tgt.reshape(levels * rows, -1),
+                                  sgn.reshape(levels * rows, -1))
+    return agg + contrib.reshape(levels, rows, width)
+
+
+def merge(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Combine sketches of disjoint streams — plain addition.
+
+    Associative and commutative; bit-identical to sketching the
+    concatenation (float32 sums of small integers are exact).
+    """
+    return a + b
+
+
+@functools.partial(jax.jit, static_argnames=("base_bits", "level"))
+def estimate(agg: jnp.ndarray, ids: jnp.ndarray, params: CSParams,
+             base_bits: int, level: int = 0) -> jnp.ndarray:
+    """Median-of-rows frequency estimate for prefix ids at ``level``.
+
+    ``ids`` are already prefix values at that level (i.e. the caller
+    shifted; pass raw shingle ids for level 0).  −1 ids estimate 0.
+    """
+    width = agg.shape[-1]
+    a = params.bucket_a[level][:, None]
+    bkt, sgn = bucket_sign(ids[None, :], a, params.bucket_b[level][:, None],
+                           params.sign_a[level][:, None],
+                           params.sign_b[level][:, None], width)  # (R, S)
+    reads = jnp.take_along_axis(agg[level], jnp.maximum(bkt, 0), axis=1)
+    est = jnp.median(sgn * reads, axis=0)
+    return jnp.where(ids >= 0, est, 0.0)
+
+
+def find_heavy_hitters(agg: jnp.ndarray, params: CSParams, *,
+                       base_bits: int, id_bits: int, threshold: float
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Shingle ids whose estimated frequency clears ``threshold``.
+
+    Top-down refinement: enumerate the coarsest level's prefix domain,
+    keep prefixes estimating ≥ threshold, expand each survivor into its
+    2^base_bits children one level down, repeat to level 0.  Sound
+    because a shingle's frequency lower-bounds every one of its prefix
+    frequencies (prefix counts are sums over children).  Returns
+    (ids, estimates) sorted by estimate descending — diagnostics, host-
+    side by design (the recursion is data-dependent).
+    """
+    levels = int(agg.shape[0])
+    top_bits = max(id_bits - base_bits * (levels - 1), 0)
+    cand = np.arange(1 << top_bits, dtype=np.int64)
+    for level in range(levels - 1, -1, -1):
+        if cand.size == 0:
+            return (np.empty(0, np.int64), np.empty(0, np.float32))
+        ests = np.asarray(estimate(agg, jnp.asarray(cand, jnp.int32),
+                                   params, base_bits=base_bits,
+                                   level=level))
+        keep = ests >= threshold
+        cand, ests = cand[keep], ests[keep]
+        if level > 0:
+            cand = (cand[:, None] * (1 << base_bits)
+                    + np.arange(1 << base_bits, dtype=np.int64)).reshape(-1)
+    order = np.argsort(-ests, kind="stable")
+    return cand[order], ests[order].astype(np.float32)
+
+
+def l2_estimate(agg: jnp.ndarray, level: int = 0) -> float:
+    """Median-of-rows ‖f‖₂ estimate at ``level`` (stream-mass sanity)."""
+    return float(jnp.median(jnp.sqrt(jnp.sum(agg[level] ** 2, axis=-1))))

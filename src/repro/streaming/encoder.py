@@ -1,0 +1,259 @@
+"""``"ssh-cs"`` — SSH with a count-sketch shingle stage (repro.streaming).
+
+``CountSketchShingler`` swaps the exact F·2^n shingle histogram (§4.2)
+for ``rows`` signed count-sketch tables of ``width`` bins
+(``repro.streaming.count_sketch``): the weighted set handed to CWS is the
+relu of the level-0 tables, flattened to ``rows·width`` — a *fixed*
+dimensionality, so the CWS state is sized to rows·width instead of the
+shingle vocabulary.  That is the memory story of the subsystem: at the
+paper's n=15 the exact stage needs CWS fields over 32768·F bins, the
+sketch stage over rows·width regardless of n, F, or how many streams
+ever merged into it.
+
+Why relu: CWS consumes non-negative weights (``cws_hash`` excludes
+w ≤ 0).  Count-sketch entries are signed; clamping at zero keeps every
+bucket a near-exact count wherever one shingle dominates it and mutes
+buckets whose contents cancelled — heavy coordinates (the ones
+weighted-Jaccard is driven by) survive with small relative error, which
+is why ``"ssh-cs"`` and ``"ssh"`` agree on top-k (the golden test in
+``tests/test_streaming.py`` pins precision@10 ≥ 0.9).
+
+The shingler is *stateful* (multiply-shift coefficients + the running
+hierarchical aggregate ``cs/agg``); ``PipelineEncoder`` drives it through
+four optional hooks — ``materialize``/``adopt``/``extra_shapes``/
+``histogram_batch_pallas`` — and persistence picks the extra leaves up
+automatically, so a saved streaming index reloads with its sketch and
+keeps ingesting.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import shingle
+from repro.encoders.base import IndexSpec
+from repro.encoders.pipeline import CWSHasher, GaussianFilterSketcher, \
+    PipelineEncoder
+from repro.encoders.registry import register_encoder
+from repro.kernels import ops
+from repro.streaming import count_sketch as cs
+
+
+class CountSketchShingler:
+    """Shingler stage: bit-profile → relu'd count-sketch tables.
+
+    Implements the :class:`repro.encoders.base.Shingler` protocol
+    (``dim``/``min_bits``/``histogram``/``histogram_masked``) plus the
+    stateful-shingler hooks ``PipelineEncoder`` honours, plus the
+    streaming surface (``update``/``merge``/``find_heavy_hitters``) over
+    the hierarchical aggregate.
+    """
+
+    def __init__(self, ngram: int, num_filters: int = 1, rows: int = 4,
+                 width: int = 4096, base_bits: int = 4):
+        self.ngram, self.num_filters = int(ngram), int(num_filters)
+        self.rows, self.width = int(rows), int(width)
+        self.base_bits = int(base_bits)
+        # shingle ids live in [0, F·2^n)
+        self.id_bits = (self.num_filters * (1 << self.ngram) - 1).bit_length()
+        self.levels = cs.num_levels(self.id_bits, self.width, self.base_bits)
+        self._params: cs.CSParams = None
+
+    # -- Shingler protocol -------------------------------------------------
+    @property
+    def dim(self) -> int:
+        return self.rows * self.width
+
+    @property
+    def min_bits(self) -> int:
+        return self.ngram
+
+    def histogram(self, bits: jnp.ndarray) -> jnp.ndarray:
+        return self._weights(self.shingle_ids(bits))
+
+    def histogram_masked(self, bits: jnp.ndarray, valid_bits) -> jnp.ndarray:
+        return self._weights(self.shingle_ids_masked(bits, valid_bits))
+
+    # -- stateful-shingler hooks (PipelineEncoder) -------------------------
+    def materialize(self, key) -> Dict[str, jnp.ndarray]:
+        p = cs.make_cs_params(key, self.levels, self.rows)
+        leaves = {f"cs/{f}": getattr(p, f) for f in cs.CSParams._fields}
+        leaves["cs/agg"] = jnp.zeros(self.sketch_shape, jnp.float32)
+        return leaves
+
+    def adopt(self, state: Mapping[str, jnp.ndarray]) -> None:
+        self._params = cs.CSParams(
+            *(state[f"cs/{f}"] for f in cs.CSParams._fields))
+
+    def extra_shapes(self) -> Dict[str, Tuple[int, ...]]:
+        lr = (self.levels, self.rows)
+        shapes = {f"cs/{f}": lr for f in cs.CSParams._fields}
+        shapes["cs/agg"] = self.sketch_shape
+        return shapes
+
+    def histogram_batch_pallas(self, bits: jnp.ndarray) -> jnp.ndarray:
+        """(B, N_B, F) bit-profiles → (B, rows·width) weights with the
+        table scatter on the Pallas one-hot kernel."""
+        ids = self.shingle_ids_batch(bits)                     # (B, S)
+        p = self._params
+        bkt, sgn = cs.bucket_sign(
+            ids[:, None, :], p.bucket_a[0][None, :, None],
+            p.bucket_b[0][None, :, None], p.sign_a[0][None, :, None],
+            p.sign_b[0][None, :, None], self.width)            # (B, R, S)
+        tables = ops.cs_tables(bkt, sgn, self.width, use_pallas=True)
+        return jnp.maximum(tables, 0.0).reshape(bits.shape[0], self.dim)
+
+    # -- shingle ids -------------------------------------------------------
+    def shingle_ids(self, bits: jnp.ndarray) -> jnp.ndarray:
+        """(N_B, F) bit-profile → (S,) int32 shingle ids (all valid)."""
+        ids = shingle.pack_ngrams(bits.T, self.ngram)          # (F, out)
+        offs = (jnp.arange(bits.shape[1], dtype=jnp.int32) << self.ngram)
+        return (ids + offs[:, None]).reshape(-1)
+
+    def shingle_ids_masked(self, bits: jnp.ndarray, valid_bits
+                           ) -> jnp.ndarray:
+        """Like ``shingle_ids`` but shingles not fully inside the first
+        ``valid_bits`` rows become −1 (dropped by every sketch path)."""
+        n_b, f = bits.shape
+        ids = shingle.pack_ngrams(bits.T, self.ngram)          # (F, out)
+        out = n_b - self.ngram + 1
+        offs = (jnp.arange(f, dtype=jnp.int32) << self.ngram)[:, None]
+        flat = (ids + offs).reshape(-1)
+        valid = jnp.arange(out, dtype=jnp.int32) < (valid_bits
+                                                    - self.ngram + 1)
+        maskf = jnp.broadcast_to(valid[None, :], (f, out)).reshape(-1)
+        return jnp.where(maskf, flat, -1)
+
+    def shingle_ids_batch(self, bits: jnp.ndarray) -> jnp.ndarray:
+        """(B, N_B, F) → (B, S) int32 shingle ids."""
+        b, _, f = bits.shape
+        ids = shingle.pack_ngrams(bits.transpose(0, 2, 1), self.ngram)
+        offs = (jnp.arange(f, dtype=jnp.int32) << self.ngram)[None, :, None]
+        return (ids + offs).reshape(b, -1)
+
+    # -- sketch internals --------------------------------------------------
+    @property
+    def sketch_shape(self) -> Tuple[int, int, int]:
+        return (self.levels, self.rows, self.width)
+
+    def level0_tables(self, ids: jnp.ndarray) -> jnp.ndarray:
+        """(S,) shingle ids (−1 invalid) → (rows, width) signed tables."""
+        p = self._params
+        bkt, sgn = cs.bucket_sign(
+            ids[None, :], p.bucket_a[0][:, None], p.bucket_b[0][:, None],
+            p.sign_a[0][:, None], p.sign_b[0][:, None], self.width)
+        tgt = jnp.where(bkt >= 0, bkt, self.width)
+        w = self.width
+
+        def one_row(t, s):
+            return jnp.zeros((w + 1,), jnp.float32).at[t].add(s)[:w]
+
+        return jax.vmap(one_row)(tgt, sgn)
+
+    def _weights(self, ids: jnp.ndarray) -> jnp.ndarray:
+        return jnp.maximum(self.level0_tables(ids), 0.0).reshape(self.dim)
+
+    def update(self, agg: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+        """Fold shingle ids into a hierarchical aggregate (functional)."""
+        return cs.update(agg, ids, self._params, base_bits=self.base_bits)
+
+    def find_heavy_hitters(self, agg: jnp.ndarray, threshold: float):
+        return cs.find_heavy_hitters(agg, self._params,
+                                     base_bits=self.base_bits,
+                                     id_bits=self.id_bits,
+                                     threshold=threshold)
+
+
+@register_encoder("ssh-cs")
+class StreamingSSHEncoder(PipelineEncoder):
+    """SSH with the count-sketch shingle stage + streaming sketch state.
+
+    Params: the ``"ssh"`` six (``window``/``step``/``ngram``/
+    ``num_filters``/``num_hashes``/``num_tables``) plus the sketch
+    geometry ``rows``/``width``/``base_bits``.  Signature semantics match
+    ``"ssh"`` up to sketch noise; the golden test pins top-k agreement.
+    """
+
+    DEFAULTS = dict(window=80, step=3, ngram=15, num_filters=1,
+                    num_hashes=20, num_tables=20,
+                    rows=4, width=4096, base_bits=4)
+
+    @classmethod
+    def _build_stages(cls, spec: IndexSpec):
+        p = {**cls.DEFAULTS, **spec.params}
+        sketcher = GaussianFilterSketcher(p["window"], p["step"],
+                                          p["num_filters"])
+        shingler = CountSketchShingler(p["ngram"], p["num_filters"],
+                                       p["rows"], p["width"], p["base_bits"])
+        return (sketcher, shingler, CWSHasher(p["num_hashes"]),
+                p["num_tables"])
+
+    @classmethod
+    def validate_params(cls, spec: IndexSpec) -> None:
+        cls._check_param_names(spec, cls.DEFAULTS)
+        p = {**cls.DEFAULTS, **spec.params}
+        if p["num_hashes"] % p["num_tables"]:
+            raise ValueError("num_hashes must be divisible by num_tables")
+        if p["ngram"] > 20:
+            raise ValueError("shingle space 2^n exceeds 1M bins; use n<=20")
+        w = p["width"]
+        if w < 128 or (w & (w - 1)):
+            raise ValueError(
+                f"width must be a power of two >= 128 (one TPU lane tile), "
+                f"got {w}")
+        if p["rows"] < 1:
+            raise ValueError("rows must be >= 1")
+        if not 1 <= p["base_bits"] <= 16:
+            raise ValueError("base_bits must be in [1, 16]")
+
+    # -- streaming sketch state -------------------------------------------
+    @property
+    def sketch_shape(self) -> Tuple[int, int, int]:
+        return self.shingler.sketch_shape
+
+    def empty_sketch(self) -> jnp.ndarray:
+        """A zero hierarchical aggregate — the shard-local starting state
+        of a :class:`repro.streaming.StreamIngestor`."""
+        return jnp.zeros(self.sketch_shape, jnp.float32)
+
+    def sketch_batch(self, xs: jnp.ndarray, *, backend: str = "auto"
+                     ) -> jnp.ndarray:
+        """(B, m) series → their hierarchical sketch contribution.
+
+        Additive: summing the contributions of any partition of a stream
+        equals sketching the whole stream (exact in f32 — see
+        ``count_sketch``), which is what makes shard merges reductions.
+        """
+        self._require_state()
+        if self._use_pallas(backend):
+            bits = self.sketcher.sketch_batch_pallas(xs, self._state)
+        else:
+            bits = jax.vmap(
+                lambda x: self.sketcher.sketch(x, self._state))(xs)
+        ids = self.shingler.shingle_ids_batch(bits)
+        return self.shingler.update(self.empty_sketch(), ids)
+
+    def aggregate_sketch(self) -> jnp.ndarray:
+        """The persisted global aggregate (leaf ``cs/agg``)."""
+        self._require_state()
+        return self._state["cs/agg"]
+
+    def absorb_sketch(self, agg: jnp.ndarray) -> None:
+        """Fold a shard-local aggregate into the persisted global one.
+
+        Safe to mutate post-trace: the cached encode closures never read
+        ``cs/agg`` (signatures depend only on the hash coefficients), so
+        the jitted paths stay valid while the aggregate grows.
+        """
+        self._require_state()
+        self._state["cs/agg"] = (self._state["cs/agg"]
+                                 + jnp.asarray(agg, jnp.float32))
+
+    def find_heavy_hitters(self, threshold: float):
+        """(ids, estimates) of shingles with estimated frequency ≥
+        ``threshold`` in the global aggregate — ingest diagnostics."""
+        self._require_state()
+        return self.shingler.find_heavy_hitters(self._state["cs/agg"],
+                                                threshold)

@@ -1,0 +1,160 @@
+"""Shard-parallel stream ingest — encode at the edge, merge as a reduction.
+
+A :class:`StreamIngestor` is the shard-local half of a streaming index
+build: series are *encoded on append* (signatures + band keys through the
+shard's encoder, with the usual backend knob) and retained as seq-tagged
+segments, while the shard's hierarchical count-sketch aggregate grows by
+O(1)-per-shingle updates.  Nothing global happens until ``merge``:
+
+* ``merge(a, b)`` concatenates segments and *adds* sketches — an
+  associative, commutative combine, so any merge tree over any shard
+  partition produces the same index (``merge_all`` reduces pairwise).
+* ``artifacts()`` emits the folded segments in ``(seq, shard, append
+  order)`` order — a total order independent of which shard held what,
+  which is why two shard-local ingestors merged once answer queries
+  identically to the same appends on a single shard (the acceptance
+  test of DESIGN.md §9).
+
+Out-of-order appends are the normal case: callers stamp each append with
+its stream position ``seq`` (auto-increment per shard when omitted);
+ordering is resolved once, at fold time.  No raw series ever reshuffles
+between shards — a shard move hands over segments + one (levels, rows,
+width) sketch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import reduce
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamArtifacts:
+    """What a fold hands the index: pre-encoded rows in global seq order
+    plus the combined sketch (``None`` for non-sketching encoders)."""
+    series: np.ndarray          # (N, m) float32
+    signatures: np.ndarray      # (N, K) int32
+    keys: np.ndarray            # (N, L) uint32
+    sketch: Optional[jnp.ndarray]
+
+    @property
+    def num_series(self) -> int:
+        return int(self.signatures.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class _Segment:
+    seq: int
+    shard: str
+    order: int                  # per-shard append counter (tie-break)
+    series: np.ndarray
+    signatures: np.ndarray
+    keys: np.ndarray
+
+
+class StreamIngestor:
+    """Shard-local continuous ingest for a materialised encoder.
+
+    ``backend`` should match the target index's ``build_backend`` so the
+    appended signatures are bit-identical to what a batch build would
+    have produced (``TimeSeriesDB.add_stream`` passes it through).
+    """
+
+    def __init__(self, encoder, *, shard: str = "shard0",
+                 backend: str = "auto"):
+        if not encoder.materialized:
+            raise ValueError("StreamIngestor needs a materialized encoder")
+        self.encoder = encoder
+        self.shard = str(shard)
+        self.backend = backend
+        self._segments: List[_Segment] = []
+        self._order = 0
+        self._auto_seq = 0
+        # shard-LOCAL sketch: starts at zero regardless of what the
+        # encoder's global aggregate already holds — the fold adds it in
+        self._sketch = (encoder.empty_sketch()
+                        if hasattr(encoder, "empty_sketch") else None)
+
+    # -- appends -----------------------------------------------------------
+    def append(self, series, *, seq: Optional[int] = None) -> None:
+        """Encode and retain a series (``(m,)``) or block (``(B, m)``).
+
+        ``seq`` is the block's global stream position; appends may arrive
+        in any seq order — ``artifacts()`` sorts once at fold time.
+        """
+        xs = jnp.asarray(series, jnp.float32)
+        if xs.ndim == 1:
+            xs = xs[None, :]
+        if seq is None:
+            seq = self._auto_seq
+        self._auto_seq = max(self._auto_seq, int(seq) + 1)
+        sigs = self.encoder.encode_batch(xs, backend=self.backend)
+        keys = self.encoder.band_keys(sigs)
+        self._segments.append(_Segment(
+            seq=int(seq), shard=self.shard, order=self._order,
+            series=np.asarray(xs), signatures=np.asarray(sigs),
+            keys=np.asarray(keys)))
+        self._order += 1
+        if self._sketch is not None:
+            self._sketch = self._sketch + self.encoder.sketch_batch(
+                xs, backend=self.backend)
+
+    def __len__(self) -> int:
+        return sum(s.signatures.shape[0] for s in self._segments)
+
+    @property
+    def sketch(self) -> Optional[jnp.ndarray]:
+        """The shard-local hierarchical aggregate (``None`` when the
+        encoder has no sketch state, e.g. ``"ssh"``)."""
+        return self._sketch
+
+    def heavy_hitters(self, threshold: float):
+        """Shard-local heavy shingles — per-shard ingest diagnostics."""
+        if self._sketch is None:
+            raise ValueError(
+                f"encoder {self.encoder.spec.encoder!r} has no sketch "
+                "state; heavy hitters need the 'ssh-cs' encoder")
+        return self.encoder.shingler.find_heavy_hitters(self._sketch,
+                                                        threshold)
+
+    # -- the associative combine -------------------------------------------
+    def merge(self, other: "StreamIngestor") -> "StreamIngestor":
+        """Combine two shards' ingest state — segments concatenate,
+        sketches add.  Associative and commutative (the folded artifact
+        order comes from seq tags, not merge order), so shard topology
+        never changes the resulting index."""
+        if other.encoder.spec != self.encoder.spec:
+            raise ValueError(
+                f"cannot merge ingestors over different specs: "
+                f"{self.encoder.spec!r} vs {other.encoder.spec!r}")
+        out = StreamIngestor(self.encoder, shard=f"{self.shard}+"
+                             f"{other.shard}", backend=self.backend)
+        out._segments = list(self._segments) + list(other._segments)
+        out._auto_seq = max(self._auto_seq, other._auto_seq)
+        if self._sketch is not None and other._sketch is not None:
+            out._sketch = self._sketch + other._sketch
+        return out
+
+    @staticmethod
+    def merge_all(ingestors: Sequence["StreamIngestor"]) -> "StreamIngestor":
+        """Tree-fold a shard set (any bracketing gives the same result)."""
+        if not ingestors:
+            raise ValueError("merge_all needs at least one ingestor")
+        return reduce(lambda a, b: a.merge(b), ingestors)
+
+    # -- the fold ----------------------------------------------------------
+    def artifacts(self) -> StreamArtifacts:
+        """Segments in global ``(seq, shard, append order)`` order, ready
+        for ``SSHIndex.insert_encoded`` — no re-hashing."""
+        if not self._segments:
+            raise ValueError("no appended series to fold")
+        segs = sorted(self._segments,
+                      key=lambda s: (s.seq, s.shard, s.order))
+        return StreamArtifacts(
+            series=np.concatenate([s.series for s in segs], axis=0),
+            signatures=np.concatenate([s.signatures for s in segs], axis=0),
+            keys=np.concatenate([s.keys for s in segs], axis=0),
+            sketch=self._sketch)

@@ -385,6 +385,32 @@ def test_load_refuses_spec_artifact_mismatch(series, tmp_path):
         TimeSeriesDB.load(out)
 
 
+def test_load_arrays_names_missing_and_unknown_leaves(series):
+    """Regression (ISSUE 6 satellite): load_arrays used to report a bare
+    sorted-list mismatch — a state missing a leaf (or carrying a stray
+    one) must name the offending leaf, not make the user diff lists."""
+    from repro.encoders import encoder_class
+    arrays = make_encoder(SPECS["ssh"]).arrays()
+    missing = {k: v for k, v in arrays.items() if k != "filters"}
+    with pytest.raises(ValueError,
+                       match=r"missing encoder array leaf.*'filters'"):
+        encoder_class("ssh")(SPECS["ssh"]).load_arrays(missing)
+    extra = dict(arrays, rogue=np.zeros(3, np.float32))
+    with pytest.raises(ValueError,
+                       match=r"unrecognised encoder array leaf.*'rogue'"):
+        encoder_class("ssh")(SPECS["ssh"]).load_arrays(extra)
+    # the non-pipeline encoder shares the refusal (and its leaf naming)
+    srp = encoder_class("srp")(IndexSpec(encoder="srp"))
+    with pytest.raises(ValueError,
+                       match=r"missing encoder array leaf.*'planes'"):
+        srp.load_arrays({})
+    planes = make_encoder(IndexSpec(encoder="srp"),
+                          length=int(series.shape[1])).arrays()
+    with pytest.raises(ValueError,
+                       match=r"unrecognised encoder array leaf.*'bias'"):
+        srp.load_arrays(dict(planes, bias=np.zeros(2, np.float32)))
+
+
 def test_unmaterialized_encoder_raises():
     from repro.encoders import encoder_class
     enc = encoder_class("ssh")(SPECS["ssh"])

@@ -1,0 +1,335 @@
+"""repro.streaming (ISSUE 6, DESIGN.md §9): count-sketch shingler,
+shard-parallel StreamIngestor, sketch persistence, heavy hitters.
+
+The acceptance contract: an ``"ssh-cs"`` index built via two shard-local
+``StreamIngestor``s + one ``merge()`` answers top-k identically to the
+same data ingested on a single shard, round-trips through save/load with
+its sketch aggregate, and keeps ingesting after the reload.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip below; the rest still run
+    given = settings = st = None
+
+from repro.data.timeseries import extract_subsequences, synthetic_ecg
+from repro.db import SearchConfig, TimeSeriesDB
+from repro.encoders import IndexSpec, make_encoder
+from repro.kernels import ops
+from repro.kernels.ref import cs_tables_ref
+from repro.streaming import StreamIngestor, count_sketch as cs
+
+pytestmark = pytest.mark.streaming
+
+SMOKE = dict(window=24, step=3, ngram=8, num_hashes=40, num_tables=20)
+SPEC_CS = IndexSpec(encoder="ssh-cs",
+                    params=dict(**SMOKE, rows=4, width=1024, base_bits=4))
+SPEC_SSH = IndexSpec(encoder="ssh", params=SMOKE)
+CFG = SearchConfig(topk=10, top_c=512, band=6, multiprobe_offsets=3,
+                   searcher="local")
+
+
+@pytest.fixture(scope="module")
+def series():
+    stream = synthetic_ecg(4000, seed=5)
+    return jnp.asarray(extract_subsequences(stream, 128, stride=4,
+                                            znorm=True))   # ~969 series
+
+
+@pytest.fixture(scope="module")
+def queries():
+    """Windows at offsets off the database's stride-4 grid."""
+    stream = synthetic_ecg(4000, seed=5)
+    out = []
+    for off in (13, 201, 555, 901, 1337, 1601, 2222, 3001):
+        q = np.asarray(stream[off:off + 128], np.float32)
+        out.append(jnp.asarray((q - q.mean()) / (q.std() + 1e-8)))
+    return out
+
+
+@pytest.fixture(scope="module")
+def db_cs(series):
+    return TimeSeriesDB.build(series, spec=SPEC_CS, config=CFG)
+
+
+@pytest.fixture(scope="module")
+def db_ssh(series):
+    return TimeSeriesDB.build(series, spec=SPEC_SSH, config=CFG)
+
+
+# ---------------------------------------------------------------------------
+# golden: "ssh-cs" agrees with exact "ssh" on top-k
+# ---------------------------------------------------------------------------
+
+def test_golden_sshcs_topk_matches_exact(db_cs, db_ssh, queries):
+    """The sketch stage changes memory, not answers: precision@10 of
+    "ssh-cs" against exact "ssh" stays ≥ 0.9 on the smoke workload."""
+    precisions = []
+    for q in queries:
+        want = set(np.asarray(db_ssh.search(q).ids).tolist())
+        got = set(np.asarray(db_cs.search(q).ids).tolist())
+        precisions.append(len(want & got) / CFG.topk)
+    assert float(np.mean(precisions)) >= 0.9, precisions
+
+
+def test_sshcs_backends_agree(db_cs, series):
+    """backend="pallas" (interpret off-TPU) and "jnp" produce identical
+    signatures AND identical sketch contributions for "ssh-cs"."""
+    enc = db_cs.index.enc
+    np.testing.assert_array_equal(
+        np.asarray(enc.encode_batch(series[:8], backend="pallas")),
+        np.asarray(enc.encode_batch(series[:8], backend="jnp")))
+    np.testing.assert_array_equal(
+        np.asarray(enc.sketch_batch(series[:8], backend="pallas")),
+        np.asarray(enc.sketch_batch(series[:8], backend="jnp")))
+
+
+def test_cs_tables_kernel_matches_ref(rng):
+    """The Pallas one-hot scatter kernel (interpret mode) reproduces the
+    reference table build, including −1 (invalid) bucket sentinels."""
+    b, r, s, width = 3, 4, 300, 256
+    bkt = rng.integers(-1, width, (b, r, s)).astype(np.int32)
+    sgn = np.where(bkt < 0, 0.0,
+                   rng.choice([-1.0, 1.0], (b, r, s))).astype(np.float32)
+    got = ops.cs_tables(jnp.asarray(bkt), jnp.asarray(sgn), width,
+                        use_pallas=True, interpret=True)
+    want = cs_tables_ref(jnp.asarray(bkt), jnp.asarray(sgn), width)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# count-sketch properties: merge is an associative, commutative combine
+# and ≡ sketching the concatenated stream
+# ---------------------------------------------------------------------------
+
+_PARAMS = cs.make_cs_params(jax.random.PRNGKey(42), levels=3, rows=3)
+_WIDTH, _BASE_BITS = 128, 4
+
+
+def _sketch_of(ids_list):
+    ids = np.full(48, -1, np.int32)          # fixed shape: one trace
+    ids[:len(ids_list)] = ids_list
+    agg = jnp.zeros((3, 3, _WIDTH), jnp.float32)
+    return cs.update(agg, jnp.asarray(ids), _PARAMS,
+                     base_bits=_BASE_BITS)
+
+
+if st is None:
+    def test_merge_is_associative_commutative_and_concat():
+        pytest.importorskip("hypothesis")
+else:
+    @settings(max_examples=20, deadline=None)
+    @given(*(st.lists(st.integers(0, 2 ** 12 - 1), max_size=48)
+             for _ in range(3)))
+    def test_merge_is_associative_commutative_and_concat(a, b, c):
+        sa, sb, sc = _sketch_of(a), _sketch_of(b), _sketch_of(c)
+        ab = cs.merge(sa, sb)
+        np.testing.assert_array_equal(          # commutative
+            np.asarray(ab), np.asarray(cs.merge(sb, sa)))
+        np.testing.assert_array_equal(          # associative
+            np.asarray(cs.merge(ab, sc)),
+            np.asarray(cs.merge(sa, cs.merge(sb, sc))))
+        # merge(a, b) ≡ sketching the concatenated stream, bit-identical
+        # (f32 sums of ±1 below 2^24 are exact and order-independent) —
+        # so every query over the merged sketch answers as if the shards
+        # had never been split
+        both = _sketch_of(list(a) + list(b))
+        np.testing.assert_array_equal(np.asarray(ab), np.asarray(both))
+        probe_np = np.full(48, -1, np.int32)
+        vals = (a + b + [0, 7])[:48]
+        probe_np[:len(vals)] = vals
+        probe = jnp.asarray(probe_np)
+        np.testing.assert_array_equal(
+            np.asarray(cs.estimate(ab, probe, _PARAMS,
+                                   base_bits=_BASE_BITS)),
+            np.asarray(cs.estimate(both, probe, _PARAMS,
+                                   base_bits=_BASE_BITS)))
+
+
+def test_estimate_tracks_true_counts():
+    """Planted frequencies are recovered within count-sketch error."""
+    rng = np.random.default_rng(3)
+    stream = np.concatenate([np.full(200, 137), np.full(90, 9),
+                             rng.integers(0, 2 ** 12, 400)])
+    agg = _sketch_of([])  # zeros
+    agg = cs.update(agg, jnp.asarray(stream, jnp.int32), _PARAMS,
+                    base_bits=_BASE_BITS)
+    est = np.asarray(cs.estimate(
+        agg, jnp.asarray([137, 9], jnp.int32), _PARAMS,
+        base_bits=_BASE_BITS))
+    assert abs(est[0] - 200) <= 20 and abs(est[1] - 90) <= 20
+
+
+def test_find_heavy_hitters_recovers_planted_ids(db_cs):
+    """Hierarchical top-down recovery through the encoder surface."""
+    enc = make_encoder(SPEC_CS)
+    assert enc.find_heavy_hitters(10.0)[0].size == 0   # fresh: empty
+    id_space = 1 << enc.shingler.id_bits
+    ids = np.concatenate([np.full(300, 137), np.full(150, 201),
+                          np.random.default_rng(0).integers(
+                              0, id_space, 500)])
+    enc.absorb_sketch(enc.shingler.update(
+        enc.empty_sketch(), jnp.asarray(ids, jnp.int32)))
+    hot, ests = enc.find_heavy_hitters(100.0)
+    assert 137 in hot.tolist() and 201 in hot.tolist()
+    assert list(ests) == sorted(ests, reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# StreamIngestor: shard-parallel fold ≡ single-shard ingest
+# ---------------------------------------------------------------------------
+
+def test_out_of_order_appends_fold_in_seq_order(db_cs, series):
+    """Any arrival order yields the same artifacts — ordering comes from
+    the seq tags, resolved once at fold time."""
+    enc = db_cs.index.enc
+    a = StreamIngestor(enc)
+    a.append(series[:4], seq=1)
+    a.append(series[4:8], seq=0)
+    b = StreamIngestor(enc)
+    b.append(series[4:8], seq=0)
+    b.append(series[:4], seq=1)
+    fa, fb = a.artifacts(), b.artifacts()
+    np.testing.assert_array_equal(fa.series, fb.series)
+    np.testing.assert_array_equal(fa.signatures, fb.signatures)
+    np.testing.assert_array_equal(fa.keys, fb.keys)
+    np.testing.assert_array_equal(np.asarray(fa.sketch),
+                                  np.asarray(fb.sketch))
+    np.testing.assert_array_equal(fa.series[:4], np.asarray(series[4:8]))
+
+
+def test_merge_mismatched_specs_and_empty_fold_raise(db_cs, db_ssh):
+    ing = StreamIngestor(db_cs.index.enc)
+    with pytest.raises(ValueError, match="different specs"):
+        ing.merge(StreamIngestor(db_ssh.index.enc))
+    with pytest.raises(ValueError, match="no appended series"):
+        ing.artifacts()
+    with pytest.raises(ValueError, match="'ssh-cs'"):
+        StreamIngestor(db_ssh.index.enc).heavy_hitters(1.0)
+
+
+def test_ssh_ingestor_has_no_sketch(db_ssh, series):
+    """The exact encoder streams too — artifacts just carry no sketch."""
+    ing = StreamIngestor(db_ssh.index.enc)
+    ing.append(series[:4])
+    assert ing.sketch is None and ing.artifacts().sketch is None
+
+
+def test_acceptance_two_shard_merge_save_load(series, queries, tmp_path):
+    """The ISSUE 6 acceptance path end to end: shard-parallel ingest ≡
+    single-shard, bit-identical through save/load, still ingesting."""
+    base, stream = series[:64], series[64:128]
+    blocks = [stream[i:i + 16] for i in range(0, 64, 16)]
+
+    db_one = TimeSeriesDB.build(base, spec=SPEC_CS, config=CFG)
+    for i, blk in enumerate(blocks):
+        db_one.add_stream(blk, seq=i)
+    db_one.flush()
+
+    db_two = TimeSeriesDB.build(base, spec=SPEC_CS, config=CFG)
+    enc = db_two.index.enc
+    sh0 = StreamIngestor(enc, shard="edge0",
+                         backend=db_two.index.build_backend)
+    sh1 = StreamIngestor(enc, shard="edge1",
+                         backend=db_two.index.build_backend)
+    sh0.append(blocks[0], seq=0)
+    sh0.append(blocks[1], seq=1)
+    sh1.append(blocks[2], seq=2)
+    sh1.append(blocks[3], seq=3)
+    db_two.apply_stream(sh0.merge(sh1))
+
+    assert len(db_one) == len(db_two) == 128
+    np.testing.assert_array_equal(
+        np.asarray(db_one.index.enc.aggregate_sketch()),
+        np.asarray(db_two.index.enc.aggregate_sketch()))
+    for q in queries[:4]:
+        one, two = db_one.search(q), db_two.search(q)
+        np.testing.assert_array_equal(one.ids, two.ids)
+        np.testing.assert_array_equal(np.asarray(one.dists),
+                                      np.asarray(two.dists))
+
+    out = tmp_path / "db"
+    db_two.save(out)
+    loaded = TimeSeriesDB.load(out)
+    np.testing.assert_array_equal(            # sketch survived the disk
+        np.asarray(loaded.index.enc.aggregate_sketch()),
+        np.asarray(db_two.index.enc.aggregate_sketch()))
+    for q in queries[:4]:
+        np.testing.assert_array_equal(loaded.search(q).ids,
+                                      db_two.search(q).ids)
+    loaded.add_stream(series[128:144])        # keeps ingesting
+    loaded.flush()
+    assert len(loaded) == 144
+    assert not np.array_equal(
+        np.asarray(loaded.index.enc.aggregate_sketch()),
+        np.asarray(db_two.index.enc.aggregate_sketch()))
+
+
+def test_save_flushes_pending_stream(series, tmp_path):
+    """save() folds pending add_stream appends first — every mutation
+    that returned before save() is in the snapshot."""
+    db = TimeSeriesDB.build(series[:64], spec=SPEC_CS, config=CFG)
+    db.add_stream(series[64:80])
+    db.save(tmp_path / "db")
+    assert len(db) == 80
+    assert len(TimeSeriesDB.load(tmp_path / "db")) == 80
+
+
+def test_apply_stream_spec_mismatch_raises(db_cs, db_ssh, series):
+    ing = StreamIngestor(db_ssh.index.enc)
+    ing.append(series[:2])
+    with pytest.raises(ValueError, match="cannot fold"):
+        db_cs.apply_stream(ing)
+
+
+def test_stream_fold_through_live_searchers(series, queries):
+    """apply_stream routes through a live searcher (engine drains its
+    insert queue under the serve lock; batched re-slices) and the folded
+    rows answer identically to a batch-built database."""
+    want = TimeSeriesDB.build(series[:96], spec=SPEC_CS, config=CFG)
+    for searcher in ("batched", "engine"):
+        cfg = CFG.replace(searcher=searcher)
+        with TimeSeriesDB.build(series[:64], spec=SPEC_CS,
+                                config=cfg) as db:
+            db.search(queries[0])             # searcher goes live
+            db.add_stream(series[64:96])
+            db.flush()
+            assert len(db) == 96
+            got = db.search(queries[1])
+            np.testing.assert_array_equal(
+                got.ids, want.search(queries[1]).ids, err_msg=searcher)
+
+
+# ---------------------------------------------------------------------------
+# index_bytes gauge
+# ---------------------------------------------------------------------------
+
+def test_index_bytes_on_stats_and_metrics(db_cs, db_ssh, queries, series):
+    """SearchStats.index_bytes == SSHIndex.nbytes on the sequential path;
+    the serving metrics expose the same gauge; the sketch encoder's
+    state is smaller than the exact encoder's (the memory story)."""
+    res = db_cs.search(queries[0])
+    assert res.stats.index_bytes == db_cs.index.nbytes() > 0
+
+    def state_bytes(enc):
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in enc.state().values())
+    # the memory claim needs a paper-scale shingle space: at ngram=15
+    # the exact CWS fields span F·2^15 bins per hash, the sketch stage
+    # stays at rows·width no matter how large the vocabulary grows
+    big = dict(window=24, step=3, ngram=15, num_hashes=4, num_tables=2)
+    exact = make_encoder(IndexSpec(encoder="ssh", params=big))
+    sketchy = make_encoder(IndexSpec(
+        encoder="ssh-cs",
+        params=dict(**big, rows=4, width=1024, base_bits=4)))
+    assert state_bytes(sketchy) < state_bytes(exact) / 4
+
+    cfg = CFG.replace(searcher="engine")
+    with TimeSeriesDB.build(series[:64], spec=SPEC_CS, config=cfg) as db:
+        db.search(queries[0])
+        snap = db.engine.metrics.snapshot()
+        assert snap["index_bytes"] == db.index.nbytes() > 0
