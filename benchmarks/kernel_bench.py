@@ -46,6 +46,23 @@ def _bench_rerank_path(rng) -> None:
           "speedup_vs_no_cascade": round(t_full / t, 2),
           "tpu_kernel": "cascade gathers + dtw_wavefront, one backend knob"})
 
+    # early-abandoning DTW: the same survivor block with the seed
+    # threshold threaded into the kernel (PrunedDTW) vs without.
+    # Hopeless lanes stop once their running anti-diagonal minimum
+    # exceeds the threshold; results on the kept lanes are identical.
+    seed = rr.dtw_candidates(q, cands[:topk], band, "jnp")
+    thr = jnp.sort(seed)[topk - 1]
+    d_off, t_off = timed(
+        lambda: rr.dtw_candidates(q, cands, band, "jnp"))
+    d_on, t_on = timed(
+        lambda: rr.dtw_candidates(q, cands, band, "jnp", threshold=thr))
+    abandoned = int(np.sum(np.asarray(d_on) >= 1e29))
+    report("kernel/dtw_early_abandon/jnp", t_on * 1e6,
+         {"abandoned_frac": round(abandoned / c, 3), "of": c,
+          "speedup_vs_no_abandon": round(t_off / t_on, 2),
+          "tpu_kernel": "wavefront while_loop exits a lane block once "
+                        "min(prev two diagonals) > per-lane threshold"})
+
     # pair-flattened survivor DTW (the batched serving shape)
     qs = jnp.asarray(rng.normal(size=(256, m)), jnp.float32)
     cs = jnp.asarray(rng.normal(size=(256, m)), jnp.float32)

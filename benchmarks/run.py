@@ -2,6 +2,7 @@
 
   PYTHONPATH=src python -m benchmarks.run [--only table3] [--scale smoke]
       [--json] [--out DIR] [--baseline [DIR]] [--threshold F]
+      [--min-lb-pruned F]
 
 Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
 With ``--json``, additionally writes one schema-validated
@@ -60,6 +61,12 @@ def _parse_args(argv):
     ap.add_argument("--min-us", type=float, default=None,
                     help="ignore timing entries under this many µs "
                          "(noise floor)")
+    ap.add_argument("--min-lb-pruned", type=float, default=None,
+                    metavar="F",
+                    help="fail unless every table3/ecg case pruned at "
+                         "least this fraction of hash candidates before "
+                         "full DTW (cascade + LB_Improved effectiveness "
+                         "gate; implies --json)")
     return ap.parse_args(argv)
 
 
@@ -74,7 +81,7 @@ def main(argv=None) -> int:
                   "imported at a different scale", file=sys.stderr)
             return 2
         os.environ["BENCH_SCALE"] = args.scale
-    if args.baseline is not None:
+    if args.baseline is not None or args.min_lb_pruned is not None:
         args.json = True
 
     modules = MODULES
@@ -105,9 +112,12 @@ def main(argv=None) -> int:
         print(f"# {mod_name} done in {time.time()-t:.1f}s", flush=True)
     print(f"# all benchmarks done in {time.time()-t0:.1f}s")
 
+    rc = 0
     if args.baseline is not None:
-        return _gate(args, [m for m, _ in modules])
-    return 0
+        rc = _gate(args, [m for m, _ in modules])
+    if args.min_lb_pruned is not None:
+        rc = max(rc, _lb_gate(args))
+    return rc
 
 
 def _gate(args, module_names) -> int:
@@ -134,6 +144,40 @@ def _gate(args, module_names) -> int:
               f"entr(ies) vs {args.baseline})")
         return 1
     print(f"# baseline: OK (no regressions vs {args.baseline})")
+    return 0
+
+
+def _lb_gate(args) -> int:
+    """Pruning-effectiveness floor over the table3 ECG cases: the LB
+    cascade + LB_Improved must spare at least ``--min-lb-pruned`` of the
+    hash candidates from full DTW.  A drop below the floor means a bound
+    or the seed threshold silently weakened (results would still be
+    correct — the bounds are sound — but the latency claim would not
+    hold)."""
+    from repro.bench import load_report
+    path = os.path.join(args.out, "BENCH_table3_query_time.json")
+    if not os.path.exists(path):
+        print("# lb-gate: SKIP (table3_query_time not in this run)")
+        return 0
+    checked, bad = 0, []
+    for r in load_report(path).results:
+        if not r.name.startswith("table3/ecg/"):
+            continue
+        checked += 1
+        frac = r.lb_pruned_frac
+        if frac is None or frac < args.min_lb_pruned:
+            bad.append((r.name, frac))
+        else:
+            print(f"# lb-gate: {r.name} lb_pruned_frac={frac:.3f} "
+                  f">= {args.min_lb_pruned}")
+    for name, frac in bad:
+        print(f"# lb-gate: FAIL {name} lb_pruned_frac={frac} < "
+              f"{args.min_lb_pruned}")
+    if bad or not checked:
+        if not checked:
+            print("# lb-gate: FAIL (no table3/ecg entries in report)")
+        return 1
+    print("# lb-gate: OK")
     return 0
 
 

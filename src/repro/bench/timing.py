@@ -1,9 +1,10 @@
 """Stage timers for the search hot path (DESIGN.md §8).
 
-The pipeline's four stages — ``encode`` (query signature build),
+The pipeline's five stages — ``encode`` (query signature build),
 ``probe`` (collision count + top-C), ``lb`` (seed DTW for the pruning
-threshold + the staged LB cascade), ``dtw`` (banded DTW over the
-survivors) — are timed with a :class:`StageTimer` threaded through
+threshold + the staged LB cascade), ``lb_improved`` (Lemire's two-pass
+bound over cascade survivors), ``dtw`` (banded, early-abandoning DTW
+over the survivors) — are timed with a :class:`StageTimer` threaded through
 ``hash_probe``/``rerank`` and their batched twins.  Accumulated seconds
 land in ``SearchStats.stage_seconds`` so every entry point
 (``ssh_search``, ``ssh_search_batch``, the ``ServingEngine``) surfaces
@@ -30,7 +31,7 @@ import jax
 #: carries exactly these keys when telemetry is on; the distributed
 #: fan-out — whose shard_map program fuses all four — reports the
 #: extra ``"fused"`` key instead (see ``serving.engine``).
-STAGES = ("encode", "probe", "lb", "dtw")
+STAGES = ("encode", "probe", "lb", "lb_improved", "dtw")
 
 
 def _sync(value):

@@ -121,6 +121,108 @@ def dtw_batch(query: jnp.ndarray, candidates: jnp.ndarray,
     return jax.vmap(lambda c: dtw(query, c, band=band))(candidates)
 
 
+# ---------------------------------------------------------------------------
+# banded window DP (equal lengths) — the CPU analogue of the wavefront
+# kernel's O(m·band) cell count, plus threshold-based early abandoning
+# ---------------------------------------------------------------------------
+
+def _banded_column(x, y_j, j, W_prev, r, m):
+    """One column of the window DP: W[u] = D[j - r + u, j], u in [0, 2r+1).
+
+    Same (min,+) cumsum/cummin identity as ``_column_update``, applied to
+    the (2r+1)-wide band window instead of the full column — O(m·band)
+    total cells, matching the Pallas wavefront's work bound.  Window
+    algebra: D[i, j-1] sits at slot u+1 of the previous column's window,
+    D[i-1, j-1] at slot u.  Out-of-matrix slots carry BIG; their (index-
+    clamped) costs inside the cumsum cancel exactly because the valid
+    slots of a window are contiguous (C_i - C_{k-1} only ever spans valid
+    slots for a valid (k, i) pair).
+    """
+    w = 2 * r + 1
+    u = jnp.arange(w)
+    i = j - r + u                               # row index of window slot u
+    cost = (x[jnp.clip(i, 0, m - 1)] - y_j) ** 2
+    up_shift = jnp.concatenate([W_prev[1:],
+                                jnp.full((1,), BIG, W_prev.dtype)])
+    e = jnp.minimum(W_prev, up_shift)           # min(D[i-1,j-1], D[i,j-1])
+    # j == 0: no left column at all; the path starts at (0, 0) = slot r
+    e0 = jnp.where(u == r, 0.0, BIG)
+    e = jnp.where(j == 0, e0, e)
+    csum = jnp.cumsum(cost)
+    shifted = jnp.concatenate([jnp.zeros((1,), csum.dtype), csum[:-1]])
+    run = jax.lax.associative_scan(jnp.minimum, e - shifted)
+    col = jnp.minimum(csum + run, BIG)
+    return jnp.where((i >= 0) & (i < m), col, BIG)
+
+
+@functools.partial(jax.jit, static_argnames=("band",))
+def dtw_banded(x: jnp.ndarray, y: jnp.ndarray, band: int,
+               threshold: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Equal-length banded squared-DTW via a (2r+1)-wide window DP.
+
+    Value-equivalent to ``dtw(x, y, band=band)`` (up to float summation
+    order) at O(m·band) instead of O(m²) work.  ``threshold`` enables
+    early abandoning: the column minimum is a sound lower bound on the
+    final cost (every monotone warping path visits every column), so the
+    scan stops once it exceeds ``threshold`` and the contract becomes
+    *exact value if DTW <= threshold, else BIG* — same as the
+    threshold-aware Pallas wavefront.  ``None`` runs all columns and
+    returns the exact value.
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    m = x.shape[0]
+    assert y.shape[0] == m, "dtw_banded requires equal lengths"
+    r = min(band, m - 1)
+    thr = jnp.float32(BIG) if threshold is None \
+        else jnp.asarray(threshold, jnp.float32)
+
+    def cond(carry):
+        j, W = carry
+        return (j < m) & ((j == 0) | (jnp.min(W) <= thr))
+
+    def body(carry):
+        j, W = carry
+        return j + 1, _banded_column(x, y[j], j, W, r, m)
+
+    _, W = jax.lax.while_loop(
+        cond, body, (0, jnp.full((2 * r + 1,), BIG, jnp.float32)))
+    out = W[r]                                  # D[m-1, m-1]
+    if threshold is None:
+        return out
+    return jnp.where(out > thr, BIG, out)
+
+
+@functools.partial(jax.jit, static_argnames=("band",))
+def dtw_banded_batch(query: jnp.ndarray, candidates: jnp.ndarray, band: int,
+                     threshold: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Banded window-DP DTW of one query vs a batch: (C, m) -> (C,).
+
+    ``threshold`` broadcasts over lanes (scalar or (C,)).  Under vmap the
+    while_loop runs until every lane is done or abandoned, so a block of
+    hopeless candidates exits after a prefix of the columns.
+    """
+    if threshold is None:
+        return jax.vmap(lambda c: dtw_banded(query, c, band))(candidates)
+    thr = jnp.broadcast_to(jnp.asarray(threshold, jnp.float32),
+                           candidates.shape[:1])
+    return jax.vmap(lambda c, t: dtw_banded(query, c, band, t)
+                    )(candidates, thr)
+
+
+@functools.partial(jax.jit, static_argnames=("band",))
+def dtw_banded_pairs(queries: jnp.ndarray, candidates: jnp.ndarray, band: int,
+                     threshold: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Row-aligned banded window-DP DTW: (P, m) x (P, m) -> (P,)."""
+    if threshold is None:
+        return jax.vmap(lambda q, c: dtw_banded(q, c, band)
+                        )(queries, candidates)
+    thr = jnp.broadcast_to(jnp.asarray(threshold, jnp.float32),
+                           candidates.shape[:1])
+    return jax.vmap(lambda q, c, t: dtw_banded(q, c, band, t)
+                    )(queries, candidates, thr)
+
+
 @functools.partial(jax.jit, static_argnames=("band",))
 def dtw_pairwise(xs: jnp.ndarray, ys: jnp.ndarray,
                  band: Optional[int] = None) -> jnp.ndarray:

@@ -3,7 +3,10 @@
 Paper §3: the UCR suite cascades LB_Kim (O(1)), LB_Keogh (O(m)) and
 LB_Keogh2 (O(m)) before paying O(m^2) for exact DTW.  The paper's Table 1
 shows these bounds collapse for long series — we reproduce that in
-``benchmarks/table1_lb_pruning.py``.
+``benchmarks/table1_lb_pruning.py``.  On top of the UCR trio sits
+Lemire's two-pass LB_Improved (arXiv 0811.3301): strictly tighter than
+LB_Keogh at O(m·r) per candidate, applied to cascade *survivors* in
+``repro.core.rerank`` (DESIGN.md §3).
 
 TPU adaptation: the UCR suite applies bounds *sequentially per candidate*
 with early exit.  Scalar early-exit control flow is hostile to SPMD and to
@@ -85,6 +88,48 @@ def lb_keogh2(query: jnp.ndarray, candidates: jnp.ndarray,
 
 
 @functools.partial(jax.jit, static_argnames=("radius",))
+def lb_improved(query: jnp.ndarray, candidates: jnp.ndarray, radius: int,
+                upper: jnp.ndarray = None,
+                lower: jnp.ndarray = None) -> jnp.ndarray:
+    """Lemire's two-pass LB_Improved (arXiv 0811.3301), squared costs.
+
+    Pass 1 is LB_Keogh of the candidate against the query envelope.
+    Pass 2 projects the candidate onto that envelope — H = clip(c, L, U),
+    Lemire's H(c, q) — and adds LB_Keogh of the *query* against the
+    envelope of H.  Soundness for squared costs: for any aligned pair
+    (c_i, q_j), (c_i - q_j)² >= (c_i - h_i)² + (h_i - q_j)² (h_i lies
+    between c_i and q_j whenever the pass-1 term is nonzero, so the cross
+    term has the right sign), and a warping path covers every i and every
+    j — the two passes charge disjoint parts of every cell cost, hence
+    LB_Keogh <= LB_Improved <= DTW.
+
+    The reverse pass needs a per-candidate envelope of H, so unlike
+    LB_Keogh2 it cannot be precomputed at build time — O(m·r) per
+    candidate, which is why it runs *after* the cheap cascade, on
+    survivors only.  ``upper``/``lower`` take a precomputed query
+    envelope (shared with the pass the caller already ran).
+
+    query (m,), candidates (..., m) -> (...,).
+    """
+    if upper is None:
+        upper, lower = envelope(query, radius)
+    pass1 = lb_keogh(upper, lower, candidates)
+    h = jnp.clip(candidates, lower, upper)
+    h_upper, h_lower = envelope(h, radius)
+    return pass1 + lb_keogh_env(query, h_upper, h_lower)
+
+
+@functools.partial(jax.jit, static_argnames=("radius",))
+def lb_improved_pairs(q_rows: jnp.ndarray, c_rows: jnp.ndarray,
+                      radius: int) -> jnp.ndarray:
+    """Row-aligned LB_Improved: (P, m) x (P, m) -> (P,) — the flattened
+    survivor-pair shape of the batched re-rank (each pair may have a
+    different query, so the query envelope is per-row)."""
+    return jax.vmap(lambda q, c: lb_improved(q, c, radius)
+                    )(q_rows, c_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("radius",))
 def cascade(query: jnp.ndarray, candidates: jnp.ndarray, radius: int,
             best_so_far: jnp.ndarray) -> jnp.ndarray:
     """Vectorised UCR-suite cascade. Returns the survivor mask.
@@ -131,11 +176,14 @@ def cascade_stats(query: jnp.ndarray, candidates: jnp.ndarray, radius: int,
     lb1 = lb_kim(query, candidates)
     lb2 = lb_keogh(u, l, candidates)
     lb3 = lb_keogh2(query, candidates, radius)
+    lb4 = lb_improved(query, candidates, radius, u, l)
     n = candidates.shape[0]
     frac = lambda m: jnp.sum(m) / n  # noqa: E731
     pruned_kim = frac(lb1 >= best_so_far)
     pruned_keogh = frac(lb2 >= best_so_far)
     pruned_keogh2 = frac(lb3 >= best_so_far)
-    combined = frac(jnp.maximum(jnp.maximum(lb1, lb2), lb3) >= best_so_far)
+    pruned_improved = frac(lb4 >= best_so_far)
+    all_lb = jnp.maximum(jnp.maximum(lb1, lb2), jnp.maximum(lb3, lb4))
+    combined = frac(all_lb >= best_so_far)
     return dict(kim=pruned_kim, keogh=pruned_keogh, keogh2=pruned_keogh2,
-                combined=combined)
+                improved=pruned_improved, combined=combined)

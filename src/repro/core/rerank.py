@@ -55,24 +55,30 @@ class SearchStats:
     """Re-rank pruning counters (paper Tables 1/4 instrumentation).
 
     The stage counters attribute each pruned candidate to the *first*
-    bound that fired (cascade order: Kim → Keogh → Keogh2), with the
-    seeded candidates — which are exempt from pruning — never counted,
-    so ``n_in == pruned_kim + pruned_keogh + pruned_keogh2 + n_dtw``.
+    bound that fired (cascade order: Kim → Keogh → Keogh2 → Improved),
+    with the seeded candidates — which are exempt from pruning — never
+    counted, so ``n_in == pruned_kim + pruned_keogh + pruned_keogh2 +
+    pruned_improved + n_dtw``.  ``dtw_abandoned`` counts the survivors
+    the threshold-aware DTW stage then abandoned mid-kernel (early-
+    abandoning PrunedDTW) — a subset of ``n_dtw``, since those lanes
+    still entered the DTW stage but stopped before the final diagonal.
 
     ``stage_seconds`` holds the per-stage wall clock of the whole query
-    (``repro.bench.timing.STAGES``: encode → probe → lb → dtw, device-
-    synchronized at each boundary; the ``lb`` stage includes the seed
-    DTW that buys the pruning threshold).  ``None`` when telemetry was
-    off (``SearchConfig(stage_timings=False)``); the distributed
-    fan-out reports its unsplittable shard_map program under the single
-    ``"fused"`` key instead.
+    (``repro.bench.timing.STAGES``: encode → probe → lb → lb_improved →
+    dtw, device-synchronized at each boundary; the ``lb`` stage includes
+    the seed DTW that buys the pruning threshold).  ``None`` when
+    telemetry was off (``SearchConfig(stage_timings=False)``); the
+    distributed fan-out reports its unsplittable shard_map program under
+    the single ``"fused"`` key instead.
     """
     n_in: int = 0            # candidates entering the re-rank stage
     pruned_kim: int = 0      # first pruned by LB_Kim
     pruned_keogh: int = 0    # survived Kim, pruned by LB_Keogh
     pruned_keogh2: int = 0   # survived both, pruned by LB_Keogh2
+    pruned_improved: int = 0  # survived the trio, pruned by LB_Improved
     forced_kept: int = 0     # seeds kept despite a bound firing
-    n_dtw: int = 0           # survivors that paid full DTW
+    n_dtw: int = 0           # survivors that entered the DTW stage
+    dtw_abandoned: int = 0   # of those, abandoned over the threshold
     backend: str = "jnp"     # resolved DTW backend ("pallas" | "jnp")
     stage_seconds: Optional[Dict[str, float]] = None
     # resident bytes of the index that served this query (artifacts +
@@ -82,11 +88,17 @@ class SearchStats:
 
     @property
     def lb_pruned(self) -> int:
-        return self.pruned_kim + self.pruned_keogh + self.pruned_keogh2
+        return (self.pruned_kim + self.pruned_keogh + self.pruned_keogh2
+                + self.pruned_improved)
 
     @property
     def lb_pruned_frac(self) -> float:
         return self.lb_pruned / self.n_in if self.n_in else 0.0
+
+    @property
+    def dtw_abandoned_frac(self) -> float:
+        """Fraction of DTW-stage lanes abandoned over the threshold."""
+        return self.dtw_abandoned / self.n_dtw if self.n_dtw else 0.0
 
     @property
     def stage_us(self) -> Optional[Dict[str, float]]:
@@ -101,35 +113,51 @@ class SearchStats:
 # ---------------------------------------------------------------------------
 
 def dtw_candidates(query: jnp.ndarray, candidates: jnp.ndarray,
-                   band: Optional[int], backend: str = "auto"
-                   ) -> jnp.ndarray:
-    """One query vs a candidate block, (m,) x (C, m) -> (C,)."""
+                   band: Optional[int], backend: str = "auto",
+                   threshold=None) -> jnp.ndarray:
+    """One query vs a candidate block, (m,) x (C, m) -> (C,).
+
+    ``threshold`` (scalar) enables the early-abandon contract: lanes
+    whose exact cost exceeds it return BIG instead (see ``kernels.ops``).
+    """
     return ops.dtw_rerank(query, candidates, band,
-                          use_pallas=ops.resolve_backend(backend))
+                          use_pallas=ops.resolve_backend(backend),
+                          threshold=threshold)
 
 
 def dtw_pairs_chunked(q_rows: jnp.ndarray, c_rows: jnp.ndarray,
-                      band: Optional[int], backend: str = "auto"
-                      ) -> np.ndarray:
+                      band: Optional[int], backend: str = "auto",
+                      threshold=None) -> np.ndarray:
     """Row-aligned pair DTW in fixed-shape chunks: (P, m) x (P, m) -> (P,).
 
     Full PAIR_CHUNK blocks first, then the remainder at PAIR_CHUNK_SMALL
     granularity — two compiled programs serve every batch size and
     survivor count, the working set per dispatch stays cache-sized, and
     padding waste is bounded by PAIR_CHUNK_SMALL - 1 evaluations.
+
+    ``threshold`` (scalar or (P,)) applies the per-lane early-abandon
+    contract; padding lanes repeat row 0's threshold so they abandon with
+    it instead of holding a chunk alive.
     """
     use_pallas = ops.resolve_backend(backend)
     p = int(q_rows.shape[0])
     pad = (-p) % PAIR_CHUNK_SMALL
+    thr = None
+    if threshold is not None:
+        thr = jnp.broadcast_to(
+            jnp.asarray(threshold, jnp.float32).reshape(-1), (p,))
     if pad:
         q_rows = jnp.concatenate([q_rows, q_rows[:1].repeat(pad, 0)], 0)
         c_rows = jnp.concatenate([c_rows, c_rows[:1].repeat(pad, 0)], 0)
+        if thr is not None:
+            thr = jnp.concatenate([thr, thr[:1].repeat(pad, 0)], 0)
     out, i, total = [], 0, p + pad
     for chunk in (PAIR_CHUNK, PAIR_CHUNK_SMALL):
         while total - i >= chunk:
             out.append(np.asarray(ops.dtw_rerank_pairs(
                 q_rows[i:i + chunk], c_rows[i:i + chunk], band,
-                use_pallas=use_pallas)))
+                use_pallas=use_pallas,
+                threshold=None if thr is None else thr[i:i + chunk])))
             i += chunk
     return np.concatenate(out)[:p]
 
@@ -184,27 +212,32 @@ def _gathered_env(index: SSHIndex, ids, band: int):
 def rerank(query: jnp.ndarray, cand_ids: jnp.ndarray, index: SSHIndex,
            topk: int, band: Optional[int], *, use_lb_cascade: bool = True,
            backend: str = "auto", seed_size: Optional[int] = None,
-           timer: StageTimer = DISABLED):
+           early_abandon: bool = True, timer: StageTimer = DISABLED):
     """Candidate ids -> (global ids, dists, stats), best first.
 
-    Stage 2+3 of Alg. 2 for one query: seed DTW → LB cascade → survivor
-    DTW, every DTW through the ``backend`` knob.  ``seed_size`` widens
-    the seeded set beyond ``topk`` (``None`` — the default — seeds
-    exactly ``topk``): the threshold becomes the topk-th best of a
-    larger sample, i.e. tighter, buying more cascade pruning for more
-    up-front DTW.  Top-k results are unchanged either way — the
-    threshold is always a valid upper bound on the final k-th distance,
-    so a pruned candidate can never belong to the answer set.
+    Stage 2+3 of Alg. 2 for one query: seed DTW → LB cascade →
+    LB_Improved over the survivors → threshold-aware survivor DTW, every
+    DTW through the ``backend`` knob.  ``seed_size`` widens the seeded
+    set beyond ``topk`` (``None`` — the default — seeds exactly
+    ``topk``): the threshold becomes the topk-th best of a larger
+    sample, i.e. tighter, buying more pruning for more up-front DTW.
+    ``early_abandon`` threads that same threshold into the final DTW as
+    well (lanes provably over it stop early and report BIG).  Top-k
+    results are unchanged by any of these knobs — the threshold is
+    always a valid upper bound on the final k-th distance, so a pruned
+    or abandoned candidate can never belong to the answer set.
 
     An enabled ``timer`` (shared with ``hash_probe`` so one dict carries
-    all four stages) records seed DTW + cascade as ``lb`` and the
-    survivor DTW + top-k as ``dtw``; the accumulated timings are
-    published on ``stats.stage_seconds``.
+    all five stages) records seed DTW + cascade as ``lb``, the survivor
+    LB_Improved pass as ``lb_improved``, and the survivor DTW + top-k as
+    ``dtw``; the accumulated timings are published on
+    ``stats.stage_seconds``.
     """
     backend_used = ops.backend_name(ops.resolve_backend(backend))
     cands = index.series[cand_ids]
     n_hash = int(cand_ids.shape[0])
     stats = SearchStats(n_in=n_hash, backend=backend_used)
+    thr = None
 
     if use_lb_cascade and band is not None and n_hash > topk:
         with timer.stage("lb") as sync:
@@ -227,14 +260,34 @@ def rerank(query: jnp.ndarray, cand_ids: jnp.ndarray, index: SSHIndex,
             keep_j = jnp.asarray(keep)
             cand_ids = sync(cand_ids[keep_j])
             cands = sync(cands[keep_j])
+        with timer.stage("lb_improved") as sync:
+            # Lemire's two-pass bound over cascade survivors only: it
+            # needs the candidate-side envelope, which cannot be cached
+            # at build time (it depends on the query via the clipped
+            # series H), so the O(m·r) pass is paid after the cheap
+            # bounds have thinned the block.
+            lbi = np.asarray(sync(lb.lb_improved(query, cands, band)))
+            forced_surv = forced[keep]
+            pass123_surv = (k1 & k2 & k3)[keep]
+            keep2 = (lbi < np.float32(best)) | forced_surv
+            stats.pruned_improved = int(np.sum(~keep2))
+            stats.forced_kept += int(np.sum(
+                forced_surv & pass123_surv & (lbi >= np.float32(best))))
+            keep2_j = jnp.asarray(keep2)
+            cand_ids = sync(cand_ids[keep2_j])
+            cands = sync(cands[keep2_j])
+        if early_abandon:
+            thr = best
     stats.n_dtw = int(cands.shape[0])
 
     with timer.stage("dtw") as sync:
-        d = dtw_candidates(query, cands, band, backend)
+        d = dtw_candidates(query, cands, band, backend, threshold=thr)
         k = min(topk, int(cands.shape[0]))
         vals, idx = jax.lax.top_k(-d, k)
         ids = np.asarray(cand_ids)[np.asarray(idx)]
         dists = np.asarray(-sync(vals))
+    if thr is not None:
+        stats.dtw_abandoned = int(np.sum(np.asarray(d) >= BIG * 0.5))
     if timer.enabled:
         stats.stage_seconds = dict(timer.timings)
     return ids, dists, stats
@@ -248,6 +301,7 @@ def rerank_batch(queries: jnp.ndarray, ids: np.ndarray, valid: np.ndarray,
                  index: SSHIndex, topk: int, band: Optional[int], *,
                  use_lb_cascade: bool = True, backend: str = "auto",
                  seed_size: Optional[int] = None,
+                 early_abandon: bool = True,
                  timer: StageTimer = DISABLED):
     """Batched stage 2+3 over per-query candidate blocks.
 
@@ -256,12 +310,16 @@ def rerank_batch(queries: jnp.ndarray, ids: np.ndarray, valid: np.ndarray,
     filler rows (fewer survivors than topk) carry id -1 / dist BIG.
 
     Per-query decisions identical to ``rerank``: the same seed best-so-far
-    feeds the same cascade, survivors are re-ranked with the same DTW
-    values (pair DTW is lane-independent, hence bit-equal to the
-    single-query block DTW), and the final ``lax.top_k`` applies the same
-    tie-breaking.  The survivor (query, candidate) pairs are flattened
-    through the deduped union candidate table and re-ranked in fixed-size
-    chunks — total DTW work is exactly the batch's survivor count.
+    feeds the same cascade and the same survivor LB_Improved pass,
+    survivors are re-ranked with the same DTW values (pair DTW is
+    lane-independent, hence bit-equal to the single-query block DTW), and
+    the final ``lax.top_k`` applies the same tie-breaking.  The survivor
+    (query, candidate) pairs are flattened through the deduped union
+    candidate table and re-ranked in fixed-size chunks — total DTW work
+    is exactly the batch's survivor count.  With ``early_abandon`` each
+    pair lane carries its row's seed threshold into the DTW; rows whose
+    cascade never applied (``n_hash <= topk`` — all pairs forced) get
+    +inf so their fully-forced block is never masked.
     """
     backend_used = ops.backend_name(ops.resolve_backend(backend))
     b, c = ids.shape
@@ -270,8 +328,10 @@ def rerank_batch(queries: jnp.ndarray, ids: np.ndarray, valid: np.ndarray,
     k_out = min(topk, c)
     # seed clamped to >= topk for a sound threshold (see rerank())
     seed_k = min(max(seed_size or 0, topk), c)
+    cascade_on = use_lb_cascade and band is not None
+    thr_rows = None                                       # (B,) or None
 
-    if use_lb_cascade and band is not None:
+    if cascade_on:
         with timer.stage("lb"):
             seed_series = index.series[jnp.asarray(ids[:, :seed_k])]
             seed_d = np.asarray(_seed_dtw_backend(queries, seed_series,
@@ -311,21 +371,55 @@ def rerank_batch(queries: jnp.ndarray, ids: np.ndarray, valid: np.ndarray,
             stats.forced_kept = int(np.sum(valid & forced
                                            & ~(k1 & k2 & k3)))
             ok = valid & (forced | (k1 & k2 & k3))
+            # per-row prune/abandon threshold; rows where the sequential
+            # path skips the cascade (n_hash <= topk) are fully forced
+            # and their seed kth may not upper-bound anything — +inf
+            # exempts them from both LB_Improved and early abandoning
+            thr_rows = np.where(np.asarray(n_hash) > topk,
+                                np.asarray(best, np.float32),
+                                np.float32(np.inf)).astype(np.float32)
     else:
         ok = valid
+
+    # flattened survivor pairs, through the deduped union table (built
+    # here so the LB_Improved pass and the DTW reuse one gather)
+    rows_idx, cols_idx = np.nonzero(ok)                   # (P,) row-major
+    pair_ids = ids[rows_idx, cols_idx]
+    union = np.unique(pair_ids)                           # (U,) sorted
+    union_series = index.series[jnp.asarray(union)]       # (U, m)
+    pos = np.searchsorted(union, pair_ids)
+    c_rows = union_series[jnp.asarray(pos)]               # (P, m)
+    q_rows = queries[jnp.asarray(rows_idx)]               # (P, m)
+
+    if cascade_on:
+        with timer.stage("lb_improved") as sync:
+            # survivor-only two-pass bound, same values as sequential
+            # (per-row vmap of the identical elementwise program)
+            lbi = np.asarray(sync(lb.lb_improved_pairs(q_rows, c_rows,
+                                                       band)))
+            forced_pair = forced[rows_idx, cols_idx]
+            pass123_pair = (k1 & k2 & k3)[rows_idx, cols_idx]
+            thr_pair = thr_rows[rows_idx]
+            keep_pair = (lbi < thr_pair) | forced_pair
+            stats.pruned_improved = int(np.sum(~keep_pair))
+            stats.forced_kept += int(np.sum(
+                forced_pair & pass123_pair & ~(lbi < thr_pair)))
+            ok[rows_idx[~keep_pair], cols_idx[~keep_pair]] = False
+            rows_idx = rows_idx[keep_pair]
+            cols_idx = cols_idx[keep_pair]
+            keep_j = jnp.asarray(keep_pair)
+            q_rows = sync(q_rows[keep_j])
+            c_rows = sync(c_rows[keep_j])
     n_final = ok.sum(axis=1)                              # (B,)
 
     with timer.stage("dtw") as sync:
-        # flattened survivor pairs, through the deduped union table
-        rows_idx, cols_idx = np.nonzero(ok)               # (P,) row-major
-        pair_ids = ids[rows_idx, cols_idx]
-        union = np.unique(pair_ids)                       # (U,) sorted
-        union_series = index.series[jnp.asarray(union)]   # (U, m)
-        pos = np.searchsorted(union, pair_ids)
-        c_rows = union_series[jnp.asarray(pos)]           # (P, m)
-        q_rows = queries[jnp.asarray(rows_idx)]           # (P, m)
-        pair_d = dtw_pairs_chunked(q_rows, c_rows, band, backend)   # (P,)
+        thr_pairs = (jnp.asarray(thr_rows[rows_idx])
+                     if (cascade_on and early_abandon) else None)
+        pair_d = dtw_pairs_chunked(q_rows, c_rows, band, backend,
+                                   threshold=thr_pairs)   # (P,)
         stats.n_dtw = int(pair_d.shape[0])
+        if thr_pairs is not None:
+            stats.dtw_abandoned = int(np.sum(pair_d >= BIG * 0.5))
 
         # per-query top-k (lax.top_k for sequential-identical tie-breaks)
         cand_d = np.full((b, c), BIG, np.float32)         # candidate order

@@ -22,6 +22,7 @@ from repro.core.index import SSHIndex
 from repro.core.rerank import SearchStats
 from repro.db.config import SearchConfig, config_from_legacy_kwargs
 from repro.kernels import ops
+from repro.kernels import ref as kref
 
 
 @dataclasses.dataclass
@@ -144,6 +145,7 @@ def ssh_search(query: jnp.ndarray, index: SSHIndex,
                                   use_lb_cascade=config.use_lb_cascade,
                                   backend=config.backend,
                                   seed_size=config.seed_size,
+                                  early_abandon=config.early_abandon,
                                   timer=timer)
     n_final = stats.n_dtw
     stats.index_bytes = index.nbytes()
@@ -195,8 +197,14 @@ def ucr_search(query: jnp.ndarray, series: jnp.ndarray, topk: int = 10,
 
 def brute_force_topk(query: jnp.ndarray, series: jnp.ndarray, topk: int,
                      band: Optional[int] = None):
-    """Gold standard (paper §5.3): exact DTW over the whole database."""
-    d = dtw_batch(query, series, band=band)
+    """Gold standard (paper §5.3): exact DTW over the whole database.
+
+    Routed through the shared jnp reference (``kernels.ref``) so the
+    gold distances use the same arithmetic — including the banded
+    window-DP's summation order — as the production re-rank, keeping
+    exactness tests ulp-comparable.
+    """
+    d = kref.dtw_wavefront_ref(query, series, band=band)
     vals, idx = jax.lax.top_k(-d, topk)
     return np.asarray(idx), np.asarray(-vals)
 

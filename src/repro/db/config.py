@@ -59,6 +59,14 @@ class SearchConfig:
       larger seed buys a tighter threshold for more cascade pruning at
       the cost of more up-front DTW.  Top-k results are unaffected
       either way (the threshold stays a valid upper bound).
+    * ``early_abandon`` — thread the seeded threshold into the DTW stage
+      itself (early-abandoning PrunedDTW, arXiv:2010.05371): survivor
+      lanes whose running anti-diagonal minimum exceeds the threshold
+      stop early and report BIG.  Returned top-k is bit-identical with
+      the knob on or off (an abandoned lane is provably worse than the
+      k-th seeded distance); off disables the in-kernel threshold for
+      A/B timing.  Only active together with ``use_lb_cascade`` and a
+      ``band`` (those supply the threshold).
 
     Execution:
 
@@ -92,6 +100,7 @@ class SearchConfig:
     multiprobe_offsets: int = 1
     use_host_buckets: bool = False
     seed_size: Optional[int] = None
+    early_abandon: bool = True
     backend: str = "auto"
     searcher: str = "batched"
     max_batch: int = 8

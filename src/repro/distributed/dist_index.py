@@ -74,6 +74,7 @@ def _make_query_core(encode, mesh: Mesh, config: SearchConfig):
                          "(config.band is None)")
     top_c, band, topk = config.top_c, config.band, config.topk
     backend = config.backend
+    abandon = config.use_lb_cascade and config.early_abandon
     axes = tuple(mesh.axis_names)
     n_shards = int(mesh.devices.size)
     local_c = max(topk, top_c // n_shards)
@@ -83,8 +84,20 @@ def _make_query_core(encode, mesh: Mesh, config: SearchConfig):
         sig = encode(q, state)                                # (K,)
         coll = jnp.sum((sigs == sig[None, :]).astype(jnp.int32), axis=-1)
         _, cand = jax.lax.top_k(coll, local_c)                # local ids
-        d = ops.dtw_rerank(q, jnp.take(series, cand, axis=0), band,
-                           use_pallas=ops.resolve_backend(backend))
+        cand_series = jnp.take(series, cand, axis=0)
+        thr = None
+        if abandon:
+            # shard-local seed threshold: topk-th best DTW over the
+            # first topk hash hits.  Any lane in the shard's true local
+            # top-k is <= this bound, and the global k-th is <= every
+            # shard's local k-th, so abandoned lanes (exact > thr) can
+            # never reach the gathered global top-k — results identical.
+            seed = ops.dtw_rerank(q, cand_series[:topk], band,
+                                  use_pallas=ops.resolve_backend(backend))
+            thr = jnp.sort(seed)[topk - 1]
+        d = ops.dtw_rerank(q, cand_series, band,
+                           use_pallas=ops.resolve_backend(backend),
+                           threshold=thr)
 
         shard_id = jax.lax.axis_index(axes)
         n_local = series.shape[0]

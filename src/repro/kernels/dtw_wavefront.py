@@ -10,8 +10,10 @@ assign one thread per DP cell along the wavefront; the TPU adaptation maps
 
 All cells of an anti-diagonal depend only on the previous two diagonals,
 so every loop step is one dependence-free (B_w, 128) vector op — no
-scalar DP, no data-dependent control flow (early-abandoning is replaced
-by the band bound, see DESIGN.md §3).
+scalar DP.  Without a threshold the loop is a static fori over the band
+bound; with one it becomes the early-abandoning PrunedDTW while_loop
+(``_kernel_thr``): per-lane data dependence stays banished, the only
+data-dependent control is the whole-block exit test (DESIGN.md §3).
 
 Index algebra (r = band radius, u ∈ [0, 2r+2) the band offset):
   diagonal d holds cells (i, j = d - i); we store them at
@@ -41,7 +43,13 @@ LANES = 128
 BIG = 1e30  # python float: pallas kernels must not capture device constants
 
 
-def _kernel(q_ref, x_ref, o_ref, *, m: int, r: int, b_w: int, pad: int):
+def _make_step(q_ref, x_ref, *, m: int, r: int, b_w: int, pad: int):
+    """The shared anti-diagonal update: (d, prev1, prev2) -> diagonal d.
+
+    Used verbatim by both kernels — the unconditional fori_loop program
+    and the threshold-aware while_loop program — so their per-diagonal
+    arithmetic (and hence every completed lane's value) is identical.
+    """
     u = jax.lax.broadcasted_iota(jnp.int32, (b_w, LANES), 0)
 
     def shift_down(a):  # element u <- a[u-1]
@@ -52,8 +60,7 @@ def _kernel(q_ref, x_ref, o_ref, *, m: int, r: int, b_w: int, pad: int):
         return jnp.concatenate(
             [a[1:, :], jnp.full((1, LANES), BIG, a.dtype)], axis=0)
 
-    def body(d, carry):
-        prev1, prev2 = carry
+    def step(d, prev1, prev2):
         offset = d // 2 - r
         i = offset + u                      # query index of cell u
         j = d - i                           # candidate index of cell u
@@ -71,8 +78,17 @@ def _kernel(q_ref, x_ref, o_ref, *, m: int, r: int, b_w: int, pad: int):
         best = jnp.where((i == 0) & (j == 0), 0.0, best)
         valid = (i >= 0) & (i < m) & (j >= 0) & (j < m) & \
                 (jnp.abs(i - j) <= r)
-        d_new = jnp.where(valid, jnp.minimum(cost + best, BIG), BIG)
-        return (d_new, prev1)
+        return jnp.where(valid, jnp.minimum(cost + best, BIG), BIG)
+
+    return step
+
+
+def _kernel(q_ref, x_ref, o_ref, *, m: int, r: int, b_w: int, pad: int):
+    step = _make_step(q_ref, x_ref, m=m, r=r, b_w=b_w, pad=pad)
+
+    def body(d, carry):
+        prev1, prev2 = carry
+        return (step(d, prev1, prev2), prev1)
 
     init = (jnp.full((b_w, LANES), BIG, jnp.float32),
             jnp.full((b_w, LANES), BIG, jnp.float32))
@@ -80,12 +96,69 @@ def _kernel(q_ref, x_ref, o_ref, *, m: int, r: int, b_w: int, pad: int):
     o_ref[...] = final1[r, :][None, :]
 
 
+def _kernel_thr(q_ref, x_ref, t_ref, o_ref, *, m: int, r: int, b_w: int,
+                pad: int):
+    """Threshold-aware variant: early-abandoning PrunedDTW (arXiv
+    2010.05371) on the wavefront.
+
+    Per lane, the minimum over the last *two* anti-diagonals is a sound
+    lower bound on the final cost: cell costs are nonnegative and every
+    monotone warping path crosses at least one cell of any two adjacent
+    anti-diagonals (a diagonal move skips exactly one).  The while_loop
+    exits as soon as every lane's bound exceeds its threshold; the
+    output applies the shared contract *exact value if DTW <= threshold,
+    else BIG* (strict >, so a lane landing exactly on the threshold is
+    returned exactly — abandoning can then never drop a top-k member
+    whose distance equals the seeded k-th best).
+    """
+    step = _make_step(q_ref, x_ref, m=m, r=r, b_w=b_w, pad=pad)
+    thr = t_ref[...]                        # (1, LANES) per-lane threshold
+
+    def cond(carry):
+        d, prev1, prev2 = carry
+        bound = jnp.minimum(jnp.min(prev1, axis=0, keepdims=True),
+                            jnp.min(prev2, axis=0, keepdims=True))
+        # d < 1: the carries still hold the BIG init, not real diagonals
+        return (d < 2 * m - 1) & ((d < 1) | jnp.any(bound <= thr))
+
+    def body(carry):
+        d, prev1, prev2 = carry
+        return (d + 1, step(d, prev1, prev2), prev1)
+
+    init = (0, jnp.full((b_w, LANES), BIG, jnp.float32),
+            jnp.full((b_w, LANES), BIG, jnp.float32))
+    _, final1, _ = jax.lax.while_loop(cond, body, init)
+    # on early exit final1[r] is a mid-DP cell of a dead lane: >= the
+    # lane's bound > thr, so the mask below sends it to BIG as required
+    out = final1[r, :][None, :]
+    o_ref[...] = jnp.where(out > thr, BIG, out)
+
+
+def _thr_lanes(threshold, n: int, pad_n: int) -> jnp.ndarray:
+    """Per-lane thresholds as a (1, n + pad_n) row.
+
+    Padding lanes get -1.0 — every DP bound is >= 0, so they are dead
+    from the first check and can never hold a whole block alive past its
+    real lanes' abandon point (with +inf padding a block would always
+    run all 2m-1 diagonals).
+    """
+    thr = jnp.broadcast_to(jnp.asarray(threshold, jnp.float32), (n,))
+    return jnp.pad(thr[None, :], ((0, 0), (0, pad_n)),
+                   constant_values=-1.0)
+
+
 @functools.partial(jax.jit, static_argnames=("band", "interpret"))
 def dtw_wavefront(query: jnp.ndarray, candidates: jnp.ndarray,
-                  band: int, interpret: bool = False) -> jnp.ndarray:
+                  band: int, interpret: bool = False,
+                  threshold=None) -> jnp.ndarray:
     """Banded squared-DTW: query (m,), candidates (C, m) -> (C,) float32.
 
     ``band`` is the Sakoe-Chiba radius (use m-1 for unconstrained).
+    ``threshold`` (scalar or (C,), broadcast per lane) switches to the
+    early-abandoning kernel: lanes return their exact cost when it is
+    <= threshold and BIG otherwise, and a 128-lane block stops looping as
+    soon as all its lanes are provably over threshold.  ``None`` runs
+    the original unconditional program (bit-identical to before).
     """
     c, m = candidates.shape
     assert query.shape[0] == m, "query/candidate lengths must match"
@@ -100,23 +173,34 @@ def dtw_wavefront(query: jnp.ndarray, candidates: jnp.ndarray,
     x_rev = jnp.pad(x_rev, ((pad, pad), (0, cp)))
     q_pad = jnp.pad(query.astype(jnp.float32)[:, None], ((pad, pad), (0, 0)))
 
-    out = pl.pallas_call(
-        functools.partial(_kernel, m=m, r=r, b_w=b_w, pad=pad),
-        out_shape=jax.ShapeDtypeStruct((1, c + cp), jnp.float32),
-        grid=((c + cp) // LANES,),
-        in_specs=[
-            pl.BlockSpec((m + 2 * pad, 1), lambda g: (0, 0)),
-            pl.BlockSpec((m + 2 * pad, LANES), lambda g: (0, g)),
-        ],
-        out_specs=pl.BlockSpec((1, LANES), lambda g: (0, g)),
-        interpret=interpret,
-    )(q_pad, x_rev)
+    q_spec = pl.BlockSpec((m + 2 * pad, 1), lambda g: (0, 0))
+    x_spec = pl.BlockSpec((m + 2 * pad, LANES), lambda g: (0, g))
+    o_spec = pl.BlockSpec((1, LANES), lambda g: (0, g))
+    if threshold is None:
+        out = pl.pallas_call(
+            functools.partial(_kernel, m=m, r=r, b_w=b_w, pad=pad),
+            out_shape=jax.ShapeDtypeStruct((1, c + cp), jnp.float32),
+            grid=((c + cp) // LANES,),
+            in_specs=[q_spec, x_spec],
+            out_specs=o_spec,
+            interpret=interpret,
+        )(q_pad, x_rev)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_kernel_thr, m=m, r=r, b_w=b_w, pad=pad),
+            out_shape=jax.ShapeDtypeStruct((1, c + cp), jnp.float32),
+            grid=((c + cp) // LANES,),
+            in_specs=[q_spec, x_spec, o_spec],
+            out_specs=o_spec,
+            interpret=interpret,
+        )(q_pad, x_rev, _thr_lanes(threshold, c, cp))
     return out[0, :c]
 
 
 @functools.partial(jax.jit, static_argnames=("band", "interpret"))
 def dtw_wavefront_pairs(queries: jnp.ndarray, candidates: jnp.ndarray,
-                        band: int, interpret: bool = False) -> jnp.ndarray:
+                        band: int, interpret: bool = False,
+                        threshold=None) -> jnp.ndarray:
     """Row-aligned banded squared-DTW: (P, m) x (P, m) -> (P,) float32.
 
     Pair ``p`` gets DTW(queries[p], candidates[p]) — the layout the
@@ -126,6 +210,8 @@ def dtw_wavefront_pairs(queries: jnp.ndarray, candidates: jnp.ndarray,
     broadcast, i.e. one query per lane alongside its candidate.  All
     per-lane arithmetic is independent, so pair values are bit-identical
     to ``dtw_wavefront`` with the same (query, candidate) in any lane.
+    ``threshold`` (scalar or (P,)) selects the early-abandoning kernel
+    with the same exact-or-BIG contract as ``dtw_wavefront``.
     """
     p, m = candidates.shape
     assert queries.shape == candidates.shape, "row-aligned pairs required"
@@ -140,15 +226,24 @@ def dtw_wavefront_pairs(queries: jnp.ndarray, candidates: jnp.ndarray,
     x_rev = jnp.pad(x_rev, ((pad, pad), (0, pp)))
     q_t = jnp.pad(queries.astype(jnp.float32).T, ((pad, pad), (0, pp)))
 
-    out = pl.pallas_call(
-        functools.partial(_kernel, m=m, r=r, b_w=b_w, pad=pad),
-        out_shape=jax.ShapeDtypeStruct((1, p + pp), jnp.float32),
-        grid=((p + pp) // LANES,),
-        in_specs=[
-            pl.BlockSpec((m + 2 * pad, LANES), lambda g: (0, g)),
-            pl.BlockSpec((m + 2 * pad, LANES), lambda g: (0, g)),
-        ],
-        out_specs=pl.BlockSpec((1, LANES), lambda g: (0, g)),
-        interpret=interpret,
-    )(q_t, x_rev)
+    qx_spec = pl.BlockSpec((m + 2 * pad, LANES), lambda g: (0, g))
+    o_spec = pl.BlockSpec((1, LANES), lambda g: (0, g))
+    if threshold is None:
+        out = pl.pallas_call(
+            functools.partial(_kernel, m=m, r=r, b_w=b_w, pad=pad),
+            out_shape=jax.ShapeDtypeStruct((1, p + pp), jnp.float32),
+            grid=((p + pp) // LANES,),
+            in_specs=[qx_spec, qx_spec],
+            out_specs=o_spec,
+            interpret=interpret,
+        )(q_t, x_rev)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_kernel_thr, m=m, r=r, b_w=b_w, pad=pad),
+            out_shape=jax.ShapeDtypeStruct((1, p + pp), jnp.float32),
+            grid=((p + pp) // LANES,),
+            in_specs=[qx_spec, qx_spec, o_spec],
+            out_specs=o_spec,
+            interpret=interpret,
+        )(q_t, x_rev, _thr_lanes(threshold, p, pp))
     return out[0, :p]

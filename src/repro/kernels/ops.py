@@ -69,37 +69,50 @@ def sketch_bits(x: jnp.ndarray, filters: jnp.ndarray, step: int,
 def dtw_rerank(query: jnp.ndarray, candidates: jnp.ndarray,
                band: Optional[int],
                use_pallas: Optional[bool] = None,
-               interpret: bool = False) -> jnp.ndarray:
+               interpret: bool = False,
+               threshold=None) -> jnp.ndarray:
     """Banded squared-DTW of query vs candidate batch -> (C,).
 
     ``band=None`` (unconstrained) maps to radius m-1 on the Pallas path —
     equivalent for equal-length series (|i-j| <= m-1 always holds).
+    ``threshold`` (scalar or (C,)) enables early-abandoning PrunedDTW on
+    both backends under one contract: lanes whose exact cost is
+    <= threshold return it exactly, all others return BIG — so the two
+    backends stay value-comparable and top-k decisions are unchanged
+    whenever the threshold upper-bounds the k-th best distance.
     """
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas or interpret:
         r = band if band is not None else candidates.shape[1] - 1
         return _dtw_pallas(query, candidates, r,
-                           interpret=interpret or not _on_tpu())
-    return ref.dtw_wavefront_ref(query, candidates, band=band)
+                           interpret=interpret or not _on_tpu(),
+                           threshold=threshold)
+    return ref.dtw_wavefront_ref(query, candidates, band=band,
+                                 threshold=threshold)
 
 
 def dtw_rerank_pairs(queries: jnp.ndarray, candidates: jnp.ndarray,
                      band: Optional[int],
                      use_pallas: Optional[bool] = None,
-                     interpret: bool = False) -> jnp.ndarray:
+                     interpret: bool = False,
+                     threshold=None) -> jnp.ndarray:
     """Row-aligned pair DTW (P, m) x (P, m) -> (P,) — the batched
     re-rank's survivor-pair shape.  ``band=None`` (unconstrained) maps to
     radius m-1 on the Pallas path: for equal-length series |i-j| <= m-1
     always holds, so the banded kernel computes the unconstrained DP.
+    ``threshold`` (scalar or (P,)): early-abandon contract as in
+    :func:`dtw_rerank`.
     """
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas or interpret:
         r = band if band is not None else candidates.shape[1] - 1
         return _dtw_pairs_pallas(queries, candidates, r,
-                                 interpret=interpret or not _on_tpu())
-    return ref.dtw_pairs_ref(queries, candidates, band=band)
+                                 interpret=interpret or not _on_tpu(),
+                                 threshold=threshold)
+    return ref.dtw_pairs_ref(queries, candidates, band=band,
+                             threshold=threshold)
 
 
 def collision_count(query_keys: jnp.ndarray, db_keys: jnp.ndarray,

@@ -12,7 +12,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.dtw import BIG as _BIG
 from repro.core.dtw import dtw as _dtw
+from repro.core.dtw import dtw_banded_batch as _dtw_banded_batch
+from repro.core.dtw import dtw_banded_pairs as _dtw_banded_pairs
 from repro.core.dtw import dtw_batch as _dtw_batch
 from repro.core.sketch import sketch_projections as _sketch_projections
 
@@ -24,18 +27,50 @@ def sketch_conv_ref(x: jnp.ndarray, filters: jnp.ndarray, step: int
     return _sketch_projections(x, filters, step)
 
 
+def _banded_wins(band: Optional[int], m: int) -> bool:
+    """True when the window DP does less work than the full-column scan
+    (the band window, padded to its DP width, is narrower than a column)."""
+    return band is not None and 2 * band + 1 < m
+
+
 @functools.partial(jax.jit, static_argnames=("band",))
 def dtw_wavefront_ref(query: jnp.ndarray, candidates: jnp.ndarray,
-                      band: Optional[int] = None) -> jnp.ndarray:
-    """Banded squared-DTW. query (m,), candidates (C, m) -> (C,)."""
-    return _dtw_batch(query, candidates, band=band)
+                      band: Optional[int] = None,
+                      threshold=None) -> jnp.ndarray:
+    """Banded squared-DTW. query (m,), candidates (C, m) -> (C,).
+
+    Narrow bands route through the O(m·band) window DP
+    (``core.dtw.dtw_banded_batch``) — the CPU analogue of the wavefront
+    kernel's banded cell count.  ``threshold`` applies the shared
+    early-abandon contract (exact if <= threshold, else BIG); on the
+    window-DP path hopeless lanes also stop the column scan early.
+    """
+    if _banded_wins(band, int(candidates.shape[1])):
+        return _dtw_banded_batch(query, candidates, band,
+                                 threshold=threshold)
+    d = _dtw_batch(query, candidates, band=band)
+    if threshold is None:
+        return d
+    thr = jnp.asarray(threshold, jnp.float32)
+    return jnp.where(d > thr, _BIG, d)
 
 
 @functools.partial(jax.jit, static_argnames=("band",))
 def dtw_pairs_ref(queries: jnp.ndarray, candidates: jnp.ndarray,
-                  band: Optional[int] = None) -> jnp.ndarray:
-    """Row-aligned banded squared-DTW: (P, m) x (P, m) -> (P,)."""
-    return jax.vmap(lambda q, c: _dtw(q, c, band=band))(queries, candidates)
+                  band: Optional[int] = None,
+                  threshold=None) -> jnp.ndarray:
+    """Row-aligned banded squared-DTW: (P, m) x (P, m) -> (P,).
+
+    Same band/threshold routing as :func:`dtw_wavefront_ref`.
+    """
+    if _banded_wins(band, int(candidates.shape[1])):
+        return _dtw_banded_pairs(queries, candidates, band,
+                                 threshold=threshold)
+    d = jax.vmap(lambda q, c: _dtw(q, c, band=band))(queries, candidates)
+    if threshold is None:
+        return d
+    thr = jnp.asarray(threshold, jnp.float32)
+    return jnp.where(d > thr, _BIG, d)
 
 
 @jax.jit

@@ -184,7 +184,8 @@ def ssh_search_batch(queries: jnp.ndarray, index: SSHIndex,
     out_ids, out_d, n_final, n_union, stats = rr.rerank_batch(
         queries, ids, valid, index, config.topk, config.band,
         use_lb_cascade=config.use_lb_cascade, backend=config.backend,
-        seed_size=config.seed_size, timer=timer)
+        seed_size=config.seed_size, early_abandon=config.early_abandon,
+        timer=timer)
     if stats is not None:
         stats.index_bytes = index.nbytes()
 

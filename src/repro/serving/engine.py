@@ -211,6 +211,13 @@ def _lb_fracs(res: BatchSearchResult):
             if res.stats is not None and res.stats.n_in else [])
 
 
+def _abandon_fracs(res: BatchSearchResult):
+    """Batch-aggregate early-abandoned DTW-lane fraction (empty when no
+    lane entered the DTW stage, mirroring ``_lb_fracs``)."""
+    return ([res.stats.dtw_abandoned_frac]
+            if res.stats is not None and res.stats.n_dtw else [])
+
+
 def _stage_seconds(res: BatchSearchResult):
     """Per-stage batch wall clock for metrics (None when telemetry off)."""
     return res.stats.stage_seconds if res.stats is not None else None
@@ -361,6 +368,7 @@ class ServingEngine:
             list(res.pruned_total_frac[:b]),
             self._queue.qsize(),
             lb_pruned_frac=_lb_fracs(res),
+            dtw_abandoned_frac=_abandon_fracs(res),
             stage_seconds=_stage_seconds(res))
         return [res.per_query(i) for i in range(b)]
 
@@ -457,4 +465,5 @@ class ServingEngine:
                 list(res.pruned_total_frac[:len(batch)]),
                 self._queue.qsize(),
                 lb_pruned_frac=_lb_fracs(res),
+                dtw_abandoned_frac=_abandon_fracs(res),
                 stage_seconds=_stage_seconds(res))

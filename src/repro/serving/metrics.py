@@ -105,6 +105,7 @@ class ServingMetrics:
         self.pruned_by_hash = RunningMean()
         self.pruned_total = RunningMean()
         self.lb_pruned = RunningMean()     # LB-cascade fraction of top-C
+        self.dtw_abandoned = RunningMean()  # early-abandoned DTW lanes
         # per-batch stage wall clock (repro.bench stage telemetry)
         self.stage_seconds = {s: RunningMean() for s in STAGE_KEYS}
         self.requests_total = 0
@@ -128,6 +129,7 @@ class ServingMetrics:
     def on_batch(self, batch_size: int, latencies_s, queue_waits_s,
                  pruned_by_hash_frac, pruned_total_frac,
                  depth_after: int, lb_pruned_frac=(),
+                 dtw_abandoned_frac=(),
                  stage_seconds: Optional[Dict[str, float]] = None) -> None:
         with self._lock:
             self.batches_total += 1
@@ -145,6 +147,8 @@ class ServingMetrics:
                 self.pruned_total.record(f)
             for f in lb_pruned_frac:
                 self.lb_pruned.record(f)
+            for f in dtw_abandoned_frac:
+                self.dtw_abandoned.record(f)
             for stage, sec in (stage_seconds or {}).items():
                 if stage in self.stage_seconds:
                     self.stage_seconds[stage].record(sec)
@@ -179,6 +183,7 @@ class ServingMetrics:
                 "pruned_by_hash_frac_mean": self.pruned_by_hash.mean,
                 "pruned_total_frac_mean": self.pruned_total.mean,
                 "lb_pruned_frac_mean": self.lb_pruned.mean,
+                "dtw_abandoned_frac_mean": self.dtw_abandoned.mean,
             }
 
     def format(self) -> str:

@@ -39,8 +39,8 @@ def index(db):
 def _result(name="table3/ecg/len128", us=1500.0, **kw):
     base = dict(
         name=name, us_per_query=us, us_p50=us, us_p95=us * 1.2,
-        stage_us={"encode": us * 0.1, "probe": us * 0.2, "lb": us * 0.4,
-                  "dtw": us * 0.3},
+        stage_us={"encode": us * 0.1, "probe": us * 0.2, "lb": us * 0.3,
+                  "lb_improved": us * 0.1, "dtw": us * 0.3},
         lb_pruned_frac=0.9, precision_at_k=0.8, build_s=1.0,
         case=BenchCase(dataset="ecg", length=128, n_database=1000,
                        spec=PARAMS.to_spec().to_dict(),
@@ -71,7 +71,8 @@ class TestSchema:
         assert back.to_dict() == report.to_dict()
         r = back.results[0]
         assert r.case.dataset == "ecg"
-        assert r.stage_us["lb"] == pytest.approx(600.0)
+        assert r.stage_us["lb"] == pytest.approx(450.0)
+        assert r.stage_us["lb_improved"] == pytest.approx(150.0)
 
     def test_validate_accepts_minimal(self):
         validate_report(_report(results=[BenchResult(
@@ -267,3 +268,58 @@ class TestStageTiming:
         snap = engine.metrics.snapshot()
         for s in STAGES:
             assert snap[f"stage_{s}_us_per_batch_mean"] >= 0.0
+        assert 0.0 <= snap["dtw_abandoned_frac_mean"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# counter consistency on the instrumented hot path
+# ---------------------------------------------------------------------------
+
+class TestCounterConsistency:
+    """The pruning/abandon counters must stay a partition of the
+    candidate block and the derived fractions must stay probabilities —
+    a regression here means a stage miscounts (e.g. double-attributing a
+    candidate to two bounds, or counting an abandoned lane twice)."""
+
+    CFG = SearchConfig(topk=10, top_c=128, band=8, searcher="local")
+
+    def _stats(self, db, index, **cfg):
+        return ssh_search(db[3], index,
+                          config=self.CFG.replace(**cfg)).stats
+
+    def test_counters_partition_and_fracs_bounded(self, db, index):
+        st = self._stats(db, index)
+        assert st.n_in == (st.pruned_kim + st.pruned_keogh
+                           + st.pruned_keogh2 + st.pruned_improved
+                           + st.n_dtw)
+        assert 0.0 <= st.lb_pruned_frac <= 1.0
+        assert 0.0 <= st.dtw_abandoned_frac <= 1.0
+        assert 0 <= st.dtw_abandoned <= st.n_dtw
+        # the lb_improved stage is timed whenever the cascade ran
+        assert st.stage_seconds["lb_improved"] >= 0.0
+
+    def test_abandon_off_zeroes_counter_only(self, db, index):
+        on = self._stats(db, index, early_abandon=True)
+        off = self._stats(db, index, early_abandon=False)
+        assert off.dtw_abandoned == 0 and off.dtw_abandoned_frac == 0.0
+        # pruning decisions happen before the DTW stage: identical
+        for f in ("n_in", "pruned_kim", "pruned_keogh", "pruned_keogh2",
+                  "pruned_improved", "n_dtw", "forced_kept"):
+            assert getattr(on, f) == getattr(off, f)
+
+    def test_batched_counters_partition(self, db, index):
+        res = ssh_search_batch(db[jnp.asarray([3, 9, 14, 21])], index,
+                               config=self.CFG.replace(searcher="batched"))
+        st = res.stats
+        assert st.n_in == st.lb_pruned + st.n_dtw
+        assert 0 <= st.dtw_abandoned <= st.n_dtw
+        assert 0.0 <= st.lb_pruned_frac <= 1.0
+        assert 0.0 <= st.dtw_abandoned_frac <= 1.0
+
+    def test_disabled_telemetry_counters_identical(self, db, index):
+        on = self._stats(db, index, stage_timings=True)
+        off = self._stats(db, index, stage_timings=False)
+        assert off.stage_seconds is None
+        for f in ("n_in", "pruned_improved", "n_dtw", "dtw_abandoned",
+                  "forced_kept"):
+            assert getattr(on, f) == getattr(off, f)

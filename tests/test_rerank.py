@@ -102,6 +102,131 @@ def test_batched_equals_sequential_within_backend(db, index):
 
 
 # ---------------------------------------------------------------------------
+# early-abandoning DTW: golden equivalence + kernel soundness
+# ---------------------------------------------------------------------------
+
+def test_abandon_on_off_identical_across_searchers(db):
+    """Top-k must be bit-identical with early abandoning on or off, for
+    every registered searcher.  local/batched/engine additionally agree
+    with each other; distributed probes differently (shard-local
+    collision scan) so it is held to its own on ≡ off contract."""
+    from repro.db import SearchConfig, TimeSeriesDB
+    base = SearchConfig(topk=10, top_c=128, band=8, searcher="local")
+    dbi = TimeSeriesDB.build(db, spec=PARAMS.to_spec(), config=base)
+    queries = db[jnp.asarray(QIDS[:4])]
+
+    shared = None
+    for searcher in ("local", "batched", "engine"):
+        for ea in (False, True):
+            cfg = base.replace(searcher=searcher, early_abandon=ea)
+            res = dbi.with_config(cfg).search_batch(queries)
+            out = ([np.asarray(r.ids) for r in res],
+                   [np.asarray(r.dists) for r in res])
+            if shared is None:
+                shared = out
+            else:
+                for a, b in zip(out[0], shared[0]):
+                    np.testing.assert_array_equal(a, b)
+                for a, b in zip(out[1], shared[1]):
+                    np.testing.assert_array_equal(a, b)
+
+    dist = {}
+    for ea in (False, True):
+        cfg = base.replace(searcher="distributed", early_abandon=ea)
+        res = dbi.with_config(cfg).search_batch(queries)
+        dist[ea] = ([np.asarray(r.ids) for r in res],
+                    [np.asarray(r.dists) for r in res])
+    for a, b in zip(dist[True][0], dist[False][0]):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(dist[True][1], dist[False][1]):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.kernels
+def test_abandon_on_off_identical_both_backends(db, index):
+    """Within each kernel backend (jnp ref and the Pallas wavefront in
+    interpret mode), early_abandon=True returns bit-identical top-k to
+    early_abandon=False."""
+    for qid in QIDS[:3]:
+        for be in ("jnp", "pallas"):
+            on = ssh_search(db[qid], index, topk=10, top_c=128, band=8,
+                            backend=be, early_abandon=True)
+            off = ssh_search(db[qid], index, topk=10, top_c=128, band=8,
+                             backend=be, early_abandon=False)
+            np.testing.assert_array_equal(on.ids, off.ids)
+            np.testing.assert_array_equal(on.dists, off.dists)
+
+
+@pytest.mark.kernels
+def test_threshold_inf_reduces_to_plain_output(rng):
+    """threshold=+inf must reproduce today's no-threshold output exactly
+    — bit-for-bit — on the wavefront kernel (the threshold build shares
+    its per-diagonal step with the plain build) and on the jnp ref."""
+    inf = jnp.float32(np.inf)
+    q = jnp.asarray(rng.normal(size=128).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(37, 128)).astype(np.float32))
+    plain = np.asarray(dtw_wavefront(q, c, 8, interpret=True))
+    thr = np.asarray(dtw_wavefront(q, c, 8, interpret=True, threshold=inf))
+    np.testing.assert_array_equal(plain, thr)
+    plain = np.asarray(ref.dtw_wavefront_ref(q, c, band=8))
+    thr = np.asarray(ref.dtw_wavefront_ref(q, c, band=8, threshold=inf))
+    np.testing.assert_array_equal(plain, thr)
+    qs = jnp.asarray(rng.normal(size=(21, 64)).astype(np.float32))
+    cs = jnp.asarray(rng.normal(size=(21, 64)).astype(np.float32))
+    plain = np.asarray(dtw_wavefront_pairs(qs, cs, 6, interpret=True))
+    thr = np.asarray(dtw_wavefront_pairs(qs, cs, 6, interpret=True,
+                                         threshold=inf))
+    np.testing.assert_array_equal(plain, thr)
+    plain = np.asarray(ref.dtw_pairs_ref(qs, cs, band=6))
+    thr = np.asarray(ref.dtw_pairs_ref(qs, cs, band=6, threshold=inf))
+    np.testing.assert_array_equal(plain, thr)
+
+
+@pytest.mark.kernels
+@pytest.mark.parametrize("impl", ["pallas", "jnp"])
+def test_abandon_soundness_adversarial_thresholds(rng, impl):
+    """The kernel must never abandon a lane that would finish under its
+    threshold.  Per-lane thresholds are set adversarially relative to
+    each lane's exact cost: exactly equal (the tie must SURVIVE — the
+    contract masks on strict >, and an off-by-one in the wavefront's
+    early-exit condition, e.g. testing the bound one diagonal late,
+    breaks exactly this case), one ulp below (must be masked to BIG),
+    and far above (must stay exact)."""
+    def run(q, c, threshold=None):
+        if impl == "pallas":
+            return np.asarray(dtw_wavefront(q, c, 6, interpret=True,
+                                            threshold=threshold))
+        return np.asarray(ref.dtw_wavefront_ref(q, c, band=6,
+                                                threshold=threshold))
+
+    big = np.float32(1e30)
+    q = jnp.asarray(rng.normal(size=64).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(50, 64)).astype(np.float32))
+    exact = run(q, c)
+
+    # tie at the threshold: every lane finishes, values exact
+    got = run(q, c, threshold=jnp.asarray(exact))
+    np.testing.assert_array_equal(got, exact)
+
+    # one ulp below each lane's cost: every lane must be masked
+    below = np.nextafter(exact, np.float32(-np.inf)).astype(np.float32)
+    got = run(q, c, threshold=jnp.asarray(below))
+    assert np.all(got >= big * 0.5)
+
+    # mixed per-lane: alternate tie / one-ulp-below — survivors exact,
+    # the rest masked, no cross-lane leakage inside a block
+    thr = np.where(np.arange(50) % 2 == 0, exact, below).astype(np.float32)
+    got = run(q, c, threshold=jnp.asarray(thr))
+    keep = np.arange(50) % 2 == 0
+    np.testing.assert_array_equal(got[keep], exact[keep])
+    assert np.all(got[~keep] >= big * 0.5)
+
+    # far above: nothing abandons, values exact
+    got = run(q, c, threshold=jnp.asarray(exact * 4 + 1))
+    np.testing.assert_array_equal(got, exact)
+
+
+# ---------------------------------------------------------------------------
 # recall regression (paper Table 2 guard)
 # ---------------------------------------------------------------------------
 
@@ -169,18 +294,20 @@ def test_envelope_precompute_does_not_change_results(db, index):
 
 def test_search_stats_partition(db, index):
     """Cascade counters partition the candidate set exactly:
-    n_in == pruned_kim + pruned_keogh + pruned_keogh2 + n_dtw."""
+    n_in == pruned_kim + pruned_keogh + pruned_keogh2 + pruned_improved
+    + n_dtw, with the abandoned lanes a subset of the DTW stage."""
     for qid in QIDS[:4]:
         s = ssh_search(db[qid], index, topk=10, top_c=128, band=8).stats
         assert isinstance(s, SearchStats)
         assert s.n_in == s.pruned_kim + s.pruned_keogh + s.pruned_keogh2 \
-            + s.n_dtw
+            + s.pruned_improved + s.n_dtw
         assert 0.0 <= s.lb_pruned_frac <= 1.0
+        assert 0 <= s.dtw_abandoned <= s.n_dtw
     res = ssh_search_batch(db[jnp.asarray(QIDS)], index, topk=10,
                            top_c=128, band=8)
     s = res.stats
     assert s.n_in == s.pruned_kim + s.pruned_keogh + s.pruned_keogh2 \
-        + s.n_dtw
+        + s.pruned_improved + s.n_dtw
     assert s.n_dtw == res.dtw_evals
 
 
