@@ -2,7 +2,7 @@
 
   PYTHONPATH=src python -m benchmarks.run [--only table3] [--scale smoke]
       [--json] [--out DIR] [--baseline [DIR]] [--threshold F]
-      [--min-lb-pruned F]
+      [--min-lb-pruned F] [--min-encode-speedup F]
 
 Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
 With ``--json``, additionally writes one schema-validated
@@ -27,6 +27,8 @@ MODULES = [
     ("serving_bench", "serving throughput: batched engine vs sequential"),
     ("ingest_bench", "streaming ingest: sketch throughput, shard merge, "
                      "memory"),
+    ("subseq_bench", "subsequence search: rolling vs naive encode, query "
+                     "latency vs stream length"),
 ]
 
 #: Committed smoke-scale baseline (regenerate with
@@ -67,6 +69,11 @@ def _parse_args(argv):
                          "least this fraction of hash candidates before "
                          "full DTW (cascade + LB_Improved effectiveness "
                          "gate; implies --json)")
+    ap.add_argument("--min-encode-speedup", type=float, default=None,
+                    metavar="F",
+                    help="fail unless the subseq rolling encode beat the "
+                         "naive per-window encode by at least this factor "
+                         "(DESIGN.md §10 tentpole gate; implies --json)")
     return ap.parse_args(argv)
 
 
@@ -81,7 +88,8 @@ def main(argv=None) -> int:
                   "imported at a different scale", file=sys.stderr)
             return 2
         os.environ["BENCH_SCALE"] = args.scale
-    if args.baseline is not None or args.min_lb_pruned is not None:
+    if args.baseline is not None or args.min_lb_pruned is not None \
+            or args.min_encode_speedup is not None:
         args.json = True
 
     modules = MODULES
@@ -117,6 +125,8 @@ def main(argv=None) -> int:
         rc = _gate(args, [m for m, _ in modules])
     if args.min_lb_pruned is not None:
         rc = max(rc, _lb_gate(args))
+    if args.min_encode_speedup is not None:
+        rc = max(rc, _encode_gate(args))
     return rc
 
 
@@ -178,6 +188,39 @@ def _lb_gate(args) -> int:
             print("# lb-gate: FAIL (no table3/ecg entries in report)")
         return 1
     print("# lb-gate: OK")
+    return 0
+
+
+def _encode_gate(args) -> int:
+    """Rolling-encode advantage floor: the subseq build must amortise the
+    sketch grid across overlapping windows — ``speedup`` (naive
+    per-window µs / rolling per-window µs) dropping below the floor means
+    the rolling path silently degraded to per-window work (e.g. the
+    sparse CWS or shared-grid gather fell back to the dense pipeline)."""
+    from repro.bench import load_report
+    path = os.path.join(args.out, "BENCH_subseq_bench.json")
+    if not os.path.exists(path):
+        print("# encode-gate: SKIP (subseq_bench not in this run)")
+        return 0
+    checked, bad = 0, []
+    for r in load_report(path).results:
+        if not r.name.endswith("/encode"):
+            continue
+        checked += 1
+        speedup = r.derived.get("speedup") if r.derived else None
+        if speedup is None or float(speedup) < args.min_encode_speedup:
+            bad.append((r.name, speedup))
+        else:
+            print(f"# encode-gate: {r.name} speedup={float(speedup):.1f}x "
+                  f">= {args.min_encode_speedup}")
+    for name, speedup in bad:
+        print(f"# encode-gate: FAIL {name} speedup={speedup} < "
+              f"{args.min_encode_speedup}")
+    if bad or not checked:
+        if not checked:
+            print("# encode-gate: FAIL (no /encode entries in report)")
+        return 1
+    print("# encode-gate: OK")
     return 0
 
 

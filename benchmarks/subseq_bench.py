@@ -1,0 +1,162 @@
+"""Subsequence search — rolling vs naive encode, query latency, extend.
+
+Measures the DESIGN.md §10 subsystem end to end at bench scale:
+
+* ``encode`` — the tentpole claim: one rolling pass (shared sketch grid
+  + sparse CWS) over the stream vs naively encoding every materialised
+  window through the dense per-series pipeline.  ``derived.speedup`` is
+  gated in CI (``--min-encode-speedup``); the naive side is timed over a
+  window subset and scaled per-window (its cost is per-window constant),
+  keeping the smoke run bounded.
+* ``build`` — SubsequenceIndex.build wall time, windows/second.
+* ``query/n<N>`` — stage-instrumented ``search`` latency at two stream
+  lengths (same query, 2x the windows), including the
+  ``encode_amortized`` stage (per-query share of the build-side encode —
+  what a per-window encoder would pay at query time).
+* ``extend`` — ``extend_stream`` µs per appended window (suffix re-roll
+  + streaming fold, bit-identical to a rebuild).
+
+CSV rows: subseq/<kind>/len<L>/<cell>, us_per_call, derived.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (GENERATORS, N_POINTS, PARAMS, case_for,
+                               percentile, report, search_config,
+                               stage_mean_us, timed, timed_search_samples)
+from repro.data.timeseries import extract_subsequences
+from repro.subseq import SubsequenceIndex, rolling_signatures
+
+KIND, LENGTH = "ecg", 128
+HOP = 6                  # divisible by the ECG δ=3 → aligned rolling path
+N_NAIVE_MAX = 256        # naive-encode timing subset (per-window constant)
+TAIL_POINTS = 600        # extend_stream workload
+
+_IDX_CACHE = {}
+
+
+def _stream(n_points: int) -> np.ndarray:
+    return np.asarray(GENERATORS[KIND](n_points, seed=3), np.float32)
+
+
+def _config(**over):
+    base = search_config(KIND, LENGTH, searcher="local")
+    return dataclasses.replace(base, subseq_window=LENGTH, subseq_hop=HOP,
+                               stage_timings=True, **over)
+
+
+def _index(n_points: int) -> SubsequenceIndex:
+    if n_points not in _IDX_CACHE:
+        _IDX_CACHE[n_points] = SubsequenceIndex.build(
+            _stream(n_points), PARAMS[KIND].to_spec(),
+            length=LENGTH, hop=HOP)
+    return _IDX_CACHE[n_points]
+
+
+def _case(idx: SubsequenceIndex, cfg):
+    return case_for(KIND, LENGTH, idx.num_windows,
+                    spec=idx.encoder.spec, config=cfg)
+
+
+def _build_row() -> None:
+    _IDX_CACHE.pop(N_POINTS, None)      # cold cache, but warm compile
+    SubsequenceIndex.build(_stream(N_POINTS), PARAMS[KIND].to_spec(),
+                           length=LENGTH, hop=HOP)
+    t0 = time.perf_counter()
+    idx = SubsequenceIndex.build(_stream(N_POINTS), PARAMS[KIND].to_spec(),
+                                 length=LENGTH, hop=HOP)
+    build_s = time.perf_counter() - t0
+    _IDX_CACHE[N_POINTS] = idx
+    report(f"subseq/{KIND}/len{LENGTH}/build",
+           build_s / idx.num_windows * 1e6,
+           {"windows_per_s": round(idx.num_windows / build_s, 1),
+            "n_windows": idx.num_windows, "hop": HOP,
+            "stream_points": N_POINTS,
+            "index_bytes": idx.nbytes()},
+           build_s=build_s, case=_case(idx, _config()))
+
+
+def _encode_row() -> None:
+    """rolling_signatures over the stream vs per-window dense encode."""
+    idx = _index(N_POINTS)
+    enc, backend = idx.encoder, idx.build_backend
+    stream = jnp.asarray(idx.stream)
+    nw = idx.num_windows
+
+    _, roll_s = timed(
+        lambda: rolling_signatures(stream, enc, LENGTH, HOP,
+                                   backend=backend),
+        warmup=1, iters=3)
+    roll_us_per_window = roll_s / nw * 1e6
+
+    n_naive = min(nw, N_NAIVE_MAX)
+    windows = jnp.asarray(extract_subsequences(
+        idx.stream, LENGTH, stride=HOP, max_count=n_naive, znorm=False))
+    _, naive_s = timed(
+        lambda: enc.encode_chunked(windows, backend=backend),
+        warmup=1, iters=1)
+    naive_us_per_window = naive_s / n_naive * 1e6
+
+    speedup = naive_us_per_window / roll_us_per_window
+    report(f"subseq/{KIND}/len{LENGTH}/encode", roll_us_per_window,
+           {"speedup": round(speedup, 2),
+            "naive_us_per_window": round(naive_us_per_window, 2),
+            "rolling_us_per_window": round(roll_us_per_window, 2),
+            "n_windows": nw, "n_naive": n_naive, "hop": HOP},
+           case=_case(idx, _config()))
+
+
+def _query_rows() -> None:
+    """Stage-instrumented search at two stream lengths."""
+    cfg = _config()
+    rng = np.random.default_rng(0)
+    for n_points in (N_POINTS, 2 * N_POINTS):
+        idx = _index(n_points)
+        offs = rng.integers(0, idx.stream.shape[0] - LENGTH, 2)
+        queries = [jnp.asarray(idx.stream[o:o + LENGTH]) for o in offs]
+        results, samples_us = timed_search_samples(
+            lambda q: idx.search(q, cfg), queries)
+        report(f"subseq/{KIND}/len{LENGTH}/query/n{n_points}",
+               float(np.mean(samples_us)),
+               {"p50_us": round(percentile(samples_us, 50), 1),
+                "p95_us": round(percentile(samples_us, 95), 1),
+                "n_windows": idx.num_windows,
+                "n_samples": len(samples_us)},
+               stats=results[-1].stats,
+               stage_us=stage_mean_us([r.stats for r in results]),
+               samples_us=samples_us, case=_case(idx, cfg))
+
+
+def _extend_row() -> None:
+    # private index: extend_stream mutates, keep the shared ones pristine
+    idx = SubsequenceIndex.build(_stream(N_POINTS), PARAMS[KIND].to_spec(),
+                                 length=LENGTH, hop=HOP)
+    full = _stream(N_POINTS + 2 * TAIL_POINTS)
+    idx.extend_stream(full[N_POINTS:N_POINTS + TAIL_POINTS])  # compile warm
+    tail = full[N_POINTS + TAIL_POINTS:]
+    t0 = time.perf_counter()
+    n_new = idx.extend_stream(tail)
+    secs = time.perf_counter() - t0
+    report(f"subseq/{KIND}/len{LENGTH}/extend",
+           secs / max(n_new, 1) * 1e6,
+           {"n_new_windows": n_new, "tail_points": TAIL_POINTS,
+            "windows_per_s": round(n_new / secs, 1),
+            "n_windows": idx.num_windows},
+           case=_case(idx, _config()))
+
+
+def run() -> None:
+    _build_row()
+    _encode_row()
+    _query_rows()
+    _extend_row()
+
+
+if __name__ == "__main__":
+    run()

@@ -65,6 +65,20 @@ def main() -> None:
           f"{precision_at_k(mr_res.ids, gold, 10):.2f} "
           f"(swapping encoders is one IndexSpec away)")
 
+    # 7. subsequence search (DESIGN.md §10) — index every sliding window
+    #    of the raw stream in one rolling encode and ask WHERE a pattern
+    #    occurs; offsets come back ≥ L//2 apart (UCR exclusion zone)
+    sub_cfg = get_arch("ssh-ecg").search_config(
+        length=128, subseq_window=128, subseq_hop=6)
+    sdb = TimeSeriesDB.build_stream(stream, spec=spec, config=sub_cfg)
+    pattern = jnp.asarray(stream[2400:2528])     # a raw window
+    sres = sdb.search_subsequence(pattern)
+    print(f"pattern planted at 2400 found at offsets "
+          f"{sres.offsets[:3].tolist()} "
+          f"({sres.n_windows} windows indexed)")
+    sdb.extend_stream(stream[:300])              # rolls only new windows
+    print(f"after extend: {sdb.subseq.num_windows} windows")
+
 
 if __name__ == "__main__":
     main()

@@ -35,9 +35,12 @@ SCHEMA_VERSION = 1
 
 SCALES = ("smoke", "small", "full")
 
-#: stage_us may carry the canonical four stages plus "fused" (the
-#: distributed fan-out cannot split its shard_map program).
-STAGE_KEYS = STAGES + ("fused",)
+#: stage_us may carry the canonical stages plus "fused" (the
+#: distributed fan-out cannot split its shard_map program) and
+#: "encode_amortized" (subsequence search: the build-side rolling
+#: encode seconds divided over the indexed windows — the per-window
+#: encode cost each query's probe amortises, constant per query).
+STAGE_KEYS = STAGES + ("fused", "encode_amortized")
 
 
 class SchemaError(ValueError):

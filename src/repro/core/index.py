@@ -251,6 +251,10 @@ class SSHIndex:
     # the historical jnp-only build — modern build()/load() set it
     # explicitly so queries always hash with the build-time kernel
     build_backend: str = "jnp"
+    # lazily-created LRU of encoded query signatures keyed by (series
+    # content hash, IndexSpec, backend, variant) — repeated queries skip
+    # encode; values are bit-identical so results are unchanged
+    sig_cache: Optional[object] = None
 
     @classmethod
     def build(cls, series: jnp.ndarray, params=None,
@@ -354,6 +358,47 @@ class SSHIndex:
 
     def query_keys(self, q: jnp.ndarray) -> jnp.ndarray:
         return self.enc.band_keys(self.query_signature(q))
+
+    # -- signature cache (repeated-query traffic skips encode) -----------
+    def _sig_cache(self):
+        if self.sig_cache is None:
+            from repro.encoders.sigcache import SignatureCache
+            self.sig_cache = SignatureCache()
+        return self.sig_cache
+
+    def _cached_encode(self, q: jnp.ndarray, variant: str, compute):
+        """(value, hit) — LRU lookup by query content before encoding.
+
+        A hit returns the previously-encoded array (bit-identical by
+        construction: same content, spec, backend, variant); a miss
+        computes and populates.  Cost on miss is one blake2b over the
+        query bytes — noise next to the encode it guards.
+        """
+        cache = self._sig_cache()
+        key = cache.key(np.asarray(q), self.enc.spec, self.build_backend,
+                        variant)
+        val = cache.get(key)
+        if val is not None:
+            return jnp.asarray(val), True
+        val = compute()
+        cache.put(key, np.asarray(val))
+        return val, False
+
+    def query_signature_cached(self, q: jnp.ndarray):
+        """(signature, cache_hit) — `query_signature` behind the LRU."""
+        return self._cached_encode(q, "sig",
+                                   lambda: self.query_signature(q))
+
+    def query_keys_cached(self, q: jnp.ndarray):
+        """(band keys, cache_hit) — `query_keys` behind the LRU."""
+        return self._cached_encode(q, "keys", lambda: self.query_keys(q))
+
+    def query_signatures_multiprobe_cached(self, q: jnp.ndarray,
+                                           offsets: int):
+        """(per-offset signatures, cache_hit) behind the LRU."""
+        return self._cached_encode(
+            q, f"mp{offsets}",
+            lambda: self.query_signatures_multiprobe(q, offsets))
 
     def query_signatures_batch(self, qs: jnp.ndarray) -> jnp.ndarray:
         """(B, m) query block -> (B, K) signatures, one dispatch."""

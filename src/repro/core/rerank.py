@@ -85,6 +85,15 @@ class SearchStats:
     # encoder state — ``SSHIndex.nbytes``); makes the sketch-vs-exact
     # memory claim machine-readable next to the latency it bought
     index_bytes: Optional[int] = None
+    # queries in this search whose encode was served from the signature
+    # LRU (repro.encoders.sigcache) — 0/1 sequentially, up to B batched
+    sig_cache_hit: int = 0
+    # sliding windows probed when the query ran against a subsequence
+    # index (repro.subseq); 0 for whole-series search.  Subsequence
+    # stats also carry the extra "encode_amortized" stage key: the
+    # build-side rolling encode seconds divided over the indexed
+    # windows — the per-window cost this query's probe amortises
+    n_windows: int = 0
 
     @property
     def lb_pruned(self) -> int:

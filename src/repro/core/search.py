@@ -47,7 +47,8 @@ def hash_probe(query: jnp.ndarray, index: SSHIndex, top_c: int,
                use_host_buckets: bool = False,
                topk: int = 10,
                backend: str = "auto",
-               timer: StageTimer = DISABLED) -> jnp.ndarray:
+               timer: StageTimer = DISABLED,
+               probe_stats: Optional[dict] = None) -> jnp.ndarray:
     """Stage 1 of Alg. 2: candidate ids ranked by hash collisions.
 
     Returns at most ``top_c`` candidate ids with a positive collision
@@ -58,12 +59,19 @@ def hash_probe(query: jnp.ndarray, index: SSHIndex, top_c: int,
     or the jnp reference — integer counts, so candidate sets are identical
     either way.  An enabled ``timer`` records the query signature build
     as the ``encode`` stage and the collision scan + top-C as ``probe``.
+
+    Encodes go through the index's signature LRU (keyed by query
+    content + spec + backend — bit-identical on hit, so candidate sets
+    are unchanged); a caller-supplied ``probe_stats`` dict receives
+    ``{"sig_cache_hit": 0|1}`` for telemetry.
     """
     n = int(index.keys.shape[0])
     use_pallas = ops.resolve_backend(backend)
+    hit = False
     if use_host_buckets and index.host_buckets is not None:
         with timer.stage("encode") as sync:
-            qkeys = sync(index.query_keys(query))
+            qkeys, hit = index.query_keys_cached(query)
+            qkeys = sync(qkeys)
         with timer.stage("probe") as sync:
             cand_ids = index.host_buckets.probe(np.asarray(qkeys))
             cand_ids = jnp.asarray(cand_ids[: max(top_c, topk)], jnp.int32)
@@ -72,8 +80,8 @@ def hash_probe(query: jnp.ndarray, index: SSHIndex, top_c: int,
         # same qk/db selection as the batched batch_probe
         from repro.core import minhash
         with timer.stage("encode") as sync:
-            qsigs = index.query_signatures_multiprobe(query,
-                                                      multiprobe_offsets)
+            qsigs, hit = index.query_signatures_multiprobe_cached(
+                query, multiprobe_offsets)
             if rank_by_signature:
                 qk, db = qsigs, index.signatures
             else:
@@ -89,14 +97,18 @@ def hash_probe(query: jnp.ndarray, index: SSHIndex, top_c: int,
     else:
         with timer.stage("encode") as sync:
             if rank_by_signature:
-                qk, db = index.query_signature(query), index.signatures
+                qk, hit = index.query_signature_cached(query)
+                db = index.signatures
             else:
-                qk, db = index.query_keys(query), index.keys
+                qk, hit = index.query_keys_cached(query)
+                db = index.keys
             qk = sync(qk)
         with timer.stage("probe") as sync:
             counts = ops.collision_count(qk, db, use_pallas=use_pallas)
             vals, ids = jax.lax.top_k(counts, min(top_c, n))
             cand_ids = sync(ids[vals > 0])
+    if probe_stats is not None:
+        probe_stats["sig_cache_hit"] = int(hit)
     if cand_ids.shape[0] == 0:           # degenerate: fall back to top_c ids
         cand_ids = jnp.arange(min(top_c, n), dtype=jnp.int32)
     return cand_ids
@@ -132,12 +144,13 @@ def ssh_search(query: jnp.ndarray, index: SSHIndex,
     t0 = time.perf_counter()
     timer = StageTimer(enabled=config.stage_timings, prefill=STAGES)
     n = int(index.keys.shape[0])
+    probe_stats: dict = {}
     cand_ids = hash_probe(query, index, config.top_c,
                           rank_by_signature=config.rank_by_signature,
                           multiprobe_offsets=config.multiprobe_offsets,
                           use_host_buckets=config.use_host_buckets,
                           topk=config.topk, backend=config.backend,
-                          timer=timer)
+                          timer=timer, probe_stats=probe_stats)
     n_hash = int(cand_ids.shape[0])
 
     ids, dists, stats = rr.rerank(query, cand_ids, index, config.topk,
@@ -149,6 +162,7 @@ def ssh_search(query: jnp.ndarray, index: SSHIndex,
                                   timer=timer)
     n_final = stats.n_dtw
     stats.index_bytes = index.nbytes()
+    stats.sig_cache_hit = probe_stats.get("sig_cache_hit", 0)
     wall = time.perf_counter() - t0
     return SearchResult(
         ids=ids, dists=dists,

@@ -90,6 +90,18 @@ class SearchConfig:
       stage barriers cost nothing on CPU (the pipeline already syncs at
       those points) but serialize overlapping dispatch on accelerators —
       set False on a latency-critical TPU deployment.
+
+    Subsequence search (``repro.subseq``, stream-built databases only):
+
+    * ``subseq_window`` — sliding-window length L indexed over the
+      stream; ``None`` everywhere except ``TimeSeriesDB.build_stream``,
+      which requires it.
+    * ``subseq_hop`` — window start spacing h (windows start at 0, h,
+      2h, …).  Hops divisible by the sketch stride δ take the fully
+      shared rolling-encode path.
+    * ``exclusion_zone`` — minimum offset separation between two
+      returned matches (UCR-style trivial-match suppression); ``None``
+      defaults to L//2 at query time, 0 disables deduplication.
     """
 
     topk: int = 10
@@ -106,6 +118,9 @@ class SearchConfig:
     max_batch: int = 8
     max_wait_ms: float = 2.0
     stage_timings: bool = True
+    subseq_window: Optional[int] = None
+    subseq_hop: int = 1
+    exclusion_zone: Optional[int] = None
 
     def __post_init__(self):
         """Subclass hook (the deprecated ``EngineConfig`` warns here)."""
@@ -150,6 +165,15 @@ class SearchConfig:
         if self.max_wait_ms < 0:
             raise ValueError(
                 f"max_wait_ms must be >= 0, got {self.max_wait_ms}")
+        if self.subseq_window is not None and self.subseq_window < 1:
+            raise ValueError(f"subseq_window must be None or >= 1, "
+                             f"got {self.subseq_window}")
+        if self.subseq_hop < 1:
+            raise ValueError(f"subseq_hop must be >= 1, "
+                             f"got {self.subseq_hop}")
+        if self.exclusion_zone is not None and self.exclusion_zone < 0:
+            raise ValueError(f"exclusion_zone must be None or >= 0, "
+                             f"got {self.exclusion_zone}")
         return self
 
     # -- derived ----------------------------------------------------------

@@ -53,6 +53,7 @@ class TimeSeriesDB:
         self.mesh = mesh
         self._searcher = None
         self._ingestor = None      # lazy shard-local StreamIngestor
+        self._subseq = None        # set by build_stream / subseq load
 
     @staticmethod
     def _fit_config(index: SSHIndex, config: SearchConfig) -> SearchConfig:
@@ -101,6 +102,40 @@ class TimeSeriesDB:
             envelope_band=env_band, backend=config.backend)
         return cls(index, config, mesh=mesh)
 
+    @classmethod
+    def build_stream(cls, stream, params=None,
+                     config: Optional[SearchConfig] = None, *, spec=None,
+                     mesh=None) -> "TimeSeriesDB":
+        """Index every sliding window of ONE long stream (repro.subseq).
+
+        ``config.subseq_window`` (required) is the window length L;
+        ``config.subseq_hop`` the start spacing.  The build encodes the
+        stream once through the rolling sketch (O(N·W) total filter
+        work, windows never materialised); queries go through
+        :meth:`search_subsequence`, growth through :meth:`extend_stream`
+        — the fixed-length verbs (``search``/``add``) raise on a
+        stream-built database.
+        """
+        config = (config if config is not None else SearchConfig()) \
+            .validate()
+        if config.subseq_window is None:
+            raise ValueError(
+                "build_stream needs config.subseq_window (the sliding-"
+                "window length L to index)")
+        if spec is None and params is not None:
+            from repro.core.index import _spec_from_legacy
+            spec = _spec_from_legacy(params, "TimeSeriesDB.build_stream")
+        if spec is None:
+            raise TypeError("TimeSeriesDB.build_stream() needs spec= "
+                            "(an IndexSpec) or a legacy SSHParams")
+        from repro.subseq import SubsequenceIndex
+        sub = SubsequenceIndex.build(
+            stream, spec, length=config.subseq_window,
+            hop=config.subseq_hop, backend=config.backend)
+        db = cls(sub.inner, config, mesh=mesh)
+        db._subseq = sub
+        return db
+
     # -- search policy ----------------------------------------------------
     @property
     def searcher(self):
@@ -128,15 +163,53 @@ class TimeSeriesDB:
         (shares storage; each facade owns its own searcher)."""
         return TimeSeriesDB(self.index, config, mesh=self.mesh)
 
+    # -- stream/fixed-length mode guards ----------------------------------
+    def _reject_subseq(self, verb: str) -> None:
+        if self._subseq is not None:
+            raise ValueError(
+                f"{verb}() serves fixed-length databases; this one "
+                "indexes sliding windows of a single stream — use "
+                "search_subsequence() to query it and extend_stream() "
+                "to grow it")
+
+    def _require_subseq(self, verb: str):
+        if self._subseq is None:
+            raise ValueError(
+                f"{verb}() needs a stream-built database "
+                "(TimeSeriesDB.build_stream); this one indexes "
+                "fixed-length series — use search()/add()")
+        return self._subseq
+
+    @property
+    def subseq(self):
+        """The underlying ``SubsequenceIndex`` (stream-built only)."""
+        return self._require_subseq("subseq")
+
     # -- queries ----------------------------------------------------------
     def search(self, query: jnp.ndarray) -> SearchResult:
         """Top-k for one query through the configured searcher."""
+        self._reject_subseq("search")
         return self.searcher.search(jnp.asarray(query))
 
     def search_batch(self, queries: jnp.ndarray) -> List[SearchResult]:
         """Per-query top-k for a (B, m) block; results identical to
         ``search`` on each row (serving equality contract)."""
+        self._reject_subseq("search_batch")
         return self.searcher.search_batch(jnp.asarray(queries))
+
+    def search_subsequence(self, query: jnp.ndarray,
+                           config: Optional[SearchConfig] = None):
+        """Top-k non-overlapping stream windows by banded DTW
+        (stream-built databases; see ``repro.subseq``).
+
+        Returns a ``SubsequenceResult`` — ``.offsets`` holds the match
+        start positions, pairwise at least ``config.exclusion_zone``
+        apart (default L//2).  ``config`` overrides the database's
+        search policy per call.
+        """
+        sub = self._require_subseq("search_subsequence")
+        return sub.search(query, config if config is not None
+                          else self.config)
 
     def submit(self, query: jnp.ndarray) -> Future:
         """Async search; a real queue on the "engine" backend, an
@@ -151,6 +224,7 @@ class TimeSeriesDB:
         backend serialises inserts against in-flight batches — else
         straight into the index.  Accepts (m,) or (B, m).
         """
+        self._reject_subseq("add")
         series = jnp.asarray(series)
         if series.ndim == 1:
             series = series[None, :]
@@ -158,6 +232,13 @@ class TimeSeriesDB:
             self._searcher.insert(series)
         else:
             self.index.insert(series)
+
+    def extend_stream(self, tail) -> int:
+        """Append points to a stream-built database; exactly the windows
+        they complete are rolling-encoded and folded in (signatures
+        bit-identical to a full rebuild).  Returns the number of new
+        windows now searchable."""
+        return self._require_subseq("extend_stream").extend_stream(tail)
 
     def add_stream(self, series: jnp.ndarray, *, seq: Optional[int] = None,
                    shard: str = "local") -> None:
@@ -171,6 +252,7 @@ class TimeSeriesDB:
         along and merges into the persisted ``cs/agg`` at flush time.
         Accepts ``(m,)`` or ``(B, m)``.
         """
+        self._reject_subseq("add_stream")
         if self._ingestor is None:
             from repro.streaming import StreamIngestor
             self._ingestor = StreamIngestor(
@@ -218,6 +300,8 @@ class TimeSeriesDB:
         sketch aggregate, which persists under ``encoder/cs/agg`` so the
         reloaded database keeps ingesting where this one stopped.
         """
+        if self._subseq is not None:
+            return self._subseq.save(directory, self.config)
         self.flush()
         if self._searcher is not None:
             self._searcher.flush()
@@ -234,6 +318,15 @@ class TimeSeriesDB:
         restored index answers bit-identical top-k to the pre-save index
         and still accepts streaming ``add()``.
         """
+        from repro.subseq import is_subseq_dir
+        if is_subseq_dir(directory):
+            from repro.subseq import SubsequenceIndex
+            sub, saved_cfg = SubsequenceIndex.load(directory)
+            db = cls(sub.inner,
+                     config if config is not None else saved_cfg,
+                     mesh=mesh)
+            db._subseq = sub
+            return db
         index, saved_cfg = persistence.load_database(directory)
         cfg = config if config is not None else saved_cfg
         db = cls(index, cfg, mesh=mesh)
@@ -281,7 +374,10 @@ class TimeSeriesDB:
 
     @property
     def length(self) -> int:
-        """Series length m (None-safe only when series are stored)."""
+        """Series length m — the indexed window length L on a
+        stream-built database (what a query must measure either way)."""
+        if self._subseq is not None:
+            return int(self._subseq.length)
         return int(self.index.series.shape[1])
 
     def __len__(self) -> int:

@@ -1,0 +1,91 @@
+"""LRU query-signature cache — repeated queries skip encode entirely.
+
+Encode is recomputed per query and is ~25 % of query time at smoke
+scale; repeated-query traffic (monitoring dashboards re-issuing the
+same probe, canary queries, retry storms) pays it for nothing.  A
+:class:`SignatureCache` memoises encoded signatures keyed by the query's
+*content* — a blake2b digest of its raw float32 bytes (+ shape/dtype) —
+together with the :class:`~repro.encoders.base.IndexSpec`, the build
+backend, and an encode-variant tag (plain / keys / multiprobe-o), so a
+hit is guaranteed to return exactly the array the encoder would have
+produced: cached values are bit-identical, results are unchanged.
+
+One cache instance lives per index (lazily, see
+``SSHIndex.query_signature_cached``) and is bounded LRU; the hit/miss
+counters surface as ``SearchStats.sig_cache_hit`` and
+``ServingMetrics.snapshot()["sig_cache_hits_total"]``.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+from collections import OrderedDict
+from typing import Hashable, Optional, Tuple
+
+import numpy as np
+
+#: Default per-index capacity — signatures are (K,) int32 / (L,) uint32
+#: rows, so even a generous cache is a few hundred KB.
+DEFAULT_CAPACITY = 512
+
+
+def series_digest(series) -> bytes:
+    """Content hash of a query series: raw bytes + shape + dtype.
+
+    The array is canonicalised to contiguous float32 first — the same
+    normalisation every encode path applies — so a float64 list and the
+    equivalent float32 array share one cache line.
+    """
+    arr = np.ascontiguousarray(np.asarray(series, np.float32))
+    h = hashlib.blake2b(digest_size=16)
+    h.update(str(arr.shape).encode())
+    h.update(arr.tobytes())
+    return h.digest()
+
+
+class SignatureCache:
+    """Bounded LRU of encoded query signatures.  Thread-safe (the
+    serving engine's batcher thread and direct callers share one index)."""
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._lock = threading.Lock()
+        self._store: "OrderedDict[Tuple, np.ndarray]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def key(series, spec: Hashable, backend: str,
+            variant: str = "sig") -> Tuple:
+        """Cache key: (content digest, IndexSpec, backend, variant).
+
+        ``spec`` rides in the key directly (IndexSpec is frozen and
+        hashable), so indexes sharing one cache could never alias; the
+        backend tag keeps pallas/jnp encodes — bit-equal only where the
+        sign bits agree — apart; ``variant`` separates plain signatures
+        from band keys and per-offset multiprobe blocks.
+        """
+        return (series_digest(series), spec, backend, variant)
+
+    def get(self, key: Tuple) -> Optional[np.ndarray]:
+        with self._lock:
+            sig = self._store.get(key)
+            if sig is None:
+                self.misses += 1
+                return None
+            self._store.move_to_end(key)
+            self.hits += 1
+            return sig
+
+    def put(self, key: Tuple, sig) -> None:
+        with self._lock:
+            self._store[key] = np.asarray(sig)
+            self._store.move_to_end(key)
+            while len(self._store) > self.capacity:
+                self._store.popitem(last=False)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._store)

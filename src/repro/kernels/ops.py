@@ -66,6 +66,26 @@ def sketch_bits(x: jnp.ndarray, filters: jnp.ndarray, step: int,
     return (sketch_conv(x, filters, step, **kw) >= 0).astype(jnp.uint8)
 
 
+def sketch_bits_stream(stream: jnp.ndarray, filters: jnp.ndarray,
+                       stride: int, use_pallas: Optional[bool] = None,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Rolling-sketch primitive: sign bits of every stride-``stride``
+    filter projection of ONE long stream, (n,) x (W, F) -> (P, F) with
+    P = (n - W)//stride + 1.
+
+    The projection at absolute stream position p, <x[p:p+W], f>, does not
+    depend on which sliding window reads it — so a subsequence index
+    (``repro.subseq``) calls ``sketch_conv`` ONCE over the whole stream
+    at the gcd stride and gathers each window's taps from the shared
+    grid: O(N·W) filter work for all windows instead of O(N·L·W/h).
+    Each projection contracts exactly the same operand values as the
+    per-window call, so the gathered bits are bit-identical to sketching
+    every window separately.
+    """
+    return sketch_bits(stream[None, :], filters, stride,
+                       use_pallas=use_pallas, interpret=interpret)[0]
+
+
 def dtw_rerank(query: jnp.ndarray, candidates: jnp.ndarray,
                band: Optional[int],
                use_pallas: Optional[bool] = None,

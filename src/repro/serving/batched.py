@@ -92,24 +92,50 @@ def batch_probe(queries: jnp.ndarray, index: SSHIndex, top_c: int,
                 multiprobe_offsets: int = 1,
                 use_pallas: Optional[bool] = None,
                 interpret: bool = False,
-                timer: StageTimer = DISABLED):
+                timer: StageTimer = DISABLED,
+                probe_stats: Optional[dict] = None):
     """Stage 1+2 for a query block: (B, m) -> ids (B, C), counts (B, C).
 
     Per-row decisions identical to the sequential ``hash_probe``: the same
     collision counts feed the same ``lax.top_k`` (ties → lowest id).
     An enabled ``timer`` records the batched signature build as
     ``encode`` and the collision scan + top-C as ``probe``.
+
+    Rows ride the index's signature LRU: when EVERY row is cached the
+    batched encode dispatch is skipped entirely (``probe_stats`` gets
+    ``{"sig_cache_hit": B}``); a partial hit re-encodes the whole block
+    — one fused dispatch beats per-row gather/encode splicing — and
+    populates the cache, reporting 0 (no work was actually skipped).
+    Cached rows are the arrays the encoder produced, so candidate
+    decisions are unchanged either way.
     """
     b = queries.shape[0]
     top_c = min(top_c, int(index.signatures.shape[0]))
+    variant = (f"mp{multiprobe_offsets}" if multiprobe_offsets > 1
+               else "sig")
     with timer.stage("encode") as sync:
-        if multiprobe_offsets > 1:
+        cache = index._sig_cache()
+        rows = np.asarray(queries)
+        keys = [cache.key(rows[i], index.enc.spec, index.build_backend,
+                          variant) for i in range(b)]
+        cached = [cache.get(k) for k in keys]
+        hits = 0
+        if all(r is not None for r in cached):
+            sigs = jnp.asarray(np.stack(cached))          # (B, K)|(B, O, K)
+            hits = b
+        elif multiprobe_offsets > 1:
             sigs = index.query_signatures_batch_multiprobe(
                 queries, multiprobe_offsets)              # (B, O, K)
-            flat = sigs.reshape(-1, sigs.shape[-1])       # (B·O, K)
         else:
             sigs = index.query_signatures_batch(queries)  # (B, K)
-            flat = sigs
+        if not hits:
+            sig_rows = np.asarray(sigs)
+            for i in range(b):
+                cache.put(keys[i], sig_rows[i])
+        if probe_stats is not None:
+            probe_stats["sig_cache_hit"] = hits
+        flat = (sigs.reshape(-1, sigs.shape[-1])
+                if multiprobe_offsets > 1 else sigs)      # (B·O, K)
         if rank_by_signature:
             qk, db = flat, index.signatures
         else:
@@ -168,10 +194,12 @@ def ssh_search_batch(queries: jnp.ndarray, index: SSHIndex,
         use_pallas = ops.resolve_backend(config.backend)
 
     # -- stages 1+2: fused probe ------------------------------------------
+    probe_stats: dict = {}
     ids_j, vals_j = batch_probe(queries, index, c,
                                 rank_by_signature=config.rank_by_signature,
                                 multiprobe_offsets=config.multiprobe_offsets,
-                                use_pallas=use_pallas, timer=timer)
+                                use_pallas=use_pallas, timer=timer,
+                                probe_stats=probe_stats)
     ids = np.asarray(ids_j, np.int64)                     # (B, C)
     valid = np.asarray(vals_j) > 0                        # (B, C)
     empty = ~valid.any(axis=1)
@@ -188,6 +216,7 @@ def ssh_search_batch(queries: jnp.ndarray, index: SSHIndex,
         timer=timer)
     if stats is not None:
         stats.index_bytes = index.nbytes()
+        stats.sig_cache_hit = probe_stats.get("sig_cache_hit", 0)
 
     wall = time.perf_counter() - t0
     return BatchSearchResult(

@@ -223,6 +223,11 @@ def _stage_seconds(res: BatchSearchResult):
     return res.stats.stage_seconds if res.stats is not None else None
 
 
+def _sig_hits(res: BatchSearchResult) -> int:
+    """Queries in the batch whose encode came from the signature LRU."""
+    return res.stats.sig_cache_hit if res.stats is not None else 0
+
+
 @dataclasses.dataclass
 class _Request:
     query: jnp.ndarray
@@ -369,7 +374,8 @@ class ServingEngine:
             self._queue.qsize(),
             lb_pruned_frac=_lb_fracs(res),
             dtw_abandoned_frac=_abandon_fracs(res),
-            stage_seconds=_stage_seconds(res))
+            stage_seconds=_stage_seconds(res),
+            sig_cache_hits=_sig_hits(res))
         return [res.per_query(i) for i in range(b)]
 
     def flush_inserts(self) -> None:
@@ -466,4 +472,5 @@ class ServingEngine:
                 self._queue.qsize(),
                 lb_pruned_frac=_lb_fracs(res),
                 dtw_abandoned_frac=_abandon_fracs(res),
-                stage_seconds=_stage_seconds(res))
+                stage_seconds=_stage_seconds(res),
+                sig_cache_hits=_sig_hits(res))

@@ -111,6 +111,10 @@ class ServingMetrics:
         self.requests_total = 0
         self.batches_total = 0
         self.inserts_total = 0
+        # queries whose encode was served from the signature LRU
+        # (repro.encoders.sigcache) — repeated-query traffic shows up
+        # here instead of in the encode stage seconds
+        self.sig_cache_hits = 0
         self.queue_depth = 0
         # resident bytes of the served index (SSHIndex.nbytes) — a gauge,
         # refreshed per batch so streaming inserts/folds show up; the
@@ -130,8 +134,10 @@ class ServingMetrics:
                  pruned_by_hash_frac, pruned_total_frac,
                  depth_after: int, lb_pruned_frac=(),
                  dtw_abandoned_frac=(),
-                 stage_seconds: Optional[Dict[str, float]] = None) -> None:
+                 stage_seconds: Optional[Dict[str, float]] = None,
+                 sig_cache_hits: int = 0) -> None:
         with self._lock:
+            self.sig_cache_hits += int(sig_cache_hits)
             self.batches_total += 1
             self.requests_total += batch_size
             self.batch_size.record(batch_size)
@@ -172,6 +178,7 @@ class ServingMetrics:
                 "requests_total": self.requests_total,
                 "batches_total": self.batches_total,
                 "inserts_total": self.inserts_total,
+                "sig_cache_hits_total": self.sig_cache_hits,
                 "queue_depth": self.queue_depth,
                 "index_bytes": self.index_bytes,
                 "batch_size_mean": self.batch_size.mean,

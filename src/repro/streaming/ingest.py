@@ -34,10 +34,15 @@ import numpy as np
 @dataclasses.dataclass(frozen=True)
 class StreamArtifacts:
     """What a fold hands the index: pre-encoded rows in global seq order
-    plus the combined sketch (``None`` for non-sketching encoders)."""
-    series: np.ndarray          # (N, m) float32
-    signatures: np.ndarray      # (N, K) int32
-    keys: np.ndarray            # (N, L) uint32
+    plus the combined sketch (``None`` for non-sketching encoders).
+
+    ``series`` is ``None`` when any segment arrived pre-encoded without
+    its raw rows (``append_encoded``) — signature-only folds feed indexes
+    that do not store series (e.g. the subsequence index, whose raw data
+    is the stream itself)."""
+    series: Optional[np.ndarray]    # (N, m) float32, or None
+    signatures: np.ndarray          # (N, K) int32
+    keys: np.ndarray                # (N, L) uint32
     sketch: Optional[jnp.ndarray]
 
     @property
@@ -50,7 +55,7 @@ class _Segment:
     seq: int
     shard: str
     order: int                  # per-shard append counter (tie-break)
-    series: np.ndarray
+    series: Optional[np.ndarray]    # None for pre-encoded appends
     signatures: np.ndarray
     keys: np.ndarray
 
@@ -101,6 +106,45 @@ class StreamIngestor:
         if self._sketch is not None:
             self._sketch = self._sketch + self.encoder.sketch_batch(
                 xs, backend=self.backend)
+
+    def append_encoded(self, signatures, keys, *, series=None,
+                       seq: Optional[int] = None) -> None:
+        """Retain a pre-encoded block — signatures (B, K) + band keys
+        (B, L) computed elsewhere (e.g. the subsequence index's rolling
+        encoder), optionally with the raw rows.
+
+        Widths are validated against this shard's encoder so a fold can
+        never mix incompatible signatures.  Raw-series sketch updates
+        cannot happen without the rows, so a sketching encoder refuses
+        series-less appends rather than silently under-counting.
+        """
+        sigs = np.asarray(signatures)
+        ks = np.asarray(keys)
+        if sigs.ndim != 2 or ks.ndim != 2 or sigs.shape[0] != ks.shape[0]:
+            raise ValueError("append_encoded needs 2-D signatures/keys "
+                             f"with equal rows, got {sigs.shape} vs "
+                             f"{ks.shape}")
+        k, n_tables = self.encoder.num_hashes, self.encoder.num_tables
+        if sigs.shape[1] != k or ks.shape[1] != n_tables:
+            raise ValueError(
+                f"encoded widths {sigs.shape[1]}x{ks.shape[1]} do not "
+                f"match the encoder's K={k}, L={n_tables}")
+        if self._sketch is not None and series is None:
+            raise ValueError(
+                "sketching encoder cannot accept series-less encoded "
+                "appends (the shingle aggregate would under-count); "
+                "pass series= or use a non-sketching encoder")
+        if seq is None:
+            seq = self._auto_seq
+        self._auto_seq = max(self._auto_seq, int(seq) + 1)
+        xs = None if series is None else np.asarray(series, np.float32)
+        self._segments.append(_Segment(
+            seq=int(seq), shard=self.shard, order=self._order,
+            series=xs, signatures=sigs, keys=ks))
+        self._order += 1
+        if self._sketch is not None:
+            self._sketch = self._sketch + self.encoder.sketch_batch(
+                jnp.asarray(xs), backend=self.backend)
 
     def __len__(self) -> int:
         return sum(s.signatures.shape[0] for s in self._segments)
@@ -153,8 +197,10 @@ class StreamIngestor:
             raise ValueError("no appended series to fold")
         segs = sorted(self._segments,
                       key=lambda s: (s.seq, s.shard, s.order))
+        series = (None if any(s.series is None for s in segs) else
+                  np.concatenate([s.series for s in segs], axis=0))
         return StreamArtifacts(
-            series=np.concatenate([s.series for s in segs], axis=0),
+            series=series,
             signatures=np.concatenate([s.signatures for s in segs], axis=0),
             keys=np.concatenate([s.keys for s in segs], axis=0),
             sketch=self._sketch)

@@ -1,0 +1,26 @@
+"""repro.subseq — sliding-window subsequence search over long streams.
+
+Build once with a rolling encode (shared sketch grid + sparse CWS,
+DESIGN.md §10), search with the standard probe → cascade → DTW pipeline
+over lazily-gathered windows, grow with ``extend_stream``::
+
+    from repro.subseq import SubsequenceIndex
+    idx = SubsequenceIndex.build(stream, spec, length=128, hop=4)
+    res = idx.search(query, config)     # res.offsets — match positions
+
+The facade entry points live on ``repro.db.TimeSeriesDB``
+(``build_stream`` / ``search_subsequence`` / ``extend_stream``).
+"""
+from repro.subseq.index import SubsequenceIndex, SubsequenceResult
+from repro.subseq.persistence import (is_subseq_dir, load_subseq,
+                                      save_subseq)
+from repro.subseq.rolling import (delta_histograms, global_shingle_ids,
+                                  num_windows, rolling_signatures,
+                                  rolling_sketch_bits)
+
+__all__ = [
+    "SubsequenceIndex", "SubsequenceResult",
+    "rolling_signatures", "rolling_sketch_bits", "global_shingle_ids",
+    "delta_histograms", "num_windows",
+    "save_subseq", "load_subseq", "is_subseq_dir",
+]

@@ -1,0 +1,289 @@
+"""Subsequence index — every sliding window of a long stream (DESIGN.md §10).
+
+A :class:`SubsequenceIndex` ingests a stream once through the rolling
+encoder (:mod:`repro.subseq.rolling` — shared sketch grid + sparse CWS,
+O(N·W) total filter work) and stores only the per-window signatures and
+band keys next to the raw stream: the windows themselves are never
+materialised.  Search runs the standard three stages —
+
+  1. cached query signature (the index's LRU, same as ``SSHIndex``),
+  2. device collision probe over the (nw, K) window signatures,
+  3. the unified re-rank (``repro.core.rerank``) with survivor windows
+     *gathered lazily* from the stream (a survivor costs one (C, L)
+     slice, not an up-front (nw, L) copy) —
+
+followed by UCR-style trivial-match suppression: returned offsets are
+pairwise at least ``exclusion_zone`` apart (default L//2), selected
+greedily from a DTW-ranked oversampled pool.  Matching is on the RAW
+windows (no per-window z-normalisation) — that is what makes the rolling
+encode bit-identical to encoding each window separately, and what the
+exactness tests compare against (brute-force DTW over raw windows).
+
+``extend_stream`` appends tail points and rolls signatures for exactly
+the new windows (the suffix re-encode starts at the first new window's
+offset, so every projection sees the same operand values as a full
+rebuild — signatures are bit-identical to rebuilding from scratch),
+folding them in through the streaming ingest path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from types import SimpleNamespace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench.timing import STAGES, StageTimer
+from repro.core import rerank as rr
+from repro.core.index import SSHIndex, SSHParams
+from repro.core.search import SearchResult, hash_probe
+from repro.db.config import SearchConfig
+from repro.kernels import ops
+from repro.subseq.rolling import num_windows, rolling_signatures
+
+
+@dataclasses.dataclass
+class SubsequenceResult(SearchResult):
+    """Sequence-level ``SearchResult`` plus subsequence coordinates.
+
+    ``ids`` are window indices (offset = id · hop); ``offsets`` are the
+    matches' start positions in the stream, best first.
+    """
+    offsets: Optional[np.ndarray] = None   # (k,) stream start positions
+    n_windows: int = 0
+    stream_length: int = 0
+
+
+class _LazyWindows:
+    """Duck-typed ``index.series`` for the re-rank: row j is the stream
+    slice [j·h, j·h + L), gathered only when indexed — the re-rank's one
+    ``series[cand_ids]`` gather is the only window materialisation a
+    query pays."""
+
+    def __init__(self, stream: jnp.ndarray, length: int, hop: int):
+        self.stream = stream
+        self.length = length
+        self.hop = hop
+        self.shape = (num_windows(int(stream.shape[0]), length, hop),
+                      length)
+
+    def __getitem__(self, ids) -> jnp.ndarray:
+        idx = jnp.asarray(ids)
+        pos = idx[..., None] * self.hop + jnp.arange(self.length)
+        return self.stream[pos]
+
+
+@dataclasses.dataclass
+class SubsequenceIndex:
+    """Sliding-window index over one long stream.
+
+    ``inner`` is a stock :class:`SSHIndex` whose rows are the stream's
+    windows (``series=None`` — raw data lives on ``stream``), so the
+    probe, signature cache, persistence-shape validation, and streaming
+    fold all reuse the sequence-level machinery unchanged.
+    """
+    inner: SSHIndex
+    stream: np.ndarray            # (n,) float32 — the raw data
+    length: int                   # window length L
+    hop: int                      # window start spacing h
+    encode_seconds: float = 0.0   # cumulative rolling-encode wall clock
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def build(cls, stream, spec, *, length: int, hop: int = 1,
+              backend: str = "auto") -> "SubsequenceIndex":
+        """Index every length-``length`` window (starts 0, h, 2h, …) of
+        ``stream`` via one rolling encode.  ``spec`` is an ``IndexSpec``
+        (an ``SSHParams`` lowers via ``to_spec()``); ``backend`` pins the
+        resolved sketch kernel, exactly like ``SSHIndex.build``."""
+        from repro.encoders import make_encoder
+        if isinstance(spec, SSHParams):
+            spec = spec.to_spec()
+        stream = np.ascontiguousarray(np.asarray(stream,
+                                                 np.float32).ravel())
+        nw = num_windows(stream.shape[0], length, hop)
+        if nw == 0:
+            raise ValueError(
+                f"stream of {stream.shape[0]} points holds no window of "
+                f"length {length}")
+        resolved = ops.backend_name(ops.resolve_backend(backend))
+        enc = make_encoder(spec, length=length)
+        t0 = time.perf_counter()
+        sigs = rolling_signatures(jnp.asarray(stream), enc, length, hop,
+                                  backend=resolved)
+        keys = jax.block_until_ready(enc.band_keys(sigs))
+        dt = time.perf_counter() - t0
+        inner = SSHIndex(fns=None, signatures=sigs, keys=keys,
+                         series=None, encoder=enc, build_backend=resolved)
+        return cls(inner=inner, stream=stream, length=length, hop=hop,
+                   encode_seconds=dt)
+
+    # -- views -------------------------------------------------------------
+    @property
+    def num_windows(self) -> int:
+        return int(self.inner.signatures.shape[0])
+
+    def __len__(self) -> int:
+        return self.num_windows
+
+    @property
+    def encoder(self):
+        return self.inner.enc
+
+    @property
+    def build_backend(self) -> str:
+        return self.inner.build_backend
+
+    def offsets(self) -> np.ndarray:
+        """(nw,) stream start position of every indexed window."""
+        return np.arange(self.num_windows, dtype=np.int64) * self.hop
+
+    def window(self, j: int) -> np.ndarray:
+        """Window ``j``'s raw points (a stream view, not a copy)."""
+        lo = int(j) * self.hop
+        return self.stream[lo:lo + self.length]
+
+    def nbytes(self) -> int:
+        """Signatures + keys + encoder state + the raw stream itself."""
+        return self.inner.nbytes() + int(self.stream.nbytes)
+
+    # -- search ------------------------------------------------------------
+    def search(self, query, config: Optional[SearchConfig] = None
+               ) -> SubsequenceResult:
+        """Top-k non-trivially-overlapping windows by banded DTW.
+
+        The probe + re-rank run at an oversampled ``topk`` (enough DTW'd
+        survivors to fill k picks even when near-duplicate shifted
+        windows dominate the ranking), then matches are selected greedily
+        best-first, skipping any window within ``exclusion_zone`` points
+        of an already-picked offset.  Rank 1 equals the brute-force DTW
+        argmin (pinned by tests); deeper ranks are the standard UCR-style
+        approximation (exact within the DTW'd pool).
+        """
+        config = SearchConfig() if config is None else config
+        config.validate()
+        if config.subseq_window is not None \
+                and config.subseq_window != self.length:
+            raise ValueError(
+                f"config.subseq_window={config.subseq_window} does not "
+                f"match the indexed window length {self.length}")
+        t0 = time.perf_counter()
+        query = jnp.asarray(query, jnp.float32)
+        if query.shape != (self.length,):
+            raise ValueError(
+                f"query must be one window of shape ({self.length},), "
+                f"got {tuple(query.shape)}")
+        nw = self.num_windows
+        excl = (self.length // 2 if config.exclusion_zone is None
+                else int(config.exclusion_zone))
+        oversample = (max(2, excl // max(self.hop, 1) + 1)
+                      if excl > 0 else 1)
+
+        timer = StageTimer(enabled=config.stage_timings,
+                           prefill=STAGES + ("encode_amortized",))
+        probe_stats: dict = {}
+        cand_ids = hash_probe(query, self.inner, config.top_c,
+                              rank_by_signature=config.rank_by_signature,
+                              multiprobe_offsets=config.multiprobe_offsets,
+                              topk=config.topk, backend=config.backend,
+                              timer=timer, probe_stats=probe_stats)
+        n_hash = int(cand_ids.shape[0])
+        topk_eff = min(n_hash, config.topk * oversample)
+
+        if timer.enabled:
+            # the per-query share of the build-side rolling encode — the
+            # amortised stage a per-window encoder would pay at query
+            # time; published through stats.stage_seconds by rerank
+            timer.timings["encode_amortized"] = \
+                self.encode_seconds / max(nw, 1)
+        adapter = SimpleNamespace(
+            series=_LazyWindows(jnp.asarray(self.stream), self.length,
+                                self.hop),
+            env_radius=None, env_upper=None, env_lower=None)
+        ids, dists, stats = rr.rerank(query, cand_ids, adapter, topk_eff,
+                                      config.band,
+                                      use_lb_cascade=config.use_lb_cascade,
+                                      backend=config.backend,
+                                      seed_size=config.seed_size,
+                                      early_abandon=config.early_abandon,
+                                      timer=timer)
+
+        # UCR-style exclusion zone: greedy best-first, skip overlaps
+        picked: list = []
+        sel: list = []
+        for i in range(ids.shape[0]):
+            off = int(ids[i]) * self.hop
+            if all(abs(off - p) >= excl for p in picked):
+                sel.append(i)
+                picked.append(off)
+                if len(sel) == config.topk:
+                    break
+        sel_a = np.asarray(sel, np.int64)
+        out_ids = np.asarray(ids)[sel_a]
+        out_dists = np.asarray(dists)[sel_a]
+
+        stats.n_windows = nw
+        stats.sig_cache_hit = probe_stats.get("sig_cache_hit", 0)
+        stats.index_bytes = self.nbytes()
+        wall = time.perf_counter() - t0
+        return SubsequenceResult(
+            ids=out_ids, dists=out_dists,
+            n_candidates=stats.n_dtw, n_database=nw,
+            pruned_by_hash_frac=1.0 - n_hash / nw,
+            pruned_total_frac=1.0 - stats.n_dtw / nw,
+            wall_seconds=wall, stats=stats,
+            offsets=out_ids * self.hop, n_windows=nw,
+            stream_length=int(self.stream.shape[0]))
+
+    # -- growth ------------------------------------------------------------
+    def extend_stream(self, tail) -> int:
+        """Append points; index exactly the windows they complete.
+
+        Only the stream suffix from the first new window's offset is
+        re-encoded — every projection there contracts the same operand
+        values a full rebuild would, so the appended signatures are
+        bit-identical to rebuilding over the whole extended stream.
+        Returns the number of new windows.
+        """
+        from repro.streaming.ingest import StreamIngestor
+        tail = np.asarray(tail, np.float32).ravel()
+        if tail.size == 0:
+            return 0
+        new_stream = np.ascontiguousarray(
+            np.concatenate([self.stream, tail]))
+        nw_old = self.num_windows
+        n_new = num_windows(new_stream.shape[0], self.length,
+                            self.hop) - nw_old
+        if n_new > 0:
+            first_off = nw_old * self.hop
+            t0 = time.perf_counter()
+            sigs = rolling_signatures(
+                jnp.asarray(new_stream[first_off:]), self.inner.enc,
+                self.length, self.hop, backend=self.inner.build_backend)
+            keys = jax.block_until_ready(self.inner.enc.band_keys(sigs))
+            self.encode_seconds += time.perf_counter() - t0
+            # fold through the streaming ingest path (seq-ordered,
+            # width-validated), series-less: the stream IS the raw data
+            ing = StreamIngestor(self.inner.enc, shard="subseq",
+                                 backend=self.inner.build_backend)
+            ing.append_encoded(np.asarray(sigs), np.asarray(keys))
+            art = ing.artifacts()
+            self.inner.insert_encoded(art.series, art.signatures,
+                                      art.keys)
+        self.stream = new_stream
+        return max(n_new, 0)
+
+    # -- persistence -------------------------------------------------------
+    def save(self, directory, config: Optional[SearchConfig] = None,
+             n_shards: int = 1):
+        from repro.subseq.persistence import save_subseq
+        return save_subseq(directory, self, config, n_shards=n_shards)
+
+    @classmethod
+    def load(cls, directory):
+        """(index, config) — see :func:`repro.subseq.persistence.load_subseq`."""
+        from repro.subseq.persistence import load_subseq
+        return load_subseq(directory)

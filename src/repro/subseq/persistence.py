@@ -1,0 +1,160 @@
+"""Subsequence-index persistence — save/load a ``SubsequenceIndex``.
+
+Mirrors :mod:`repro.db.persistence` (same checkpoint layer, same
+spec-pinning discipline) for stream-built databases::
+
+    <dir>/subseq_db.json     # IndexSpec, window geometry, array manifest
+    <dir>/index/step_*/      # repro.checkpoint shard(s) + manifest
+
+Everything needed for bit-identical answers — and for continuing to
+``extend_stream`` — is stored: the raw stream, the per-window
+signatures + band keys, and the encoder's materialised random state.
+``load`` rebuilds the encoder through the registry and REFUSES a
+spec/artifact mismatch (foreign array shapes, signature widths that
+disagree with the spec's K/L, or a window count that disagrees with the
+stored stream geometry), so a tampered or mixed-up directory fails
+loudly instead of answering from inconsistent hash functions.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, \
+    save_checkpoint
+from repro.core.index import SSHIndex
+from repro.db.config import SearchConfig
+from repro.encoders import IndexSpec, encoder_class
+from repro.kernels import ops
+from repro.subseq.rolling import num_windows
+
+FORMAT_VERSION = 1
+META_FILE = "subseq_db.json"
+ARRAYS_SUBDIR = "index"
+_ENC_PREFIX = "encoder/"
+
+
+def save_subseq(directory, index, config: Optional[SearchConfig] = None,
+                n_shards: int = 1) -> Path:
+    """Persist ``index`` (and optionally a ``config``) under ``directory``.
+
+    Atomic at both levels (checkpoint publish + meta ``os.replace``),
+    monotonic-step + keep=2 like the sequence-level saver, so re-saving
+    into a live directory never corrupts the previous database.
+    """
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    arrays: Dict[str, np.ndarray] = {
+        "stream": np.asarray(index.stream, np.float32),
+        "signatures": np.asarray(index.inner.signatures),
+        "keys": np.asarray(index.inner.keys),
+    }
+    for name, arr in index.inner.enc.arrays().items():
+        arrays[f"{_ENC_PREFIX}{name}"] = np.asarray(arr)
+
+    prev = latest_step(directory / ARRAYS_SUBDIR)
+    step = 0 if prev is None else prev + 1
+    save_checkpoint(directory / ARRAYS_SUBDIR, step=step, tree=arrays,
+                    keep=2, n_shards=n_shards)
+
+    meta: Dict[str, Any] = {
+        "format_version": FORMAT_VERSION,
+        "checkpoint_step": step,
+        "spec": index.inner.enc.spec.to_dict(),
+        "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in arrays.items()},
+        "length": int(index.length),
+        "hop": int(index.hop),
+        "n_windows": index.num_windows,
+        "stream_length": int(index.stream.shape[0]),
+        "build_backend": index.inner.build_backend,
+        "encode_seconds": float(index.encode_seconds),
+        "config": config.to_dict() if config is not None else None,
+    }
+    tmp = directory / f".{META_FILE}.tmp{os.getpid()}"
+    tmp.write_text(json.dumps(meta, indent=1))
+    os.replace(tmp, directory / META_FILE)
+    return directory
+
+
+def load_subseq(directory) -> Tuple["SubsequenceIndex",
+                                    Optional[SearchConfig]]:
+    """Inverse of :func:`save_subseq` — ``(index, config)``.
+
+    The loaded index answers queries bit-identically to the saved one
+    (same signatures, same encoder arrays, same pinned build backend)
+    and keeps accepting ``extend_stream`` (the raw stream and encoder
+    state are both restored).
+    """
+    from repro.subseq.index import SubsequenceIndex
+    directory = Path(directory)
+    meta_path = directory / META_FILE
+    if not meta_path.exists():
+        raise FileNotFoundError(f"no subsequence database at {directory} "
+                                f"(missing {META_FILE})")
+    meta = json.loads(meta_path.read_text())
+    if meta.get("format_version") != FORMAT_VERSION:
+        raise ValueError(
+            f"unsupported subsequence database format_version "
+            f"{meta.get('format_version')!r} (this release reads "
+            f"{FORMAT_VERSION})")
+
+    tree_like = {k: np.zeros(info["shape"], dtype=np.dtype(info["dtype"]))
+                 for k, info in meta["arrays"].items()}
+    _, arrays = restore_checkpoint(directory / ARRAYS_SUBDIR, tree_like,
+                                   step=meta.get("checkpoint_step"))
+
+    spec = IndexSpec.from_dict(meta["spec"])
+    enc = encoder_class(spec.encoder)(spec.validate())
+    enc.load_arrays({k[len(_ENC_PREFIX):]: v for k, v in arrays.items()
+                     if k.startswith(_ENC_PREFIX)})
+    if int(np.shape(arrays["signatures"])[-1]) != enc.num_hashes:
+        raise ValueError(
+            f"saved signatures have "
+            f"K={int(np.shape(arrays['signatures'])[-1])} but the saved "
+            f"spec implies K={enc.num_hashes} — spec/artifact mismatch")
+    if int(np.shape(arrays["keys"])[-1]) != enc.num_tables:
+        raise ValueError(
+            f"saved band keys have "
+            f"L={int(np.shape(arrays['keys'])[-1])} but the saved spec "
+            f"implies L={enc.num_tables} — spec/artifact mismatch")
+    length, hop = int(meta["length"]), int(meta["hop"])
+    stream = np.ascontiguousarray(np.asarray(arrays["stream"],
+                                             np.float32))
+    nw = int(np.shape(arrays["signatures"])[0])
+    if num_windows(stream.shape[0], length, hop) != nw:
+        raise ValueError(
+            f"saved stream of {stream.shape[0]} points implies "
+            f"{num_windows(stream.shape[0], length, hop)} windows at "
+            f"L={length}, h={hop}, but {nw} signatures are stored — "
+            "geometry/artifact mismatch")
+
+    build_backend = meta.get("build_backend", "jnp")
+    if build_backend == "pallas" and \
+            ops.backend_name(ops.resolve_backend("auto")) != "pallas":
+        import warnings
+        warnings.warn(
+            "this subsequence database was built with the Pallas kernel "
+            "backend; on a non-TPU host its queries/extends run the "
+            "kernel in interpret mode (orders of magnitude slower). "
+            "Rebuild with backend='jnp' for CPU serving.",
+            RuntimeWarning, stacklevel=3)
+
+    inner = SSHIndex(fns=None, signatures=arrays["signatures"],
+                     keys=arrays["keys"], series=None, encoder=enc,
+                     build_backend=build_backend)
+    index = SubsequenceIndex(
+        inner=inner, stream=stream, length=length, hop=hop,
+        encode_seconds=float(meta.get("encode_seconds", 0.0)))
+    config = (SearchConfig.from_dict(meta["config"])
+              if meta.get("config") else None)
+    return index, config
+
+
+def is_subseq_dir(directory) -> bool:
+    """True when ``directory`` holds a saved subsequence database."""
+    return (Path(directory) / META_FILE).exists()

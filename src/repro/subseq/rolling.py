@@ -1,0 +1,292 @@
+"""Rolling sketch + sparse window signatures (DESIGN.md §10).
+
+A subsequence index encodes EVERY sliding window (length L, hop h) of a
+long stream.  Encoding the windows independently costs O(N·L·W/h)
+filter work plus a dense O(K·D) CWS per window; the rolling path shares
+three stages across overlapping windows:
+
+* **sketch** — the strided projection at absolute stream position p,
+  ``<x[p:p+W], f>``, is window-independent: window j's i-th sketch tap
+  reads position j·h + i·δ.  All taps live on the stride-g grid with
+  g = gcd(h, δ), so ONE ``sketch_conv`` pass over the stream at stride g
+  (O(N·W) total) followed by an index gather yields every window's
+  bit-profile — bit-identical to sketching each window separately,
+  because each projection contracts exactly the same operand values.
+* **shingle ids** — when h % δ == 0 every window lies on one stride-δ
+  bit grid, so n-gram packing runs once over the global bit string and
+  window j takes the column slice [j·h/δ, j·h/δ + S): consecutive
+  windows share all but h/δ shingles.  That is the *delta-histogram
+  invariant* — window j+1's histogram is window j's minus the h/δ
+  outgoing shingles plus the h/δ incoming ones — pinned by
+  :func:`delta_histograms` (a ``lax.scan`` carrying one dense
+  histogram, the reference the sparse fast path is tested against).
+* **sparse CWS** — a window holds only S = N_B − n + 1 shingle slots
+  per filter (≪ the 2^n histogram space), so the CWS argmin runs over
+  the active bins only (params gathered per id, slot weight = the
+  slot's multiplicity) instead of the dense D-bin grid: O(K·S) per
+  window instead of O(K·D).  Slots are sorted by id so exact value
+  ties resolve to the smallest bin index, matching the dense
+  ``cws_hash`` argmin tie-break bit for bit.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import minhash, shingle
+from repro.encoders.pipeline import (CWSHasher, GaussianFilterSketcher,
+                                     NgramShingler, PipelineEncoder)
+from repro.kernels import ops
+
+#: Window rows per compiled chunk on the sparse path — bounds the
+#: (K, chunk, S') gathered-param temporaries while keeping one traced
+#: program for arbitrarily long streams (the tail chunk edge-pads).
+SPARSE_CHUNK = 2048
+#: Dense-fallback chunk (materialises (chunk, D) histograms).
+DENSE_CHUNK = 256
+
+
+def num_windows(stream_len: int, length: int, hop: int) -> int:
+    """Sliding-window count: 0 when the stream is shorter than one
+    window, else (n − L)//h + 1."""
+    if length < 1 or hop < 1:
+        raise ValueError(f"length and hop must be >= 1, got length="
+                         f"{length}, hop={hop}")
+    if stream_len < length:
+        return 0
+    return (stream_len - length) // hop + 1
+
+
+def rolling_sketch_bits(stream: jnp.ndarray, filters: jnp.ndarray,
+                        step: int, length: int, hop: int, *,
+                        use_pallas: Optional[bool] = None,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Bit-profiles of every sliding window via one shared projection.
+
+    stream (n,), filters (W, F) -> (num_windows, N_B, F) uint8, with
+    N_B = (L − W)//δ + 1 — bit-identical to
+    ``ops.sketch_bits(windows, filters, step)`` over the materialised
+    windows (same backend), at O(N·W) total filter work.
+    """
+    stream = jnp.asarray(stream)
+    if stream.ndim != 1:
+        raise ValueError(f"stream must be 1-D, got shape {stream.shape}")
+    w = int(filters.shape[0])
+    if length < w:
+        raise ValueError(f"window length {length} < filter width {w}")
+    nw = num_windows(int(stream.shape[0]), length, hop)
+    if nw == 0:
+        raise ValueError(
+            f"stream of {int(stream.shape[0])} points holds no window of "
+            f"length {length}")
+    n_b = (length - w) // step + 1
+    g = math.gcd(hop, step)
+    gbits = ops.sketch_bits_stream(stream, filters, g,
+                                   use_pallas=use_pallas,
+                                   interpret=interpret)      # (P, F)
+    # window j's i-th tap sits at absolute position j·h + i·δ — always a
+    # multiple of g, and ≤ n − W, so it indexes the shared grid exactly
+    grid = (np.arange(nw, dtype=np.int64)[:, None] * hop
+            + np.arange(n_b, dtype=np.int64)[None, :] * step) // g
+    return gbits[jnp.asarray(grid)]                          # (nw, N_B, F)
+
+
+def global_shingle_ids(gbits: jnp.ndarray, ngram: int) -> jnp.ndarray:
+    """Offset-adjusted n-gram ids of the global bit string.
+
+    gbits (P, F) -> (F, P − n + 1) int32 — filter f's id at column i is
+    ``pack(bits[i:i+n, f]) + (f << n)``, the exact flat bin index
+    ``shingle_histogram`` scatters into.  Aligned windows (h % δ == 0)
+    take contiguous column slices of this array, sharing all but h/δ
+    ids with each neighbour.
+    """
+    ids = shingle.pack_ngrams(gbits.T, ngram)                # (F, P-n+1)
+    offs = (jnp.arange(gbits.shape[1], dtype=jnp.int32) << ngram)[:, None]
+    return ids + offs
+
+
+@functools.partial(jax.jit, static_argnames=("s", "shift", "nw", "dim"))
+def delta_histograms(global_ids: jnp.ndarray, s: int, shift: int,
+                     nw: int, dim: int) -> jnp.ndarray:
+    """Reference delta-histogram scan over aligned windows.
+
+    ``global_ids`` (F, P') from :func:`global_shingle_ids`; window j
+    covers columns [j·shift, j·shift + s).  Returns (nw, dim) int32
+    histograms computed *incrementally*: histogram j equals histogram
+    j−1 minus the ``shift`` outgoing columns plus the ``shift`` incoming
+    ones — the invariant that lets the production path carry only the
+    per-window active slots.  Tests pin this against per-window
+    ``shingle_histogram``; production encoding never materialises dense
+    histograms (use a small ``dim`` here).
+    """
+    f = global_ids.shape[0]
+    hist0 = jnp.zeros((dim,), jnp.int32).at[
+        global_ids[:, :s].reshape(-1)].add(1)
+
+    def step(hist, j):
+        out_cols = jax.lax.dynamic_slice(
+            global_ids, (0, (j - 1) * shift), (f, shift))
+        in_cols = jax.lax.dynamic_slice(
+            global_ids, (0, (j - 1) * shift + s), (f, shift))
+        hist = hist.at[out_cols.reshape(-1)].add(-1)
+        hist = hist.at[in_cols.reshape(-1)].add(1)
+        return hist, hist
+
+    if nw == 1:
+        return hist0[None]
+    _, hists = jax.lax.scan(step, hist0, jnp.arange(1, nw))
+    return jnp.concatenate([hist0[None], hists], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# sparse CWS over the active slots
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _sparse_cws(ids: jnp.ndarray, r: jnp.ndarray, log_c: jnp.ndarray,
+                beta: jnp.ndarray) -> jnp.ndarray:
+    """0-bit CWS over each row's active bins only.
+
+    ids (C, S') int32, ascending per row (ties in the argmin then
+    resolve to the smallest bin, matching dense ``cws_hash``); CWS
+    params (K, D).  Returns (C, K) int32 — the same elementwise
+    arithmetic as ``minhash.cws_hash`` evaluated at the active bins,
+    with each slot's weight its multiplicity within the row (== the
+    dense histogram count at that bin).
+    """
+    w = jnp.sum(ids[:, :, None] == ids[:, None, :], axis=-1)  # (C, S')
+    w = w.astype(jnp.float32)
+    logw = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)), 0.0)
+    rg, cg, bg = r[:, ids], log_c[:, ids], beta[:, ids]       # (K, C, S')
+    t = jnp.floor(logw[None] / rg + bg)
+    ln_a = cg - rg * (t - bg) - rg
+    slot = jnp.argmin(ln_a, axis=2)                           # (K, C)
+    return jnp.take_along_axis(ids, slot.T, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("ngram",))
+def _window_ids_from_bits(bits: jnp.ndarray, ngram: int) -> jnp.ndarray:
+    """Per-window sorted flat shingle ids: (C, N_B, F) -> (C, F·S)."""
+    c, n_b, f = bits.shape
+    ids = shingle.pack_ngrams(bits.transpose(0, 2, 1), ngram)  # (C, F, S)
+    offs = (jnp.arange(f, dtype=jnp.int32) << ngram)[None, :, None]
+    return jnp.sort((ids + offs).reshape(c, -1), axis=1)
+
+
+@jax.jit
+def _window_ids_from_global(gids: jnp.ndarray, starts: jnp.ndarray,
+                            col: jnp.ndarray) -> jnp.ndarray:
+    """Aligned-window slice gather: global ids (F, P'), window start
+    columns (C,), col offsets (S,) -> sorted (C, F·S)."""
+    cols = starts[:, None] + col[None, :]                     # (C, S)
+    ids = gids[:, cols]                                       # (F, C, S)
+    c = starts.shape[0]
+    return jnp.sort(ids.transpose(1, 0, 2).reshape(c, -1), axis=1)
+
+
+def _chunked(fn, blocks, n, chunk):
+    """Run ``fn`` over fixed-size row chunks of each array in ``blocks``
+    (edge-padded tail so one traced program serves any n)."""
+    out = []
+    for lo in range(0, n, chunk):
+        hi = min(lo + chunk, n)
+        parts = [b[lo:hi] for b in blocks]
+        pad = chunk - (hi - lo)
+        if pad:
+            parts = [jnp.concatenate(
+                [p, jnp.broadcast_to(p[-1:], (pad,) + p.shape[1:])])
+                for p in parts]
+        res = fn(*parts)
+        out.append(res[:hi - lo] if pad else res)
+    return jnp.concatenate(out, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# the public entry: signatures of every window
+# ---------------------------------------------------------------------------
+
+def _check_encoder(encoder) -> None:
+    if not isinstance(encoder, PipelineEncoder) \
+            or not isinstance(encoder.sketcher, GaussianFilterSketcher):
+        raise ValueError(
+            "subsequence indexing requires a strided-filter sketch "
+            "encoder (PipelineEncoder with a GaussianFilterSketcher); "
+            f"got {type(encoder).__name__}")
+    if not encoder.materialized:
+        raise ValueError("encoder is not materialized")
+
+
+def rolling_signatures(stream: jnp.ndarray, encoder, length: int,
+                       hop: int, *, backend: str = "auto",
+                       chunk: int = SPARSE_CHUNK) -> jnp.ndarray:
+    """CWS signatures of every sliding window of ``stream``.
+
+    Bit-identical to ``encoder.encode_batch(windows, backend=...)`` over
+    the materialised windows, at O(N·W) shared sketch work plus O(K·S)
+    sparse CWS per window (S = N_B − n + 1 active slots) instead of
+    O(L·W/δ + K·D) per window.  Returns (num_windows, K) int32.
+
+    The sparse path requires the stock n-gram shingler + CWS hasher
+    (the ``"ssh"`` encoder family); other stage combinations fall back
+    to dense per-window histograms over the shared rolling sketch.
+    """
+    _check_encoder(encoder)
+    stream = jnp.asarray(stream, jnp.float32)
+    state = encoder.state()
+    sketcher, shingler, hasher = \
+        encoder.sketcher, encoder.shingler, encoder.hasher
+    step = sketcher.step
+    w = sketcher.window
+    nw = num_windows(int(stream.shape[0]), length, hop)
+    if nw == 0:
+        raise ValueError(
+            f"stream of {int(stream.shape[0])} points holds no window of "
+            f"length {length}")
+    n_b = (length - w) // step + 1
+    use_pallas = PipelineEncoder._use_pallas(backend)
+
+    fast = type(shingler) is NgramShingler and isinstance(hasher, CWSHasher)
+    if not fast:
+        bits = rolling_sketch_bits(stream, state["filters"], step, length,
+                                   hop, use_pallas=use_pallas)
+        fn = getattr(encoder, "_subseq_dense_fn", None)
+        if fn is None:
+            fn = jax.jit(jax.vmap(
+                lambda b: hasher.hash(shingler.histogram(b), state)))
+            encoder._subseq_dense_fn = fn
+        return _chunked(fn, [bits], nw, min(chunk, DENSE_CHUNK))
+
+    ngram = shingler.ngram
+    if n_b < ngram:
+        raise ValueError(
+            f"window length {length} yields only {n_b} sketch bits — "
+            f"fewer than the shingle length {ngram}")
+    s = n_b - ngram + 1
+    params = CWSHasher.cws_params(state)
+
+    if hop % step == 0:
+        # aligned: all windows share one stride-δ bit grid — sketch AND
+        # n-gram packing run once over the stream; window j is the
+        # column slice [j·h/δ, j·h/δ + S) of the global ids
+        gbits = ops.sketch_bits_stream(stream, state["filters"], step,
+                                       use_pallas=use_pallas)
+        gids = global_shingle_ids(gbits, ngram)               # (F, P')
+        starts = jnp.arange(nw, dtype=jnp.int32) * (hop // step)
+        col = jnp.arange(s, dtype=jnp.int32)
+        ids_fn = functools.partial(_window_ids_from_global, gids, col=col)
+        sig_fn = lambda st: _sparse_cws(ids_fn(st), params.r,
+                                        params.log_c, params.beta)
+        return _chunked(sig_fn, [starts], nw, chunk)
+
+    # unaligned hops still share the stride-gcd sketch grid; packing is
+    # per window (cheap: F·S·n static shifts)
+    bits = rolling_sketch_bits(stream, state["filters"], step, length,
+                               hop, use_pallas=use_pallas)
+    sig_fn = lambda b: _sparse_cws(_window_ids_from_bits(b, ngram),
+                                   params.r, params.log_c, params.beta)
+    return _chunked(sig_fn, [bits], nw, chunk)

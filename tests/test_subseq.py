@@ -1,0 +1,323 @@
+"""repro.subseq (ISSUE 8, DESIGN.md §10): rolling sketch, sparse window
+signatures, subsequence search, and the query-signature LRU.
+
+The acceptance contract: the rolling encode is bit-identical to encoding
+every materialised window separately (sketch bits AND signatures, any
+length/hop/stride mix); ``search_subsequence`` top-1 equals brute-force
+sliding-window DTW on a planted match; returned offsets respect the
+exclusion zone; save/load answers bit-identically and keeps accepting
+``extend_stream`` (== a from-scratch rebuild); repeated queries hit the
+signature cache on every entry point.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip below; the rest still run
+    given = settings = st = None
+
+from repro.core import shingle
+from repro.core.search import brute_force_topk, ssh_search
+from repro.data.timeseries import extract_subsequences, synthetic_ecg
+from repro.db import SearchConfig, TimeSeriesDB
+from repro.encoders import IndexSpec, make_encoder
+from repro.kernels import ops
+from repro.serving.batched import ssh_search_batch
+from repro.serving.metrics import ServingMetrics
+from repro.streaming import StreamIngestor
+from repro.subseq import (SubsequenceIndex, delta_histograms,
+                          global_shingle_ids, num_windows,
+                          rolling_signatures, rolling_sketch_bits)
+from repro.subseq.rolling import SPARSE_CHUNK
+
+pytestmark = pytest.mark.subseq
+
+SMOKE = dict(window=24, step=3, ngram=8, num_filters=2,
+             num_hashes=40, num_tables=20)
+SPEC = IndexSpec(encoder="ssh", params=SMOKE)
+L, HOP = 128, 4
+CFG = SearchConfig(topk=5, top_c=128, band=8, searcher="local",
+                   subseq_window=L, subseq_hop=HOP)
+
+
+def _windows(stream, length, hop):
+    nw = num_windows(len(stream), length, hop)
+    return np.stack([stream[j * hop:j * hop + length] for j in range(nw)])
+
+
+@pytest.fixture(scope="module")
+def stream():
+    s = np.asarray(synthetic_ecg(3000, seed=3), np.float32)
+    return s
+
+
+@pytest.fixture(scope="module")
+def sub(stream):
+    return SubsequenceIndex.build(stream, SPEC, length=L, hop=HOP,
+                                  backend="jnp")
+
+
+# ---------------------------------------------------------------------------
+# rolling == batch, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hop", [3, 4, 5, 6, 1])
+def test_rolling_signatures_match_batch(stream, hop):
+    """Aligned (hop % δ == 0) and unaligned hops both reproduce the
+    per-window ``encode_batch`` signatures exactly."""
+    enc = make_encoder(SPEC, length=L)
+    wins = jnp.asarray(_windows(stream[:1200], L, hop))
+    want = np.asarray(enc.encode_batch(wins, backend="jnp"))
+    got = np.asarray(rolling_signatures(jnp.asarray(stream[:1200]), enc,
+                                        L, hop, backend="jnp"))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_rolling_signatures_chunk_invariant(stream):
+    """The chunked sparse program is a pure tiling: tiny chunks (edge
+    padding exercised) equal one big chunk."""
+    enc = make_encoder(SPEC, length=L)
+    s = jnp.asarray(stream[:900])
+    a = np.asarray(rolling_signatures(s, enc, L, HOP, chunk=7))
+    b = np.asarray(rolling_signatures(s, enc, L, HOP, chunk=SPARSE_CHUNK))
+    np.testing.assert_array_equal(a, b)
+
+
+if st is None:
+    def test_rolling_sketch_bits_property():
+        pytest.importorskip("hypothesis")
+else:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 4), st.integers(1, 7), st.integers(0, 40),
+           st.integers(0, 150), st.sampled_from([1, 2, 3]),
+           st.integers(0, 2 ** 31 - 1))
+    def test_rolling_sketch_bits_property(step, hop, extra_len, extra_n,
+                                          f, seed):
+        """Any (δ, h, L, N, F) mix — including L not a multiple of the
+        128-lane tile and odd gcd(h, δ) grids — yields window bit
+        profiles identical to sketching each materialised window."""
+        rng = np.random.default_rng(seed)
+        w = 8
+        length = w + extra_len          # >= one tap, arbitrary alignment
+        n = length + extra_n
+        stream = rng.standard_normal(n).astype(np.float32)
+        filters = jnp.asarray(
+            rng.standard_normal((w, f)).astype(np.float32))
+        wins = jnp.asarray(_windows(stream, length, hop))
+        want = np.asarray(ops.sketch_bits(wins, filters, step))
+        got = np.asarray(rolling_sketch_bits(
+            jnp.asarray(stream), filters, step, length, hop))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_delta_histograms_match_dense(rng):
+    """The delta-update invariant: the scan carrying one histogram
+    through ±shift column updates equals per-window
+    ``shingle_histogram`` — the histogram identity the sparse CWS path
+    rests on."""
+    w, step, ngram, f = 8, 2, 4, 2
+    length, hop = 40, 6                    # hop % step == 0 (aligned)
+    stream = rng.standard_normal(400).astype(np.float32)
+    filters = jnp.asarray(rng.standard_normal((w, f)).astype(np.float32))
+    n_b = (length - w) // step + 1
+    s, shift = n_b - ngram + 1, hop // step
+    dim = f << ngram
+    nw = num_windows(len(stream), length, hop)
+
+    gbits = ops.sketch_bits_stream(jnp.asarray(stream), filters, step)
+    gids = global_shingle_ids(gbits, ngram)
+    got = np.asarray(delta_histograms(gids, s, shift, nw, dim))
+
+    wins = jnp.asarray(_windows(stream, length, hop))
+    bits = ops.sketch_bits(wins, filters, step)       # (nw, N_B, F)
+    want = np.stack([np.asarray(shingle.shingle_histogram(b, ngram))
+                     for b in bits])
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# search: golden top-1, exclusion zone, telemetry
+# ---------------------------------------------------------------------------
+
+def test_golden_top1_matches_bruteforce_dtw(stream, sub):
+    """Top-1 of the hash-pruned subsequence search equals exact DTW over
+    every window — a planted exact copy must come back at distance 0."""
+    q = jnp.asarray(stream[1200:1200 + L])
+    res = sub.search(q, CFG)
+    wins = jnp.asarray(_windows(stream, L, HOP))
+    gold_ids, gold_d = brute_force_topk(q, wins, 1, band=CFG.band)
+    assert int(res.ids[0]) == int(gold_ids[0])
+    assert res.dists[0] == pytest.approx(float(gold_d[0]))
+    assert int(res.offsets[0]) == 1200 and res.dists[0] == 0.0
+    assert res.n_windows == num_windows(len(stream), L, HOP)
+    assert res.stream_length == len(stream)
+
+
+def test_exclusion_zone_separates_matches(stream, sub):
+    """Returned offsets are pairwise >= the exclusion zone (default
+    L//2), so near-duplicate shifted windows collapse to one match."""
+    q = jnp.asarray(stream[800:800 + L])
+    res = sub.search(q, CFG)
+    offs = np.asarray(res.offsets)
+    if len(offs) > 1:
+        gap = np.abs(offs[:, None] - offs[None, :])
+        gap[np.arange(len(offs)), np.arange(len(offs))] = 1 << 30
+        assert gap.min() >= L // 2
+    # explicit zone: 0 disables the dedup entirely
+    res0 = sub.search(q, CFG.replace(exclusion_zone=0, topk=3))
+    assert len(res0.ids) <= 3
+
+
+def test_search_telemetry_carries_amortized_encode(stream, sub):
+    q = jnp.asarray(stream[404:404 + L])
+    res = sub.search(q, CFG)
+    assert res.stats is not None
+    assert "encode_amortized" in res.stats.stage_seconds
+    assert res.stats.stage_seconds["encode_amortized"] >= 0.0
+    assert res.stats.n_windows == sub.num_windows
+
+
+def test_query_shape_and_window_mismatch_raise(stream, sub):
+    with pytest.raises(ValueError, match="one window"):
+        sub.search(jnp.zeros(L + 1), CFG)
+    with pytest.raises(ValueError, match="subseq_window"):
+        sub.search(jnp.zeros(L), CFG.replace(subseq_window=L * 2))
+
+
+# ---------------------------------------------------------------------------
+# growth + persistence: extend == rebuild, reload answers identically
+# ---------------------------------------------------------------------------
+
+def test_extend_stream_matches_full_rebuild(stream):
+    sub = SubsequenceIndex.build(stream[:2000], SPEC, length=L, hop=HOP,
+                                 backend="jnp")
+    n_new = sub.extend_stream(stream[2000:2600])
+    assert n_new == num_windows(2600, L, HOP) - num_windows(2000, L, HOP)
+    rebuilt = SubsequenceIndex.build(stream[:2600], SPEC, length=L,
+                                     hop=HOP, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(sub.inner.signatures),
+                                  np.asarray(rebuilt.inner.signatures))
+    np.testing.assert_array_equal(np.asarray(sub.inner.keys),
+                                  np.asarray(rebuilt.inner.keys))
+    # a too-short tail completes no window but still lands in the stream
+    before = sub.num_windows
+    assert sub.extend_stream(np.zeros(1, np.float32)) in (0, 1)
+    assert sub.num_windows >= before
+
+
+def test_save_load_roundtrip_and_extend(tmp_path, stream, sub):
+    q = jnp.asarray(stream[1200:1200 + L])
+    want = sub.search(q, CFG)
+    sub.save(tmp_path / "db", CFG)
+    loaded, cfg = SubsequenceIndex.load(tmp_path / "db")
+    assert cfg == CFG
+    np.testing.assert_array_equal(np.asarray(loaded.inner.signatures),
+                                  np.asarray(sub.inner.signatures))
+    got = loaded.search(q, CFG)
+    np.testing.assert_array_equal(got.ids, want.ids)
+    np.testing.assert_allclose(got.dists, want.dists)
+    # the reload keeps growing, bit-identical to growing the original
+    tail = np.asarray(synthetic_ecg(400, seed=9), np.float32)
+    twin = SubsequenceIndex.build(stream, SPEC, length=L, hop=HOP,
+                                  backend="jnp")
+    assert loaded.extend_stream(tail) == twin.extend_stream(tail) > 0
+    np.testing.assert_array_equal(np.asarray(loaded.inner.signatures),
+                                  np.asarray(twin.inner.signatures))
+
+
+def test_facade_build_stream_routing(tmp_path, stream):
+    db = TimeSeriesDB.build_stream(stream, spec=SPEC, config=CFG)
+    q = jnp.asarray(stream[1200:1200 + L])
+    res = db.search_subsequence(q)
+    assert int(res.offsets[0]) == 1200
+    assert db.length == L and len(db) == db.subseq.num_windows
+    with pytest.raises(ValueError, match="search_subsequence"):
+        db.search(q)
+    with pytest.raises(ValueError, match="extend_stream"):
+        db.add(np.zeros((2, L), np.float32))
+    assert db.extend_stream(np.asarray(synthetic_ecg(300, seed=2),
+                                       np.float32)) > 0
+    db.save(tmp_path / "facade_db")
+    db2 = TimeSeriesDB.load(tmp_path / "facade_db")
+    np.testing.assert_array_equal(db2.search_subsequence(q).ids,
+                                  db.search_subsequence(q).ids)
+    # fixed-length databases reject the stream verbs
+    series = jnp.asarray(extract_subsequences(
+        np.asarray(synthetic_ecg(1500, seed=1)), L, stride=16))
+    db3 = TimeSeriesDB.build(series, spec=SPEC,
+                             config=SearchConfig(searcher="local"))
+    with pytest.raises(ValueError, match="build_stream"):
+        db3.search_subsequence(q)
+    with pytest.raises(ValueError, match="build_stream"):
+        db3.extend_stream(np.zeros(10, np.float32))
+
+
+def test_build_stream_requires_window():
+    with pytest.raises(ValueError, match="subseq_window"):
+        TimeSeriesDB.build_stream(np.zeros(500, np.float32), spec=SPEC,
+                                  config=SearchConfig())
+
+
+# ---------------------------------------------------------------------------
+# signature LRU: every entry point reports hits
+# ---------------------------------------------------------------------------
+
+def test_sig_cache_hits_subseq(stream, sub):
+    q = jnp.asarray(stream[640:640 + L])
+    first = sub.search(q, CFG)
+    second = sub.search(q, CFG)
+    assert first.stats.sig_cache_hit == 0
+    assert second.stats.sig_cache_hit == 1
+    np.testing.assert_array_equal(first.ids, second.ids)
+
+
+def test_sig_cache_hits_sequential_and_batched(stream):
+    series = jnp.asarray(extract_subsequences(stream, L, stride=8))
+    index = TimeSeriesDB.build(series, spec=SPEC,
+                               config=SearchConfig(searcher="local")).index
+    q = series[7]
+    cfg = SearchConfig(topk=5, top_c=64, band=8)
+    assert ssh_search(q, index, cfg).stats.sig_cache_hit == 0
+    hit = ssh_search(q, index, cfg)
+    assert hit.stats.sig_cache_hit == 1
+    qs = series[10:14]
+    miss_b = ssh_search_batch(qs, index, cfg)
+    hit_b = ssh_search_batch(qs, index, cfg)
+    assert miss_b.stats.sig_cache_hit == 0
+    assert hit_b.stats.sig_cache_hit == int(qs.shape[0])
+    for b in range(int(qs.shape[0])):        # cached rows change nothing
+        np.testing.assert_array_equal(hit_b.per_query(b).ids,
+                                      miss_b.per_query(b).ids)
+
+
+def test_serving_metrics_sig_cache_counter():
+    m = ServingMetrics()
+    m.on_batch(batch_size=2, latencies_s=[0.01], queue_waits_s=[0.0],
+               pruned_by_hash_frac=[0.5], pruned_total_frac=[0.6],
+               depth_after=0, sig_cache_hits=2)
+    m.on_batch(batch_size=1, latencies_s=[0.01], queue_waits_s=[0.0],
+               pruned_by_hash_frac=[0.5], pruned_total_frac=[0.6],
+               depth_after=0, sig_cache_hits=1)
+    assert m.snapshot()["sig_cache_hits_total"] == 3
+
+
+# ---------------------------------------------------------------------------
+# streaming fold: pre-encoded, series-less appends
+# ---------------------------------------------------------------------------
+
+def test_append_encoded_validates_and_folds(stream):
+    enc = make_encoder(SPEC, length=L)
+    wins = jnp.asarray(_windows(stream[:600], L, HOP))
+    sigs = np.asarray(enc.encode_batch(wins, backend="jnp"))
+    keys = np.asarray(enc.band_keys(jnp.asarray(sigs)))
+    ing = StreamIngestor(enc, backend="jnp")
+    ing.append_encoded(sigs, keys)
+    arts = ing.artifacts()
+    assert arts.series is None
+    np.testing.assert_array_equal(arts.signatures, sigs)
+    with pytest.raises(ValueError, match="equal rows"):
+        ing.append_encoded(sigs, keys[:-1])
+    with pytest.raises(ValueError, match="do not match"):
+        ing.append_encoded(sigs[:, :-1], keys)
