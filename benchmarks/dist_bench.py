@@ -1,0 +1,165 @@
+"""Resilient distributed tier under failure — p99, recovery, zero loss.
+
+The claim this bench gates (DESIGN.md §11): with one **dead** worker and
+one **10×-slow** worker injected into a replicated fleet, queries still
+answer **bit-identically** to the healthy run (ids AND distances — the
+replicas restore the same published shard artifacts and the merge is a
+stable sort), and tail latency degrades by a bounded factor (hedging
+re-issues the slow shard's call to its replica instead of waiting the
+full injected delay; failover re-issues the dead worker's calls
+immediately).  A third scenario drains a worker out of a live
+``ServingEngine`` mid-stream and counts lost queries — the drain
+protocol must lose **zero**.
+
+Rows (CSV: name, us_per_query, derived):
+
+* ``dist/<kind>/len<L>/hotpath`` — stage-instrumented sequential row
+  (shared hot-path breakdown every BENCH json carries);
+* ``.../healthy``  — replicated fleet, no faults: p50/p99 baseline;
+* ``.../faulty``   — one dead + one 10×-slow worker: p50/p99 under
+  failure, ``p99_ratio`` vs healthy (gated by ``--max-p99-degradation``),
+  ``hedged_total``/``failovers_total``, ``recovered_identical``;
+* ``.../drain``    — live engine drain mid-stream: ``lost_queries``
+  (must be 0), ``rebalanced_shards``.
+
+Single-thread XLA pinning as in serving_bench: stable CPU timings.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1")
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (PARAMS, case_for, dataset_cached as dataset,
+                               hotpath_report, percentile, report,
+                               search_config)
+from repro.core import SSHIndex
+from repro.fleet import FleetSearcher
+
+KIND, LENGTH = "ecg", 128
+N_INVOCATIONS = 50           # single-query fleet calls per scenario
+REPLICATION, FLEET_WORKERS = 2, 4
+TOP_C = 128
+# hedge floor well under the injected 10x delay but above healthy shard
+# time: the slow shard's call is re-issued to its replica almost
+# immediately, so p99-under-failure rides the hedge, not the delay
+HEDGE_MS = 5.0
+DELAY_FACTOR = 10.0          # slow worker: 10x the healthy mean shard time
+
+
+def _fleet_config(kind: str, length: int):
+    return search_config(kind, length, top_c=TOP_C, multiprobe_offsets=1,
+                         replication=REPLICATION,
+                         fleet_workers=FLEET_WORKERS,
+                         hedge_policy="adaptive", hedge_ms=HEDGE_MS)
+
+
+def _run_queries(fleet, queries):
+    """((ids, dists) stacked over calls, per-call latency samples µs)."""
+    ids, dists, samples = [], [], []
+    for i in range(N_INVOCATIONS):
+        q = queries[i % len(queries)]
+        t0 = time.perf_counter()
+        res = fleet.search_batch(q[None, :])
+        samples.append((time.perf_counter() - t0) * 1e6)
+        ids.append(np.asarray(res.ids[0]))
+        dists.append(np.asarray(res.dists[0]))
+    return np.stack(ids), np.stack(dists), samples
+
+
+def run() -> None:
+    base = f"dist/{KIND}/len{LENGTH}"
+    hotpath_report(f"{base}/hotpath", KIND, LENGTH)
+
+    db, queries = dataset(KIND, LENGTH)
+    cfg = _fleet_config(KIND, LENGTH)
+    index = SSHIndex.build(db, spec=PARAMS[KIND].to_spec())
+    case = case_for(KIND, LENGTH, int(db.shape[0]), config=cfg)
+
+    fleet = FleetSearcher(index, cfg)
+    try:
+        for q in queries:                       # warm compiled shard shapes
+            fleet.search_batch(q[None, :])      # (also seeds policy EWMAs)
+
+        h_ids, h_dists, h_samples = _run_queries(fleet, queries)
+        h_p50 = percentile(h_samples, 50)
+        h_p99 = percentile(h_samples, 99)
+        report(f"{base}/healthy", float(np.mean(h_samples)),
+               {"p50_us": round(h_p50, 1), "p99_us": round(h_p99, 1),
+                "replication": REPLICATION, "workers": FLEET_WORKERS,
+                "n_shards": fleet.n_shards},
+               samples_us=h_samples, case=case)
+
+        # one dead worker + one worker slowed to DELAY_FACTOR x the
+        # healthy mean shard time (from the straggler policy's EWMAs).
+        # The dead worker exercises failover (its shards' primaries
+        # error instantly); the slow one is a primary of *different*
+        # shards, so its delay is absorbed by hedging, not failover
+        mean_shard_s = float(np.mean(list(fleet.policy.ewma.values())))
+        hedged0, failovers0 = fleet.hedged_total, fleet.failovers_total
+        dead = fleet.plan.primary(0)
+        slow = next((fleet.plan.primary(s) for s in range(fleet.n_shards)
+                     if dead not in fleet.plan.replicas(s)),
+                    next(w for w in sorted(fleet.workers) if w != dead))
+        fleet.injector.kill(dead)
+        fleet.injector.delay(slow, DELAY_FACTOR * mean_shard_s * 1e3)
+        f_ids, f_dists, f_samples = _run_queries(fleet, queries)
+        fleet.injector.clear()
+
+        identical = bool(np.array_equal(f_ids, h_ids)
+                         and np.array_equal(f_dists, h_dists))
+        if not identical:
+            raise AssertionError(
+                "faulty-run top-k diverged from the healthy run — the "
+                "fleet recovery path returned different ids/distances")
+        f_p99 = percentile(f_samples, 99)
+        report(f"{base}/faulty", float(np.mean(f_samples)),
+               {"p50_us": round(percentile(f_samples, 50), 1),
+                "p99_us": round(f_p99, 1),
+                "p99_ratio": round(f_p99 / max(h_p99, 1e-9), 3),
+                "hedged_total": fleet.hedged_total - hedged0,
+                "failovers_total": fleet.failovers_total - failovers0,
+                "recovered_identical": identical,
+                "dead_worker": dead, "slow_worker": slow,
+                "delay_ms": round(DELAY_FACTOR * mean_shard_s * 1e3, 2)},
+               samples_us=f_samples, case=case)
+    finally:
+        fleet.close()
+
+    _drain_scenario(index, cfg, queries, base, case)
+
+
+def _drain_scenario(index, cfg, queries, base: str, case) -> None:
+    """Drain a worker out of a live engine mid-stream; count lost
+    queries (the acceptance criterion: zero)."""
+    from repro.serving import ServingEngine
+    n_requests = N_INVOCATIONS
+    engine = ServingEngine(index, cfg.replace(max_batch=4, max_wait_ms=1.0))
+    engine.search_batch(queries)                # warm outside the window
+    t0 = time.perf_counter()
+    with engine:
+        futs = [engine.submit(queries[i % len(queries)])
+                for i in range(n_requests)]
+        moved = engine.drain(sorted(engine.searcher.workers)[0])
+        results = [f.result(timeout=300) for f in futs]
+    wall = time.perf_counter() - t0
+    lost = n_requests - len(results)
+    if lost:
+        raise AssertionError(f"{lost} queries lost through engine drain")
+    snap = engine.metrics.snapshot()
+    report(f"{base}/drain", wall / n_requests * 1e6,
+           {"lost_queries": lost, "rebalanced_shards": moved,
+            "hedged_total": int(snap["hedged_total"]),
+            "failovers_total": int(snap["failovers_total"]),
+            "n_requests": n_requests},
+           case=case)
+
+
+if __name__ == "__main__":
+    run()

@@ -29,6 +29,8 @@ MODULES = [
                      "memory"),
     ("subseq_bench", "subsequence search: rolling vs naive encode, query "
                      "latency vs stream length"),
+    ("dist_bench", "resilient fleet: p99 under dead+slow workers, "
+                   "bit-identical recovery, zero-loss drain"),
 ]
 
 #: Committed smoke-scale baseline (regenerate with
@@ -74,6 +76,13 @@ def _parse_args(argv):
                     help="fail unless the subseq rolling encode beat the "
                          "naive per-window encode by at least this factor "
                          "(DESIGN.md §10 tentpole gate; implies --json)")
+    ap.add_argument("--max-p99-degradation", type=float, default=None,
+                    metavar="F",
+                    help="fail unless dist_bench's p99 with one dead and "
+                         "one slow worker stayed within this factor of "
+                         "the healthy p99, recovery was bit-identical, "
+                         "and the engine drain lost zero queries "
+                         "(DESIGN.md §11 tentpole gate; implies --json)")
     return ap.parse_args(argv)
 
 
@@ -89,7 +98,8 @@ def main(argv=None) -> int:
             return 2
         os.environ["BENCH_SCALE"] = args.scale
     if args.baseline is not None or args.min_lb_pruned is not None \
-            or args.min_encode_speedup is not None:
+            or args.min_encode_speedup is not None \
+            or args.max_p99_degradation is not None:
         args.json = True
 
     modules = MODULES
@@ -127,6 +137,8 @@ def main(argv=None) -> int:
         rc = max(rc, _lb_gate(args))
     if args.min_encode_speedup is not None:
         rc = max(rc, _encode_gate(args))
+    if args.max_p99_degradation is not None:
+        rc = max(rc, _p99_gate(args))
     return rc
 
 
@@ -221,6 +233,51 @@ def _encode_gate(args) -> int:
             print("# encode-gate: FAIL (no /encode entries in report)")
         return 1
     print("# encode-gate: OK")
+    return 0
+
+
+def _p99_gate(args) -> int:
+    """Resilience-under-failure gate over the dist_bench scenarios: the
+    p99 with one dead + one 10x-slow worker must stay within
+    ``--max-p99-degradation`` of the healthy p99 (hedging/failover are
+    doing their job), the recovered top-k must have been bit-identical,
+    and the live engine drain must have lost zero queries."""
+    from repro.bench import load_report
+    path = os.path.join(args.out, "BENCH_dist_bench.json")
+    if not os.path.exists(path):
+        print("# p99-gate: SKIP (dist_bench not in this run)")
+        return 0
+    checked, bad = 0, []
+    for r in load_report(path).results:
+        d = r.derived or {}
+        if r.name.endswith("/faulty"):
+            checked += 1
+            ratio = d.get("p99_ratio")
+            if ratio is None or float(ratio) > args.max_p99_degradation:
+                bad.append((r.name, f"p99_ratio={ratio} > "
+                            f"{args.max_p99_degradation}"))
+            elif not d.get("recovered_identical"):
+                bad.append((r.name, "recovered_identical is false"))
+            else:
+                print(f"# p99-gate: {r.name} p99_ratio={float(ratio):.2f} "
+                      f"<= {args.max_p99_degradation}, recovery "
+                      "bit-identical")
+        elif r.name.endswith("/drain"):
+            checked += 1
+            lost = d.get("lost_queries")
+            if lost is None or int(lost) != 0:
+                bad.append((r.name, f"lost_queries={lost} != 0"))
+            else:
+                print(f"# p99-gate: {r.name} lost_queries=0 over "
+                      f"{d.get('n_requests')} requests")
+    for name, why in bad:
+        print(f"# p99-gate: FAIL {name} {why}")
+    if bad or not checked:
+        if not checked:
+            print("# p99-gate: FAIL (no /faulty or /drain entries "
+                  "in report)")
+        return 1
+    print("# p99-gate: OK")
     return 0
 
 

@@ -88,6 +88,15 @@ class SearchStats:
     # queries in this search whose encode was served from the signature
     # LRU (repro.encoders.sigcache) — 0/1 sequentially, up to B batched
     sig_cache_hit: int = 0
+    # fleet resilience counters (repro.fleet; 0/False outside it):
+    # shard calls re-issued to a replica on a lapsed hedging deadline,
+    # shard calls re-issued after a worker fault, and whether any shard
+    # of this search was answered by a non-primary replica — results
+    # are bit-identical either way, the flags only mark that the fleet
+    # was coping
+    hedged: int = 0
+    failovers: int = 0
+    degraded: bool = False
     # sliding windows probed when the query ran against a subsequence
     # index (repro.subseq); 0 for whole-series search.  Subsequence
     # stats also carry the extra "encode_amortized" stage key: the

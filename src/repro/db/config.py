@@ -22,9 +22,11 @@ from typing import Any, Dict, List, Optional
 #: Searcher backends shipped with :mod:`repro.db.registry`.  Third-party
 #: registrations extend the registry at runtime; ``validate()`` only
 #: rejects names when the registry is importable and disagrees.
-BUILTIN_SEARCHERS = ("local", "batched", "distributed", "engine")
+BUILTIN_SEARCHERS = ("local", "batched", "distributed", "engine", "fleet")
 
 _KERNEL_BACKENDS = ("auto", "pallas", "jnp")
+
+_HEDGE_POLICIES = ("off", "fixed", "adaptive")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,10 +78,26 @@ class SearchConfig:
     * ``searcher`` — which registered searcher serves the queries:
       "local" (sequential re-rank), "batched" (fused batched path),
       "distributed" (shard fan-out over a mesh), "engine" (dynamic
-      batcher).  See ``repro.db.registry``.
+      batcher), "fleet" (replicated hedged fan-out with failover and
+      live elasticity).  See ``repro.db.registry``.
     * ``max_batch`` / ``max_wait_ms`` — dynamic-batcher policy
       (latency/throughput trade-off; "engine" searcher and
       ``ServingEngine`` only).
+
+    Resilience (``repro.fleet``, "fleet" searcher; DESIGN.md §11):
+
+    * ``replication`` — replicas per shard (R).  1 = no redundancy;
+      R >= 2 lets the fleet survive R-1 concurrent worker losses per
+      shard and hedge stragglers, with bit-identical results.
+    * ``fleet_workers`` — fleet size W; ``None`` sizes the fleet to
+      ``max(2, replication)``.  Must be >= ``replication`` (R distinct
+      workers per shard cannot co-locate).
+    * ``hedge_policy`` — "off" (never hedge; failover on errors only),
+      "fixed" (hedge after ``hedge_ms``), or "adaptive" (hedge after
+      ``max(hedge_ms, StragglerPolicy.threshold × fleet-median shard
+      time)``, immediately for a worker already striking as a
+      straggler; never before telemetry exists).
+    * ``hedge_ms`` — hedging deadline floor in milliseconds.
 
     Telemetry:
 
@@ -117,6 +135,10 @@ class SearchConfig:
     searcher: str = "batched"
     max_batch: int = 8
     max_wait_ms: float = 2.0
+    replication: int = 1
+    fleet_workers: Optional[int] = None
+    hedge_policy: str = "adaptive"
+    hedge_ms: float = 30.0
     stage_timings: bool = True
     subseq_window: Optional[int] = None
     subseq_hop: int = 1
@@ -165,6 +187,24 @@ class SearchConfig:
         if self.max_wait_ms < 0:
             raise ValueError(
                 f"max_wait_ms must be >= 0, got {self.max_wait_ms}")
+        if self.replication < 1:
+            raise ValueError(
+                f"replication must be >= 1, got {self.replication}")
+        if self.fleet_workers is not None and self.fleet_workers < 1:
+            raise ValueError(f"fleet_workers must be None or >= 1, "
+                             f"got {self.fleet_workers}")
+        if (self.fleet_workers is not None
+                and self.replication > self.fleet_workers):
+            raise ValueError(
+                f"replication ({self.replication}) > fleet_workers "
+                f"({self.fleet_workers}): each shard needs that many "
+                "distinct workers (replicas never co-locate)")
+        if self.hedge_policy not in _HEDGE_POLICIES:
+            raise ValueError(f"hedge_policy must be one of "
+                             f"{_HEDGE_POLICIES}, got {self.hedge_policy!r}")
+        if self.hedge_ms <= 0:
+            raise ValueError(
+                f"hedge_ms must be > 0, got {self.hedge_ms}")
         if self.subseq_window is not None and self.subseq_window < 1:
             raise ValueError(f"subseq_window must be None or >= 1, "
                              f"got {self.subseq_window}")

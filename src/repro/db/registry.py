@@ -1,6 +1,6 @@
 """Searcher-backend registry — how a ``TimeSeriesDB`` answers queries.
 
-A *searcher* turns (index, config) into answers.  Four ship built in,
+A *searcher* turns (index, config) into answers.  Five ship built in,
 all serving the same contract (``search`` → ``SearchResult``,
 ``search_batch`` → list of per-query ``SearchResult``, ``insert``):
 
@@ -16,6 +16,11 @@ all serving the same contract (``search`` → ``SearchResult``,
 * ``"engine"`` — the dynamic-batching ``ServingEngine`` (bucketed
   padding, streaming inserts, background batcher thread); adds
   ``submit()`` for async clients.
+* ``"fleet"``  — the resilient tier (``repro.fleet``): R-way replicated
+  shard placement, hedged fan-out with failover, live drain/resize.
+  ``"distributed"`` also routes here automatically when
+  ``config.replication > 1`` (the mesh shard_map path is one fused
+  program and cannot hedge or survive a shard loss).
 
 ``register_searcher`` lets downstream code plug in new backends (e.g. a
 GPU-resident or RPC-fronted searcher) without touching the facade:
@@ -140,6 +145,13 @@ class DistributedSearcher(_SearcherBase):
 
     def __init__(self, index, config: SearchConfig, *, mesh=None):
         super().__init__(index, config)
+        if config.replication > 1:
+            # replication needs per-shard dispatch the fused shard_map
+            # program cannot express — serve through the fleet tier
+            from repro.fleet import FleetSearcher
+            self._inner = FleetSearcher(index, config)
+            self.mesh = None
+            return
         if mesh is None:
             import jax
             mesh = jax.make_mesh((jax.device_count(),), ("data",))
@@ -163,9 +175,66 @@ class DistributedSearcher(_SearcherBase):
 
     def resize(self, mesh) -> None:
         """Elastic shard move: re-place the encoded rows + encoder state
-        under a new mesh — no raw series is re-encoded or reshuffled."""
+        under a new mesh — no raw series is re-encoded or reshuffled.
+        When serving through the fleet tier, pass an int worker count or
+        name list instead of a mesh (live minimal-movement rebalance)."""
+        if self.mesh is None:
+            self._inner.resize(mesh)        # fleet: int or name list
+            return
         self.mesh = mesh
         self._inner.resize(mesh)
+
+    def close(self) -> None:
+        close = getattr(self._inner, "close", None)
+        if close is not None:
+            close()
+
+
+@register_searcher("fleet")
+class FleetRegistrySearcher(_SearcherBase):
+    """The resilient tier behind the facade: replicated shard placement,
+    hedged fan-out, failover, and live drain/resize (``repro.fleet``).
+    Exposes the fleet's ``injector`` for chaos tests and the fleet
+    counters for observability."""
+
+    def __init__(self, index, config: SearchConfig, *, mesh=None):
+        super().__init__(index, config)
+        from repro.fleet import FleetSearcher
+        self._inner = FleetSearcher(index, config)
+
+    @property
+    def injector(self):
+        return self._inner.injector
+
+    @property
+    def fleet(self):
+        return self._inner
+
+    def search_batch(self, queries: jnp.ndarray) -> List:
+        queries = jnp.asarray(queries)
+        res = self._inner.search_batch(queries)
+        return [res.per_query(i) for i in range(int(queries.shape[0]))]
+
+    def search(self, query: jnp.ndarray):
+        return self.search_batch(jnp.asarray(query)[None, :])[0]
+
+    def insert(self, series: jnp.ndarray) -> None:
+        self._inner.insert(series)          # raises: stream + fold instead
+
+    def apply_artifacts(self, artifacts) -> None:
+        self._inner.apply_artifacts(artifacts)
+
+    def resize(self, workers) -> int:
+        return self._inner.resize(workers)
+
+    def drain(self, worker: str) -> int:
+        return self._inner.drain(worker)
+
+    def fail_worker(self, worker: str) -> int:
+        return self._inner.fail_worker(worker)
+
+    def close(self) -> None:
+        self._inner.close()
 
 
 @register_searcher("engine")

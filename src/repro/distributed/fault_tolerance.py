@@ -51,10 +51,35 @@ class ShardPlan:
         return moved
 
     def resize(self, new_workers: List[str]) -> int:
-        """Elastic scale up/down; returns number of shards that moved."""
+        """Elastic scale up/down with stable minimal movement; returns
+        the number of shards that moved.
+
+        A shard whose worker survives the resize stays put; shards on
+        removed workers re-home to the least-loaded survivor, then
+        shards flow from the most- to the least-loaded worker only
+        until the load spread is <= 1.  Moves are bounded by
+        ``ceil(n_shards / len(new_workers))`` for a one-worker change
+        (vs. the old round-robin re-deal, which reshuffled nearly every
+        shard whenever the worker list shifted by one).
+        """
         old = dict(self.assignment)
-        self.workers = list(new_workers)
-        self.rebalance()
+        new = list(dict.fromkeys(new_workers))
+        if not new:
+            raise RuntimeError("no workers left")
+        removed = [w for w in self.workers if w not in new]
+        self.workers = new
+        for dead in removed:
+            for s in self.shards_of(dead):
+                load = {w: len(self.shards_of(w)) for w in self.workers}
+                self.assignment[s] = min(sorted(load),
+                                         key=lambda w: load[w])
+        while True:
+            load = {w: len(self.shards_of(w)) for w in self.workers}
+            order = sorted(load, key=lambda w: (load[w], w))
+            lo, hi = order[0], order[-1]
+            if load[hi] - load[lo] <= 1:
+                break
+            self.assignment[min(self.shards_of(hi))] = lo
         return sum(1 for s in old if old[s] != self.assignment[s])
 
 
@@ -75,16 +100,38 @@ class StragglerPolicy:
         vals = sorted(self.ewma.values())
         return vals[len(vals) // 2] if vals else 0.0
 
-    def check(self, worker: str) -> bool:
-        """True when the worker should be treated as a straggler."""
+    def step(self, worker: str) -> None:
+        """Advance the worker's strike counter once for this step.
+
+        The mutating half of the old ``check()``: call exactly once per
+        observed step.  Reads (``is_straggler``/``stragglers``) are
+        pure, so callers may poll them at any frequency — the old
+        combined ``check()`` double-counted strikes when a step was
+        inspected twice (e.g. ``check()`` in a loop, then
+        ``stragglers()`` for the report).
+        """
         med = self.median()
         if med <= 0:
-            return False
+            return
         if self.ewma.get(worker, 0.0) > self.threshold * med:
             self.strikes[worker] = self.strikes.get(worker, 0) + 1
         else:
             self.strikes[worker] = 0
+
+    def is_straggler(self, worker: str) -> bool:
+        """Pure read: has the worker struck out ``patience`` times?"""
         return self.strikes.get(worker, 0) >= self.patience
 
+    def check(self, worker: str) -> bool:
+        """True when the worker should be treated as a straggler.
+
+        Back-compat combined form: advances the strike counter AND
+        reads the verdict.  New callers should pair one ``step()`` per
+        observed step with pure ``is_straggler()`` reads.
+        """
+        self.step(worker)
+        return self.is_straggler(worker)
+
     def stragglers(self) -> List[str]:
-        return [w for w in list(self.ewma) if self.check(w)]
+        """Pure read of the current straggler set (no strike updates)."""
+        return [w for w in list(self.ewma) if self.is_straggler(w)]

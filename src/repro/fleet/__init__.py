@@ -1,0 +1,31 @@
+"""repro.fleet — the resilience layer of the distributed tier (DESIGN.md §11).
+
+At the paper's massive scale the index outgrows one worker, and once it
+is spread over a fleet, shard failure and stragglers are the common
+case.  This package makes the distributed tier survive them without
+changing a single answer:
+
+* :class:`ReplicatedShardPlan` — R-way replica placement with the
+  no-co-location invariant and stable, minimal-movement rebalancing.
+* :class:`FleetWorker` — a logical worker holding shard replicas
+  received as ``repro.checkpoint`` artifacts (the transfer format).
+* :class:`FleetSearcher` — replicated shard fan-out with hedged
+  re-issue (``StragglerPolicy``-derived per-shard deadlines), failover
+  on error, live ``resize()`` rebalancing and ``drain()`` for zero-loss
+  worker retirement.  Results are bit-identical under faults because
+  replicas hold identical encoded state and the merge is deterministic.
+* :class:`FaultInjector` — kill / delay / drop-every-Nth fault
+  injection for tests and ``benchmarks/dist_bench.py``.
+"""
+from repro.fleet.injector import (FaultInjector, ResponseDropped,
+                                  WorkerFault, WorkerKilled)
+from repro.fleet.placement import ReplicatedShardPlan
+from repro.fleet.searcher import FleetSearcher
+from repro.fleet.transfer import fetch_shard, publish_shard
+from repro.fleet.worker import FleetWorker, ShardReplica
+
+__all__ = [
+    "FaultInjector", "FleetSearcher", "FleetWorker",
+    "ReplicatedShardPlan", "ResponseDropped", "ShardReplica",
+    "WorkerFault", "WorkerKilled", "fetch_shard", "publish_shard",
+]

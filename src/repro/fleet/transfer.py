@@ -1,0 +1,60 @@
+"""Shard transfer format — persistence-v2 checkpoints, not pickles.
+
+A shard moves between workers as a ``repro.checkpoint`` artifact (one
+atomically-published ``step_*/`` directory of npz shards + manifest),
+the same layer index persistence rides.  That buys the fleet tier the
+checkpoint layer's guarantees for free: a crashed publisher never
+corrupts the previous artifact, and a fetching worker either sees a
+complete shard or none.  Replicas fetched from the same artifact hold
+bit-identical arrays — the root of the hedging soundness argument
+(DESIGN.md §11): any replica's answer for a shard is THE answer.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, \
+    save_checkpoint
+from repro.fleet.worker import ShardReplica
+
+
+def _shard_dir(root: str | Path, shard_id: int) -> Path:
+    return Path(root) / f"shard_{shard_id:05d}"
+
+
+def publish_shard(root: str | Path, shard_id: int, series, signatures,
+                  row_start: int, version: int = 0) -> Path:
+    """Publish one shard's encoded rows as a checkpoint artifact.
+
+    ``version`` is the checkpoint step: re-publishing after a streaming
+    fold bumps it, and the previous artifact stays durable until the new
+    one is live (``keep=2``).
+    """
+    return save_checkpoint(
+        _shard_dir(root, shard_id), step=version,
+        tree={"series": np.asarray(series),
+              "signatures": np.asarray(signatures),
+              "row_start": np.asarray(row_start, np.int64)},
+        keep=2)
+
+
+def fetch_shard(root: str | Path, shard_id: int,
+                version: Optional[int] = None) -> ShardReplica:
+    """A worker 'receives' a shard: restore the (latest) artifact."""
+    d = _shard_dir(root, shard_id)
+    step = latest_step(d) if version is None else version
+    if step is None:
+        raise FileNotFoundError(f"no published artifact for shard "
+                                f"{shard_id} under {root}")
+    manifest = json.loads(
+        (d / f"step_{step:010d}" / "manifest.json").read_text())
+    tree_like = {k: np.zeros(info["shape"], dtype=np.dtype(info["dtype"]))
+                 for k, info in manifest["arrays"].items()}
+    _, tree = restore_checkpoint(d, tree_like, step=step)
+    return ShardReplica(series=tree["series"],
+                        signatures=tree["signatures"],
+                        row_start=int(np.asarray(tree["row_start"])))

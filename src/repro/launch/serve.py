@@ -43,9 +43,15 @@ def _ssh_db(arch, config, db_dir=None):
                 f"--db-dir {db_dir}: no saved TimeSeriesDB there "
                 "(build one with repro.launch.build_index)")
         tsdb = TimeSeriesDB.load(db_dir)
-        tsdb = tsdb.with_config(tsdb.config.replace(
+        overlay = dict(
             searcher=config.searcher, backend=config.backend,
-            max_batch=config.max_batch, max_wait_ms=config.max_wait_ms))
+            max_batch=config.max_batch, max_wait_ms=config.max_wait_ms,
+            replication=config.replication,
+            fleet_workers=config.fleet_workers,
+            hedge_policy=config.hedge_policy, hedge_ms=config.hedge_ms)
+        if config.replication > 1:
+            overlay["multiprobe_offsets"] = 1    # fleet is single-probe
+        tsdb = tsdb.with_config(tsdb.config.replace(**overlay))
         length = tsdb.length
         print(f"loaded database ({len(tsdb)} series of length {length}) "
               f"from {db_dir}")
@@ -62,11 +68,25 @@ def _ssh_db(arch, config, db_dir=None):
 
 
 def serve_ssh(arch, requests: int, batch_size: int, wait_ms: float,
-              backend: str = "auto", db_dir=None):
-    """Engine-based serving: dynamic batching + batched probe/re-rank."""
+              backend: str = "auto", db_dir=None, replication: int = 1,
+              fleet_workers=None, hedge_ms: float = 30.0):
+    """Engine-based serving: dynamic batching + batched probe/re-rank.
+
+    ``replication >= 2`` serves through the resilient fleet tier
+    (replicated shards, hedged fan-out, failover — DESIGN.md §11)
+    behind the same engine."""
     cfg = arch.search_config(length=SERVE_LENGTH, searcher="engine",
                              backend=backend, max_batch=batch_size,
-                             max_wait_ms=wait_ms)
+                             max_wait_ms=wait_ms, replication=replication,
+                             fleet_workers=fleet_workers,
+                             hedge_ms=hedge_ms)
+    if replication > 1 and cfg.multiprobe_offsets > 1:
+        # the fleet shard probe matches the shard_map fan-out, which is
+        # single-probe; drop the arch's multiprobe rather than refuse
+        print(f"replication={replication}: fleet serving is single-probe "
+              f"(overriding arch multiprobe_offsets="
+              f"{cfg.multiprobe_offsets})")
+        cfg = cfg.replace(multiprobe_offsets=1)
     db, tsdb = _ssh_db(arch, cfg, db_dir)
     engine = tsdb.engine
     rng = np.random.default_rng(0)
@@ -88,6 +108,11 @@ def serve_ssh(arch, requests: int, batch_size: int, wait_ms: float,
         wall = time.perf_counter() - t0
         snap = engine.metrics.snapshot()
     print(f"engine: {engine.metrics.format()}")
+    if replication > 1:
+        print(f"fleet: hedged={snap['hedged_total']:.0f} "
+              f"failovers={snap['failovers_total']:.0f} "
+              f"degraded={snap['degraded_total']:.0f} "
+              f"rebalanced={snap['rebalanced_shards_total']:.0f}")
     print(f"served {requests} requests in {wall:.2f}s "
           f"({requests / wall:.1f} qps end-to-end, "
           f"avg batch {snap['batch_size_mean']:.1f})")
@@ -156,6 +181,13 @@ def main():
     ap.add_argument("--db-dir", default=None,
                     help="serve a TimeSeriesDB saved here instead of "
                          "rebuilding the index (ssh only)")
+    ap.add_argument("--replication", type=int, default=1,
+                    help="replicas per shard; >= 2 serves through the "
+                         "resilient fleet tier (ssh engine only)")
+    ap.add_argument("--fleet-workers", type=int, default=None,
+                    help="fleet size (default max(2, replication))")
+    ap.add_argument("--hedge-ms", type=float, default=30.0,
+                    help="hedging deadline floor in ms (fleet only)")
     ap.add_argument("--smoke", action="store_true", default=True)
     args = ap.parse_args()
     arch = get_arch(args.arch)
@@ -165,7 +197,10 @@ def main():
                                  db_dir=args.db_dir)
         else:
             serve_ssh(arch, args.requests, args.batch_size, args.wait_ms,
-                      backend=args.backend, db_dir=args.db_dir)
+                      backend=args.backend, db_dir=args.db_dir,
+                      replication=args.replication,
+                      fleet_workers=args.fleet_workers,
+                      hedge_ms=args.hedge_ms)
     elif arch.family == "lm":
         serve_lm(arch, args.requests, args.smoke)
     else:

@@ -228,6 +228,15 @@ def _sig_hits(res: BatchSearchResult) -> int:
     return res.stats.sig_cache_hit if res.stats is not None else 0
 
 
+def _fleet_counters(res: BatchSearchResult) -> dict:
+    """Fleet resilience counters of the batch (zeros outside the fleet)."""
+    s = res.stats
+    if s is None:
+        return {}
+    return {"hedged": s.hedged, "failovers": s.failovers,
+            "degraded": int(s.degraded)}
+
+
 @dataclasses.dataclass
 class _Request:
     query: jnp.ndarray
@@ -261,7 +270,15 @@ class ServingEngine:
                  searcher=None, metrics: Optional[ServingMetrics] = None):
         self.index = index
         self.config = config
-        self.searcher = searcher or BatchedSearcher(index, config)
+        if searcher is None:
+            if config.replication > 1:
+                # resilience requested: serve through the fleet tier
+                # (replicated shards, hedged fan-out, drain/resize)
+                from repro.fleet import FleetSearcher
+                searcher = FleetSearcher(index, config)
+            else:
+                searcher = BatchedSearcher(index, config)
+        self.searcher = searcher
         self.metrics = metrics or ServingMetrics()
         self._queue: "queue.Queue" = queue.Queue()
         self._inserts: "queue.Queue" = queue.Queue()
@@ -375,7 +392,8 @@ class ServingEngine:
             lb_pruned_frac=_lb_fracs(res),
             dtw_abandoned_frac=_abandon_fracs(res),
             stage_seconds=_stage_seconds(res),
-            sig_cache_hits=_sig_hits(res))
+            sig_cache_hits=_sig_hits(res),
+            **_fleet_counters(res))
         return [res.per_query(i) for i in range(b)]
 
     def flush_inserts(self) -> None:
@@ -396,6 +414,39 @@ class ServingEngine:
         with self._serve_lock:
             self._drain_inserts()
             self.searcher.apply_artifacts(artifacts)
+
+    def drain(self, worker: str) -> int:
+        """Gracefully retire a fleet worker while serving.
+
+        Delegates to the fleet searcher's drain protocol: new shard
+        calls route away from ``worker`` immediately, its in-flight
+        calls finish and count, then its replica slots re-home from the
+        published artifacts.  Queries queued in the engine keep flowing
+        throughout — the batcher thread never stops, so zero queued
+        queries are lost (chaos-tested in ``tests/test_fleet.py``).
+        Returns the number of shards moved; raises ``AttributeError``
+        when the active searcher has no drain support (not a fleet).
+        """
+        drain = getattr(self.searcher, "drain", None)
+        if drain is None:
+            raise AttributeError(
+                f"searcher {type(self.searcher).__name__} does not "
+                "support drain(); serve with config.replication > 1")
+        moved = drain(worker)
+        self.metrics.on_rebalance(moved)
+        return moved
+
+    def resize(self, workers) -> int:
+        """Live fleet rebalance (int worker count or name list); returns
+        shards moved.  Fleet-backed engines only."""
+        resize = getattr(self.searcher, "resize", None)
+        if resize is None:
+            raise AttributeError(
+                f"searcher {type(self.searcher).__name__} does not "
+                "support resize(); serve with config.replication > 1")
+        moved = resize(workers)
+        self.metrics.on_rebalance(moved)
+        return moved
 
     def insert(self, series: jnp.ndarray) -> None:
         """Streaming insert; visible to all queries submitted afterwards."""
@@ -473,4 +524,5 @@ class ServingEngine:
                 lb_pruned_frac=_lb_fracs(res),
                 dtw_abandoned_frac=_abandon_fracs(res),
                 stage_seconds=_stage_seconds(res),
-                sig_cache_hits=_sig_hits(res))
+                sig_cache_hits=_sig_hits(res),
+                **_fleet_counters(res))

@@ -115,6 +115,15 @@ class ServingMetrics:
         # (repro.encoders.sigcache) — repeated-query traffic shows up
         # here instead of in the encode stage seconds
         self.sig_cache_hits = 0
+        # fleet resilience counters (repro.fleet; stay 0 elsewhere):
+        # shard calls re-issued on a lapsed hedging deadline, shard
+        # calls re-issued after a worker fault, queries any of whose
+        # shards were answered by a non-primary replica, and shards
+        # moved by drain/fail/resize rebalances
+        self.hedged_total = 0
+        self.failovers_total = 0
+        self.degraded_total = 0
+        self.rebalanced_shards_total = 0
         self.queue_depth = 0
         # resident bytes of the served index (SSHIndex.nbytes) — a gauge,
         # refreshed per batch so streaming inserts/folds show up; the
@@ -135,9 +144,13 @@ class ServingMetrics:
                  depth_after: int, lb_pruned_frac=(),
                  dtw_abandoned_frac=(),
                  stage_seconds: Optional[Dict[str, float]] = None,
-                 sig_cache_hits: int = 0) -> None:
+                 sig_cache_hits: int = 0, hedged: int = 0,
+                 failovers: int = 0, degraded: int = 0) -> None:
         with self._lock:
             self.sig_cache_hits += int(sig_cache_hits)
+            self.hedged_total += int(hedged)
+            self.failovers_total += int(failovers)
+            self.degraded_total += int(degraded)
             self.batches_total += 1
             self.requests_total += batch_size
             self.batch_size.record(batch_size)
@@ -163,6 +176,11 @@ class ServingMetrics:
         with self._lock:
             self.inserts_total += n_series
 
+    def on_rebalance(self, n_shards: int) -> None:
+        """Shards moved by a drain / fail / resize rebalance."""
+        with self._lock:
+            self.rebalanced_shards_total += int(n_shards)
+
     def set_index_bytes(self, n: int) -> None:
         with self._lock:
             self.index_bytes = int(n)
@@ -179,6 +197,10 @@ class ServingMetrics:
                 "batches_total": self.batches_total,
                 "inserts_total": self.inserts_total,
                 "sig_cache_hits_total": self.sig_cache_hits,
+                "hedged_total": self.hedged_total,
+                "failovers_total": self.failovers_total,
+                "degraded_total": self.degraded_total,
+                "rebalanced_shards_total": self.rebalanced_shards_total,
                 "queue_depth": self.queue_depth,
                 "index_bytes": self.index_bytes,
                 "batch_size_mean": self.batch_size.mean,

@@ -69,6 +69,23 @@ def test_config_validate_rejects_bad_knobs():
         SearchConfig(topk=10, seed_size=4).validate()
 
 
+def test_config_validate_rejects_impossible_fleet():
+    with pytest.raises(ValueError, match="replication"):
+        SearchConfig(replication=0).validate()
+    with pytest.raises(ValueError, match="fleet_workers"):
+        SearchConfig(fleet_workers=0).validate()
+    # R replicas need R distinct workers (no co-location)
+    with pytest.raises(ValueError, match="replication"):
+        SearchConfig(replication=3, fleet_workers=2).validate()
+    with pytest.raises(ValueError, match="hedge_policy"):
+        SearchConfig(hedge_policy="eventually").validate()
+    with pytest.raises(ValueError, match="hedge_ms"):
+        SearchConfig(hedge_ms=0.0).validate()
+    # the legal corner: R == fleet size is allowed (every worker holds
+    # every shard — full mirroring)
+    SearchConfig(replication=3, fleet_workers=3, band=8).validate()
+
+
 def test_config_replace_and_roundtrip_dict():
     cfg = SearchConfig(band=8).replace(topk=7, searcher="local")
     assert cfg.topk == 7 and cfg.band == 8

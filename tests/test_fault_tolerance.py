@@ -56,6 +56,43 @@ def test_straggler_recovers():
     assert pol.strikes["d"] == 0
 
 
+def test_shard_plan_resize_moves_minimally():
+    """Stable placement: a ±1-worker resize moves at most
+    ceil(n_shards / n_workers) shards (the old round-robin re-deal
+    reshuffled nearly all of them)."""
+    import math
+    p = ShardPlan(12, ["w0", "w1", "w2"])
+    up = p.resize(["w0", "w1", "w2", "w3"])
+    assert 0 < up <= math.ceil(12 / 4)
+    loads = [len(p.shards_of(w)) for w in p.workers]
+    assert max(loads) - min(loads) <= 1
+    down = p.resize(["w0", "w1", "w2"])
+    assert 0 < down <= math.ceil(12 / 3)
+    loads = [len(p.shards_of(w)) for w in p.workers]
+    assert max(loads) - min(loads) <= 1
+
+
+def test_straggler_reads_are_pure():
+    """Regression: ``stragglers()``/``is_straggler()`` must not advance
+    strike counters — the old combined ``check()`` double-counted a
+    step when the caller both checked a worker and listed stragglers."""
+    pol = StragglerPolicy(threshold=1.5, patience=3)
+    for w in ("a", "b", "c"):
+        pol.observe(w, 1.0)
+    pol.observe("slow", 9.0)
+    pol.step("slow")                     # one observed step -> one strike
+    assert pol.strikes["slow"] == 1
+    for _ in range(10):                  # reads at any frequency: pure
+        assert not pol.is_straggler("slow")
+        assert pol.stragglers() == []
+    assert pol.strikes["slow"] == 1
+    pol.step("slow")
+    pol.step("slow")                     # third strike = patience
+    assert pol.is_straggler("slow")
+    assert pol.stragglers() == ["slow"]
+    assert pol.strikes["slow"] == 3      # still exactly one per step()
+
+
 def test_ddp_training_with_compression_converges():
     """Least-squares with top-k + error-feedback compressed 'all-reduce'
     (single process, two synthetic data shards) — training still converges."""

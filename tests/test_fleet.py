@@ -1,0 +1,349 @@
+"""Resilient fleet tier: placement invariants, chaos, drain, elasticity.
+
+The acceptance contract: whatever the fleet survives — killed workers,
+injected delays, dropped responses, live drains and resizes — the
+returned top-k ids AND distances stay bit-identical to the healthy run,
+and no queued query is ever lost.
+"""
+import math
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SSHParams, SSHIndex
+from repro.data.timeseries import extract_subsequences, synthetic_ecg
+from repro.db.config import SearchConfig
+from repro.fleet import (FaultInjector, FleetSearcher, ReplicatedShardPlan,
+                         ResponseDropped, WorkerKilled)
+
+pytestmark = pytest.mark.fleet
+
+PARAMS = SSHParams(window=24, step=3, ngram=8, num_hashes=40, num_tables=20)
+
+
+@pytest.fixture(scope="module")
+def db():
+    stream = synthetic_ecg(2200, seed=5)
+    return jnp.asarray(extract_subsequences(stream, 128, stride=4,
+                                            znorm=True))    # ~500 series
+
+
+@pytest.fixture(scope="module")
+def index(db):
+    return SSHIndex.build(db, PARAMS)
+
+
+def make_fleet(index, **overrides):
+    kw = dict(topk=5, top_c=64, band=8, replication=2, fleet_workers=4)
+    kw.update(overrides)
+    return FleetSearcher(index, SearchConfig(**kw).validate())
+
+
+# ---------------------------------------------------------------------------
+# placement invariants
+# ---------------------------------------------------------------------------
+
+def _assert_invariants(plan):
+    for s in range(plan.n_shards):
+        ws = plan.replicas(s)
+        assert len(ws) == plan.replication          # exactly R replicas
+        assert len(set(ws)) == len(ws)              # never co-located
+        assert all(w in plan.workers for w in ws)   # all live
+    loads = list(plan.loads().values())
+    assert max(loads) - min(loads) <= 1             # balanced within 1
+
+
+def test_placement_invariants_property():
+    """Property sweep over (n_shards, n_workers, R) grids plus random
+    fail/resize trajectories (hypothesis when available)."""
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        @settings(max_examples=60, deadline=None)
+        @given(st.integers(1, 24), st.integers(1, 8), st.integers(1, 4),
+               st.randoms(use_true_random=False))
+        def prop(n_shards, n_workers, repl, rng):
+            repl = min(repl, n_workers)
+            names = [f"w{i}" for i in range(n_workers)]
+            plan = ReplicatedShardPlan(n_shards, names, replication=repl)
+            _assert_invariants(plan)
+            for _ in range(3):
+                op = rng.choice(["fail", "grow", "shrink"])
+                if op == "fail" and len(plan.workers) > repl:
+                    plan.fail(rng.choice(plan.workers))
+                elif op == "grow":
+                    plan.resize(plan.workers
+                                + [f"x{rng.randrange(10**6)}"])
+                elif op == "shrink" and len(plan.workers) > repl:
+                    plan.resize(plan.workers[:-1])
+                _assert_invariants(plan)
+                assert sorted(plan.assignment) == list(range(n_shards))
+
+        prop()
+    except ImportError:                              # hypothesis not baked in
+        for n_shards in (1, 5, 12, 24):
+            for n_workers in (1, 2, 3, 5, 8):
+                for repl in (1, 2, 3):
+                    if repl > n_workers:
+                        continue
+                    names = [f"w{i}" for i in range(n_workers)]
+                    plan = ReplicatedShardPlan(n_shards, names,
+                                               replication=repl)
+                    _assert_invariants(plan)
+
+
+def test_placement_rejects_colocation():
+    with pytest.raises(ValueError, match="replication"):
+        ReplicatedShardPlan(4, ["w0", "w1"], replication=3)
+    with pytest.raises(ValueError, match="replication"):
+        ReplicatedShardPlan(4, ["w0", "w1"], replication=0)
+
+
+def test_placement_fail_conserves_shards_and_rejects_undershoot():
+    plan = ReplicatedShardPlan(10, ["w0", "w1", "w2"], replication=2)
+    before = {s: set(plan.replicas(s)) for s in range(10)}
+    moved = plan.fail("w1")
+    _assert_invariants(plan)
+    assert sorted(plan.assignment) == list(range(10))
+    # only w1's slots moved; surviving slots stayed put
+    for s, new in moved:
+        assert new in plan.replicas(s) and new != "w1"
+    for s in range(10):
+        assert before[s] - {"w1"} <= set(plan.replicas(s))
+    # one more loss would leave 1 worker < R=2: refused, plan unchanged
+    snap = {s: list(plan.replicas(s)) for s in range(10)}
+    with pytest.raises(RuntimeError, match="replication"):
+        plan.fail(plan.workers[0])
+    assert {s: list(plan.replicas(s)) for s in range(10)} == snap
+
+
+def test_placement_resize_moves_minimally():
+    plan = ReplicatedShardPlan(12, ["w0", "w1", "w2"], replication=2)
+    before = {s: set(plan.replicas(s)) for s in range(12)}
+    moved = plan.resize(["w0", "w1", "w2", "w3"])
+    _assert_invariants(plan)
+    # total slots = 24; fair share on 4 workers = 6 -> at most 6 slots move
+    assert 0 < len(moved) <= math.ceil(12 * 2 / 4)
+    # every move is into the plan; untouched shards kept their replicas
+    touched = {s for s, _ in moved}
+    for s in range(12):
+        if s not in touched:
+            assert set(plan.replicas(s)) == before[s]
+
+
+# ---------------------------------------------------------------------------
+# fault injector
+# ---------------------------------------------------------------------------
+
+def test_injector_kill_delay_drop():
+    inj = FaultInjector()
+    inj.before_call("w0")                            # default: no-op
+    inj.kill("w0")
+    with pytest.raises(WorkerKilled):
+        inj.before_call("w0")
+    inj.revive("w0")
+    inj.before_call("w0")
+    inj.drop_every("w1", 3)
+    outcomes = []
+    for _ in range(9):
+        try:
+            inj.before_call("w1")
+            outcomes.append("ok")
+        except ResponseDropped:
+            outcomes.append("drop")
+    assert outcomes == ["ok", "ok", "drop"] * 3      # exactly every 3rd
+    with pytest.raises(ValueError):
+        inj.drop_every("w1", 0)
+    inj.clear()
+    inj.before_call("w1")
+
+
+# ---------------------------------------------------------------------------
+# fleet query path
+# ---------------------------------------------------------------------------
+
+def _run(fleet, queries):
+    res = fleet.search_batch(queries)
+    return np.asarray(res.ids), np.asarray(res.dists), res.stats
+
+
+def test_fleet_matches_batched_reference(db, index):
+    from repro.serving import ssh_search_batch
+    queries = db[jnp.asarray([3, 100, 250, 444])]
+    fleet = make_fleet(index)
+    try:
+        ids, dists, stats = _run(fleet, queries)
+        ref = ssh_search_batch(
+            queries, index,
+            config=SearchConfig(topk=5, top_c=64, band=8))
+        np.testing.assert_array_equal(ids, np.asarray(ref.ids))
+        np.testing.assert_allclose(dists, np.asarray(ref.dists),
+                                   rtol=1e-5, atol=1e-5)
+        assert stats.failovers == 0
+    finally:
+        fleet.close()
+
+
+def test_fleet_chaos_bit_identical(db, index):
+    """50 queries under random kill/delay/drop injection answer with
+    bit-identical ids AND distances to the no-fault run."""
+    rng = np.random.default_rng(7)
+    qids = rng.integers(0, db.shape[0], 50)
+    queries = db[jnp.asarray(qids)]
+    fleet = make_fleet(index, hedge_ms=5.0)
+    try:
+        healthy_ids, healthy_d, _ = _run(fleet, queries)
+        workers = list(fleet.workers)
+        total_stats = []
+        for lo in range(0, 50, 10):                  # re-roll faults per wave
+            fleet.injector.clear()
+            # at most R-1 = 1 concurrently-killed worker, plus delays
+            # and dropped responses on others
+            fleet.injector.kill(rng.choice(workers))
+            fleet.injector.delay(rng.choice(workers), 20.0)
+            fleet.injector.drop_every(rng.choice(workers), 2)
+            ids, d, stats = _run(fleet, queries[lo:lo + 10])
+            np.testing.assert_array_equal(ids, healthy_ids[lo:lo + 10])
+            np.testing.assert_array_equal(d, healthy_d[lo:lo + 10])
+            total_stats.append(stats)
+        assert sum(s.failovers for s in total_stats) > 0   # faults were hit
+        assert any(s.degraded for s in total_stats)
+        assert fleet.failovers_total > 0
+    finally:
+        fleet.injector.clear()
+        fleet.close()
+
+
+def test_fleet_failover_exhaustion_raises(db, index):
+    """Killing every replica of a shard is loud, not silently wrong."""
+    fleet = make_fleet(index, replication=2, fleet_workers=2)
+    try:
+        for w in list(fleet.workers):                # both replicas down
+            fleet.injector.kill(w)
+        with pytest.raises(RuntimeError, match="replicas"):
+            fleet.search_batch(db[jnp.asarray([3])])
+    finally:
+        fleet.injector.clear()
+        fleet.close()
+
+
+def test_fleet_hedging_recovers_stragglers(db, index):
+    """A consistently slow worker triggers hedging; results identical and
+    the hedge counter surfaces it."""
+    queries = db[jnp.asarray([3, 100, 250])]
+    fleet = make_fleet(index, hedge_policy="fixed", hedge_ms=10.0)
+    try:
+        healthy_ids, healthy_d, _ = _run(fleet, queries)
+        fleet.injector.delay(next(iter(fleet.workers)), 200.0)
+        ids, d, stats = _run(fleet, queries)
+        np.testing.assert_array_equal(ids, healthy_ids)
+        np.testing.assert_array_equal(d, healthy_d)
+        assert stats.hedged > 0 and stats.degraded
+    finally:
+        fleet.injector.clear()
+        fleet.close()
+
+
+def test_fleet_live_resize_and_drain(db, index):
+    queries = db[jnp.asarray([3, 100, 250, 444])]
+    fleet = make_fleet(index)
+    try:
+        healthy_ids, healthy_d, _ = _run(fleet, queries)
+        assert fleet.resize(6) > 0                   # scale out, shards move
+        ids, d, _ = _run(fleet, queries)
+        np.testing.assert_array_equal(ids, healthy_ids)
+        np.testing.assert_array_equal(d, healthy_d)
+        moved = fleet.drain(sorted(fleet.workers)[0])
+        assert moved > 0
+        assert fleet.rebalanced_shards_total > 0
+        ids, d, _ = _run(fleet, queries)
+        np.testing.assert_array_equal(ids, healthy_ids)
+        np.testing.assert_array_equal(d, healthy_d)
+        with pytest.raises(RuntimeError, match="drain"):
+            while True:                              # drain below R: refused
+                fleet.drain(sorted(fleet.workers)[0])
+    finally:
+        fleet.close()
+
+
+# ---------------------------------------------------------------------------
+# engine integration: drain with zero queued-query loss
+# ---------------------------------------------------------------------------
+
+def test_engine_drain_loses_no_queries(db, index):
+    from repro.serving import ServingEngine
+    cfg = SearchConfig(topk=5, top_c=64, band=8, replication=2,
+                       fleet_workers=4, max_batch=4,
+                       max_wait_ms=1.0).validate()
+    engine = ServingEngine(index, cfg)               # auto-routes to fleet
+    assert isinstance(engine.searcher, FleetSearcher)
+    rng = np.random.default_rng(3)
+    qids = [int(i) for i in rng.integers(0, db.shape[0], 30)]
+    with engine:
+        engine.search(db[qids[0]])                   # warm the path
+        futs = [engine.submit(db[i]) for i in qids]
+        drained = threading.Thread(
+            target=lambda: engine.drain(sorted(engine.searcher.workers)[0]))
+        drained.start()                              # retire mid-stream
+        results = [f.result(timeout=120) for f in futs]
+        drained.join(timeout=120)
+    assert len(results) == len(qids)                 # zero lost queries
+    for i, res in zip(qids, results):
+        assert int(res.ids[0]) == i                  # each answered, exactly
+    snap = engine.metrics.snapshot()
+    assert snap["requests_total"] >= len(qids)
+    assert snap["rebalanced_shards_total"] > 0
+
+
+def test_engine_metrics_surface_fleet_counters(db, index):
+    from repro.serving import ServingEngine
+    cfg = SearchConfig(topk=5, top_c=64, band=8, replication=2,
+                       fleet_workers=4).validate()
+    engine = ServingEngine(index, cfg)
+    queries = db[jnp.asarray([3, 100])]
+    engine.search_batch(queries)                     # healthy: zeros
+    engine.searcher.injector.kill("w0")
+    engine.search_batch(queries)
+    snap = engine.metrics.snapshot()
+    assert snap["failovers_total"] > 0
+    assert snap["degraded_total"] > 0
+    engine.searcher.injector.clear()
+    engine.searcher.close()
+
+
+# ---------------------------------------------------------------------------
+# facade: registry routing
+# ---------------------------------------------------------------------------
+
+def test_registry_routes_distributed_to_fleet_when_replicated(db, index):
+    from repro.db.registry import make_searcher
+    cfg = SearchConfig(topk=5, top_c=64, band=8, searcher="distributed",
+                       replication=2, fleet_workers=4).validate()
+    s = make_searcher(index, cfg)
+    try:
+        assert isinstance(s._inner, FleetSearcher)
+        res = s.search(db[3])
+        assert res.ids[0] == 3                       # self-match sanity
+    finally:
+        s.close()
+
+
+def test_registry_fleet_searcher_contract(db, index):
+    from repro.db.registry import make_searcher
+    cfg = SearchConfig(topk=5, top_c=64, band=8, searcher="fleet",
+                       replication=2, fleet_workers=4).validate()
+    s = make_searcher(index, cfg)
+    try:
+        out = s.search_batch(db[jnp.asarray([3, 100])])
+        assert len(out) == 2 and out[0].ids[0] == 3
+        s.injector.kill("w0")                        # chaos hook exposed
+        out2 = s.search_batch(db[jnp.asarray([3, 100])])
+        np.testing.assert_array_equal(out2[0].ids, out[0].ids)
+        with pytest.raises(NotImplementedError):
+            s.insert(db[:1])
+    finally:
+        s.injector.clear()
+        s.close()
