@@ -140,7 +140,8 @@ def _drain_scenario(index, cfg, queries, base: str, case) -> None:
     queries (the acceptance criterion: zero)."""
     from repro.serving import ServingEngine
     n_requests = N_INVOCATIONS
-    engine = ServingEngine(index, cfg.replace(max_batch=4, max_wait_ms=1.0))
+    engine = ServingEngine(index, cfg.replace(batch_policy=cfg.batch_policy
+                                          .replace(max_batch=4, max_wait_ms=1.0)))
     engine.search_batch(queries)                # warm outside the window
     t0 = time.perf_counter()
     with engine:

@@ -1,0 +1,235 @@
+"""Closed-loop load benchmark: offered-load sweep + adaptive-vs-fixed knee.
+
+Two experiments over the synthetic-ECG index (DESIGN.md §12):
+
+1. **Sweep** — replay the same Poisson workload shape at a ladder of
+   offered loads (scaled off the measured full-batch service rate, so
+   the ladder brackets the knee at any machine speed) through the
+   default fixed-policy engine.  Each point reports coordinated-
+   omission-safe p50/p95/p99, achieved QPS, queue-depth percentiles and
+   the batch-size histogram; the summary row derives
+   ``max_sustainable_qps`` — the highest offered load whose p99 met the
+   SLO while throughput kept up.
+
+2. **Knee** — at the measured knee load, replay one identical trace
+   through fixed policies at several ``max_wait_ms`` settings and
+   through the adaptive policy.  The adaptive row derives
+   ``p99_ratio_vs_best_fixed`` (acceptance: ≤ 1.1) and ``identical``
+   (bit-identical per-request top-k ids/distances vs fixed — batching
+   never changes answers).
+
+CSV rows: loadgen/ecg/len128/<cell>, us_per_query = p50 latency in µs.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1")
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (PARAMS, case_for, dataset_cached as dataset,
+                               report, search_config)
+from repro.core import SSHIndex
+from repro.db import BatchPolicy
+from repro.loadgen import (Mixture, WorkloadSpec, generate_trace,
+                           run_trace, sweep)
+from repro.serving import ServingEngine
+
+KIND, LENGTH = "ecg", 128
+TOP_C = 128
+MAX_BATCH = 8
+# offered loads as fractions of the measured full-batch service rate —
+# the last point sits past the knee on purpose (the sweep must observe
+# saturation to certify the sustainable point below it)
+LOAD_FRACS = (0.25, 0.5, 0.75, 1.1)
+FIXED_WAITS_MS = (0.5, 2.0, 8.0)
+KNEE_REPS = 2                    # best-of reps per knee policy
+SWEEP_REPS = 2                   # best-of reps per sweep point
+TRACE_SECONDS = 6.0              # per-point trace duration target
+SLO_SERVICE_MULT = 4.0           # SLO: p99 <= this x one batch's service
+
+
+def _bench_config(policy: BatchPolicy):
+    return search_config(KIND, LENGTH, top_c=TOP_C, multiprobe_offsets=1,
+                         searcher="engine", batch_policy=policy)
+
+
+def _measure_service_s(index, db, cfg) -> float:
+    """Best-of-5 seconds to serve one full batch (compiled)."""
+    engine = ServingEngine(index, cfg)
+    block = db[:MAX_BATCH]
+    engine.searcher.search_batch(block)          # compile
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        engine.searcher.search_batch(block)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _warm_engine_factory(index, cfg, db, pools, n_db):
+    """Engine factory for the sweep; compiled shapes warm once, globally.
+
+    Bucket warm-up alone is not enough: the first *live* replay of the
+    process still pays residual one-time costs (allocator growth, lazy
+    imports on the batcher thread, OS scheduler ramp) that can spiral a
+    near-capacity run into a queue it never drains.  A short throwaway
+    trace through the live submit path absorbs them off the record.
+    """
+    def make():
+        return ServingEngine(index, cfg)
+    warm = make()
+    for s in cfg.buckets():
+        warm.searcher.search_batch(db[:s])
+    throwaway = WorkloadSpec(process="poisson", rate_qps=30.0,
+                             n_requests=32, seed=1)
+    with warm:
+        run_trace(warm, generate_trace(throwaway, {LENGTH: n_db}), pools)
+    return make
+
+
+def run() -> None:
+    db, _ = dataset(KIND, LENGTH)
+    params = PARAMS[KIND]
+    index = SSHIndex.build(db, spec=params.to_spec())
+    n_db = int(db.shape[0])
+    pools = {LENGTH: db}
+
+    fixed_cfg = _bench_config(BatchPolicy(mode="fixed",
+                                          max_batch=MAX_BATCH))
+    service_s = _measure_service_s(index, db, fixed_cfg)
+    capacity_qps = MAX_BATCH / service_s
+    slo_p99_ms = max(100.0, SLO_SERVICE_MULT * service_s * 1e3)
+    print(f"# loadgen: batch{MAX_BATCH} service {service_s*1e3:.1f}ms "
+          f"-> capacity ~{capacity_qps:.1f} qps, SLO p99 <= "
+          f"{slo_p99_ms:.0f}ms")
+
+    # ---- experiment 1: offered-load sweep (fixed default policy) --------
+    loads = [max(1.0, capacity_qps * f) for f in LOAD_FRACS]
+    spec = WorkloadSpec(process="poisson", rate_qps=loads[0],
+                        n_requests=1, seed=17,
+                        topks=Mixture((5, 10), (0.5, 0.5)))
+
+    def spec_at(load: float) -> WorkloadSpec:
+        n = int(np.clip(load * TRACE_SECONDS, 16, 256))
+        return spec.replace(rate_qps=load, n_requests=n)
+
+    factory = _warm_engine_factory(index, fixed_cfg, db, pools, n_db)
+    results = []
+    for load in loads:
+        pt_spec = spec_at(load)
+        # best-of-SWEEP_REPS by p99: one scheduler hiccup on one point
+        # must not redefine the knee the adaptive comparison runs at
+        reps = []
+        for _ in range(SWEEP_REPS):
+            res, _ = sweep(factory, pt_spec, [load], pools,
+                           slo_p99_ms=slo_p99_ms)
+            reps.append(res[0])
+        results.append(min(reps, key=lambda r: r.latency_p99_ms))
+    _, max_sustainable = _derive_sustainable(results, slo_p99_ms)
+
+    for res in results:
+        report(f"loadgen/{KIND}/len{LENGTH}/sweep/"
+               f"qps{res.offered_qps:.0f}",
+               res.latency_p50_ms * 1e3,
+               {"offered_qps": round(res.offered_qps, 2),
+                "achieved_qps": round(res.achieved_qps, 2),
+                "p99_ms": round(res.latency_p99_ms, 2),
+                "queue_depth_p95": res.queue_depth_p95,
+                "batch_occupancy_mean": round(res.batch_occupancy_mean, 3),
+                "batch_histogram": _hist_str(res.batch_histogram),
+                "n_requests": res.n_requests},
+               stage_us=res.stage_us or None,
+               case=case_for(KIND, LENGTH, n_db, batch=MAX_BATCH,
+                             spec=params.to_spec(), config=fixed_cfg))
+
+    report(f"loadgen/{KIND}/len{LENGTH}/max_sustainable",
+           1e6 / max(max_sustainable, 1e-6),
+           {"max_sustainable_qps": round(max_sustainable, 2),
+            "slo_p99_ms": round(slo_p99_ms, 1),
+            "capacity_qps_estimate": round(capacity_qps, 2),
+            "n_sweep_points": len(results)},
+           case=case_for(KIND, LENGTH, n_db, batch=MAX_BATCH,
+                         spec=params.to_spec(), config=fixed_cfg))
+
+    # ---- experiment 2: adaptive vs fixed at the knee --------------------
+    knee_qps = max_sustainable if max_sustainable > 0 else loads[1]
+    knee_spec = spec_at(knee_qps)
+    trace = generate_trace(knee_spec, {LENGTH: n_db})
+
+    def run_policy(policy: BatchPolicy):
+        """Best-of-KNEE_REPS replays (min p99 — same scheduler-noise
+        suppression as the best-of-5 service probe); answers must be
+        identical across every rep, so bit-identity is checked over
+        KNEE_REPS x KNEE_REPS policy pairs, not one lucky run."""
+        reps = []
+        for _ in range(KNEE_REPS):
+            cfg = _bench_config(policy)
+            engine = ServingEngine(index, cfg)
+            with engine:
+                for s in cfg.buckets():
+                    engine.searcher.search_batch(db[:s])
+                reps.append(run_trace(engine, trace, pools))
+        best = min(reps, key=lambda r: r.latency_p99_ms)
+        assert all(r.same_answers(reps[0]) for r in reps)
+        return best
+
+    fixed_runs = {w: run_policy(BatchPolicy(mode="fixed",
+                                            max_batch=MAX_BATCH,
+                                            max_wait_ms=w))
+                  for w in FIXED_WAITS_MS}
+    adaptive = run_policy(BatchPolicy(mode="adaptive",
+                                      max_batch=MAX_BATCH))
+
+    best_fixed_p99 = min(r.latency_p99_ms for r in fixed_runs.values())
+    for w, res in fixed_runs.items():
+        report(f"loadgen/{KIND}/len{LENGTH}/knee/fixed_w{w:g}",
+               res.latency_p50_ms * 1e3,
+               {"p99_ms": round(res.latency_p99_ms, 2),
+                "achieved_qps": round(res.achieved_qps, 2),
+                "batch_occupancy_mean": round(res.batch_occupancy_mean, 3),
+                "knee_qps": round(knee_qps, 2)},
+               case=case_for(KIND, LENGTH, n_db, batch=MAX_BATCH,
+                             spec=params.to_spec(), config=fixed_cfg))
+    identical = all(adaptive.same_answers(r) for r in fixed_runs.values())
+    ratio = adaptive.latency_p99_ms / best_fixed_p99
+    report(f"loadgen/{KIND}/len{LENGTH}/knee/adaptive",
+           adaptive.latency_p50_ms * 1e3,
+           {"p99_ms": round(adaptive.latency_p99_ms, 2),
+            "best_fixed_p99_ms": round(best_fixed_p99, 2),
+            "p99_ratio_vs_best_fixed": round(ratio, 3),
+            "identical": identical,
+            "achieved_qps": round(adaptive.achieved_qps, 2),
+            "batch_occupancy_mean": round(adaptive.batch_occupancy_mean, 3),
+            "knee_qps": round(knee_qps, 2)},
+           case=case_for(KIND, LENGTH, n_db, batch=MAX_BATCH,
+                         spec=params.to_spec(),
+                         config=_bench_config(
+                             BatchPolicy(mode="adaptive",
+                                         max_batch=MAX_BATCH))))
+    if not identical:
+        raise AssertionError(
+            "adaptive batching changed answers vs fixed batching")
+
+
+def _derive_sustainable(results, slo_p99_ms: float):
+    from repro.loadgen.harness import SUSTAINED_FRAC
+    best = 0.0
+    for res in results:
+        if res.latency_p99_ms <= slo_p99_ms and \
+                res.achieved_qps >= SUSTAINED_FRAC * res.offered_qps:
+            best = max(best, res.offered_qps)
+    return results, best
+
+
+def _hist_str(hist) -> str:
+    return "|".join(f"{k}:{v}" for k, v in sorted(hist.items()))
+
+
+if __name__ == "__main__":
+    run()

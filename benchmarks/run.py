@@ -31,6 +31,8 @@ MODULES = [
                      "latency vs stream length"),
     ("dist_bench", "resilient fleet: p99 under dead+slow workers, "
                    "bit-identical recovery, zero-loss drain"),
+    ("loadgen_bench", "closed-loop load sweep: max sustainable qps, "
+                      "adaptive-vs-fixed batching at the knee"),
 ]
 
 #: Committed smoke-scale baseline (regenerate with
@@ -83,6 +85,13 @@ def _parse_args(argv):
                          "the healthy p99, recovery was bit-identical, "
                          "and the engine drain lost zero queries "
                          "(DESIGN.md §11 tentpole gate; implies --json)")
+    ap.add_argument("--min-sustainable-qps", type=float, default=None,
+                    metavar="F",
+                    help="fail unless loadgen_bench's offered-load sweep "
+                         "sustained at least this many qps under its p99 "
+                         "SLO, and the adaptive policy's answers at the "
+                         "knee were bit-identical to fixed batching "
+                         "(DESIGN.md §12 tentpole gate; implies --json)")
     return ap.parse_args(argv)
 
 
@@ -99,7 +108,8 @@ def main(argv=None) -> int:
         os.environ["BENCH_SCALE"] = args.scale
     if args.baseline is not None or args.min_lb_pruned is not None \
             or args.min_encode_speedup is not None \
-            or args.max_p99_degradation is not None:
+            or args.max_p99_degradation is not None \
+            or args.min_sustainable_qps is not None:
         args.json = True
 
     modules = MODULES
@@ -139,6 +149,8 @@ def main(argv=None) -> int:
         rc = max(rc, _encode_gate(args))
     if args.max_p99_degradation is not None:
         rc = max(rc, _p99_gate(args))
+    if args.min_sustainable_qps is not None:
+        rc = max(rc, _sustainable_gate(args))
     return rc
 
 
@@ -278,6 +290,52 @@ def _p99_gate(args) -> int:
                   "in report)")
         return 1
     print("# p99-gate: OK")
+    return 0
+
+
+def _sustainable_gate(args) -> int:
+    """Serving-capacity floor + answer-invariance over loadgen_bench:
+    the offered-load sweep must have sustained ``--min-sustainable-qps``
+    under its p99 SLO, and the adaptive policy at the knee must have
+    returned bit-identical top-k to fixed batching (the adaptive control
+    law is a scheduling change only — any answer drift is a bug, not a
+    tuning issue)."""
+    from repro.bench import load_report
+    path = os.path.join(args.out, "BENCH_loadgen_bench.json")
+    if not os.path.exists(path):
+        print("# sustainable-gate: SKIP (loadgen_bench not in this run)")
+        return 0
+    checked, bad = 0, []
+    for r in load_report(path).results:
+        d = r.derived or {}
+        if r.name.endswith("/max_sustainable"):
+            checked += 1
+            qps = d.get("max_sustainable_qps")
+            if qps is None or float(qps) < args.min_sustainable_qps:
+                bad.append((r.name, f"max_sustainable_qps={qps} < "
+                            f"{args.min_sustainable_qps}"))
+            else:
+                print(f"# sustainable-gate: {r.name} "
+                      f"max_sustainable_qps={float(qps):.1f} >= "
+                      f"{args.min_sustainable_qps} (SLO p99 <= "
+                      f"{d.get('slo_p99_ms')}ms)")
+        elif r.name.endswith("/knee/adaptive"):
+            checked += 1
+            if not d.get("identical"):
+                bad.append((r.name, "identical is false (adaptive "
+                            "changed answers vs fixed)"))
+            else:
+                print(f"# sustainable-gate: {r.name} bit-identical to "
+                      f"fixed, p99_ratio_vs_best_fixed="
+                      f"{d.get('p99_ratio_vs_best_fixed')}")
+    for name, why in bad:
+        print(f"# sustainable-gate: FAIL {name} {why}")
+    if bad or checked < 2:
+        if checked < 2:
+            print("# sustainable-gate: FAIL (missing /max_sustainable "
+                  "or /knee/adaptive entries in report)")
+        return 1
+    print("# sustainable-gate: OK")
     return 0
 
 

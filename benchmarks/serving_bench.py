@@ -90,7 +90,8 @@ def _time_batched(queries, index, base_cfg):
     """{batch: Σ per-block best seconds} measured round-robin."""
     cells = {}
     for batch in BATCH_SIZES:
-        engine = ServingEngine(index, base_cfg.replace(max_batch=batch))
+        engine = ServingEngine(index, base_cfg.replace(
+            batch_policy=base_cfg.batch_policy.replace(max_batch=batch)))
         blocks = [queries[i:i + batch]
                   for i in range(0, len(queries), batch)]
         for blk in blocks:                     # warm the compiled chunks
@@ -156,7 +157,8 @@ def run() -> None:
                    lb_pruned_frac=snap["lb_pruned_frac_mean"],
                    case=case_for(kind, length, int(db.shape[0]),
                                  batch=batch, spec=params.to_spec(),
-                                 config=cfg.replace(max_batch=batch)))
+                                 config=cfg.replace(
+        batch_policy=cfg.batch_policy.replace(max_batch=batch))))
             prev_qps = qps
 
 

@@ -160,15 +160,21 @@ def dtw_pairs_chunked(q_rows: jnp.ndarray, c_rows: jnp.ndarray,
     use_pallas = ops.resolve_backend(backend)
     p = int(q_rows.shape[0])
     pad = (-p) % PAIR_CHUNK_SMALL
+    # padding is host-side numpy: P is data-dependent, and a device
+    # concat on a fresh (P, m) shape compiles per distinct P (see the
+    # union-table comment in rerank_batch) — only the fixed-shape
+    # chunks below may touch the device
+    q_rows = np.asarray(q_rows)
+    c_rows = np.asarray(c_rows)
     thr = None
     if threshold is not None:
-        thr = jnp.broadcast_to(
-            jnp.asarray(threshold, jnp.float32).reshape(-1), (p,))
+        thr = np.broadcast_to(
+            np.asarray(threshold, np.float32).reshape(-1), (p,))
     if pad:
-        q_rows = jnp.concatenate([q_rows, q_rows[:1].repeat(pad, 0)], 0)
-        c_rows = jnp.concatenate([c_rows, c_rows[:1].repeat(pad, 0)], 0)
+        q_rows = np.concatenate([q_rows, q_rows[:1].repeat(pad, 0)], 0)
+        c_rows = np.concatenate([c_rows, c_rows[:1].repeat(pad, 0)], 0)
         if thr is not None:
-            thr = jnp.concatenate([thr, thr[:1].repeat(pad, 0)], 0)
+            thr = np.concatenate([thr, thr[:1].repeat(pad, 0)], 0)
     out, i, total = [], 0, p + pad
     for chunk in (PAIR_CHUNK, PAIR_CHUNK_SMALL):
         while total - i >= chunk:
@@ -176,6 +182,37 @@ def dtw_pairs_chunked(q_rows: jnp.ndarray, c_rows: jnp.ndarray,
                 q_rows[i:i + chunk], c_rows[i:i + chunk], band,
                 use_pallas=use_pallas,
                 threshold=None if thr is None else thr[i:i + chunk])))
+            i += chunk
+    return np.concatenate(out)[:p]
+
+
+def lb_improved_pairs_chunked(q_rows: jnp.ndarray, c_rows: jnp.ndarray,
+                              band: int) -> np.ndarray:
+    """Row-aligned LB_Improved in the same fixed-shape chunks as
+    ``dtw_pairs_chunked``: (P, m) x (P, m) -> (P,).
+
+    The survivor-pair count P is data-dependent, so jitting on the raw
+    (P, m) shape compiles a fresh executable for nearly every live batch
+    — under real traffic (distinct queries per batch) the re-rank spends
+    ~10x its compute in XLA compilation, invisible to the device-synced
+    stage timers.  Chunking caps the shape set at two programs.  The
+    bound is lane-independent, so padding lanes (row 0 repeated) never
+    change the first P values.
+    """
+    p = int(q_rows.shape[0])
+    if not p:
+        return np.zeros(0, np.float32)
+    pad = (-p) % PAIR_CHUNK_SMALL
+    q_rows = np.asarray(q_rows)        # host-side pad: see dtw_pairs_chunked
+    c_rows = np.asarray(c_rows)
+    if pad:
+        q_rows = np.concatenate([q_rows, q_rows[:1].repeat(pad, 0)], 0)
+        c_rows = np.concatenate([c_rows, c_rows[:1].repeat(pad, 0)], 0)
+    out, i, total = [], 0, p + pad
+    for chunk in (PAIR_CHUNK, PAIR_CHUNK_SMALL):
+        while total - i >= chunk:
+            out.append(np.asarray(lb.lb_improved_pairs(
+                q_rows[i:i + chunk], c_rows[i:i + chunk], band)))
             i += chunk
     return np.concatenate(out)[:p]
 
@@ -400,21 +437,27 @@ def rerank_batch(queries: jnp.ndarray, ids: np.ndarray, valid: np.ndarray,
         ok = valid
 
     # flattened survivor pairs, through the deduped union table (built
-    # here so the LB_Improved pass and the DTW reuse one gather)
+    # here so the LB_Improved pass and the DTW reuse one gather).  All
+    # pair bookkeeping stays host-side numpy: the pair count P is data-
+    # dependent, and every eager device op on a fresh (P, m) shape — a
+    # gather, a boolean mask, a pad concat — compiles its own tiny
+    # executable.  One compile is cheap; under live traffic (new P every
+    # batch) they dominate the re-rank wall clock.  Devices only see the
+    # fixed-shape chunks inside the LB/DTW dispatchers.
     rows_idx, cols_idx = np.nonzero(ok)                   # (P,) row-major
     pair_ids = ids[rows_idx, cols_idx]
     union = np.unique(pair_ids)                           # (U,) sorted
-    union_series = index.series[jnp.asarray(union)]       # (U, m)
+    series_np = np.asarray(index.series)   # zero-copy view on CPU jax
+    union_series = series_np[union]                       # (U, m)
     pos = np.searchsorted(union, pair_ids)
-    c_rows = union_series[jnp.asarray(pos)]               # (P, m)
-    q_rows = queries[jnp.asarray(rows_idx)]               # (P, m)
+    c_rows = union_series[pos]                            # (P, m)
+    q_rows = np.asarray(queries)[rows_idx]                # (P, m)
 
     if cascade_on:
         with timer.stage("lb_improved") as sync:
             # survivor-only two-pass bound, same values as sequential
             # (per-row vmap of the identical elementwise program)
-            lbi = np.asarray(sync(lb.lb_improved_pairs(q_rows, c_rows,
-                                                       band)))
+            lbi = sync(lb_improved_pairs_chunked(q_rows, c_rows, band))
             forced_pair = forced[rows_idx, cols_idx]
             pass123_pair = (k1 & k2 & k3)[rows_idx, cols_idx]
             thr_pair = thr_rows[rows_idx]
@@ -425,13 +468,12 @@ def rerank_batch(queries: jnp.ndarray, ids: np.ndarray, valid: np.ndarray,
             ok[rows_idx[~keep_pair], cols_idx[~keep_pair]] = False
             rows_idx = rows_idx[keep_pair]
             cols_idx = cols_idx[keep_pair]
-            keep_j = jnp.asarray(keep_pair)
-            q_rows = sync(q_rows[keep_j])
-            c_rows = sync(c_rows[keep_j])
+            q_rows = q_rows[keep_pair]
+            c_rows = c_rows[keep_pair]
     n_final = ok.sum(axis=1)                              # (B,)
 
     with timer.stage("dtw") as sync:
-        thr_pairs = (jnp.asarray(thr_rows[rows_idx])
+        thr_pairs = (thr_rows[rows_idx]
                      if (cascade_on and early_abandon) else None)
         pair_d = dtw_pairs_chunked(q_rows, c_rows, band, backend,
                                    threshold=thr_pairs)   # (P,)

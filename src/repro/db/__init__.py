@@ -2,6 +2,8 @@
 
 Public API:
   SearchConfig                       — every search-time knob, one object
+  BatchPolicy                        — the dynamic batcher's policy
+                                       (SearchConfig.batch_policy)
   TimeSeriesDB                       — build / add / search / search_batch
                                        / save / load facade
   register_searcher / available_searchers / make_searcher
@@ -14,7 +16,7 @@ points in the import graph — ``repro.core.search`` and
 loaded lazily via PEP 562 so ``from repro.db.config import SearchConfig``
 never drags the whole serving stack in.
 """
-from repro.db.config import SearchConfig
+from repro.db.config import BatchPolicy, SearchConfig
 
 _LAZY = {
     "IndexSpec": ("repro.encoders.base", "IndexSpec"),
@@ -27,7 +29,7 @@ _LAZY = {
     "is_database_dir": ("repro.db.persistence", "is_database_dir"),
 }
 
-__all__ = ["SearchConfig", *_LAZY]
+__all__ = ["BatchPolicy", "SearchConfig", *_LAZY]
 
 
 def __getattr__(name):

@@ -28,6 +28,145 @@ _KERNEL_BACKENDS = ("auto", "pallas", "jnp")
 
 _HEDGE_POLICIES = ("off", "fixed", "adaptive")
 
+_BATCH_MODES = ("fixed", "adaptive")
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    """Dynamic-batcher policy of the ``ServingEngine`` (DESIGN.md §12).
+
+    ``mode="fixed"`` is the classic two-knob batcher: the batch closes at
+    ``max_batch`` requests or ``max_wait_ms`` after it opened, whichever
+    comes first.  ``mode="adaptive"`` replaces the fixed wait with a
+    closed-loop budget computed from the instantaneous queue depth and an
+    EWMA of per-batch service seconds (:meth:`wait_budget_s`), so the
+    engine tracks the latency/throughput knee without hand-tuning.
+
+    Either mode changes only *which requests share a dispatch* and the
+    padding geometry — never the per-query answers (the engine's batched
+    path is bit-identical to sequential search for every batch
+    composition; enforced in ``tests/test_loadgen.py``).
+
+    * ``max_batch`` — requests per dispatch ceiling (also bounds the
+      compiled bucket shapes, :meth:`buckets`).
+    * ``max_wait_ms`` — wait ceiling: the fixed-mode deadline, and the
+      hard upper clamp on the adaptive budget.
+    * ``min_wait_ms`` — adaptive lower clamp (never spin below this
+      unless the queue already covers the batch).
+    * ``gain`` — fraction of the EWMA batch service time worth spending
+      on waiting for more arrivals (marginal-gain knob: a batch amortises
+      its fixed dispatch cost, which scales with the service time).
+    * ``ewma_alpha`` — smoothing of the per-batch service-seconds EWMA
+      (weight of the newest observation).
+    """
+
+    mode: str = "fixed"
+    max_batch: int = 8
+    max_wait_ms: float = 2.0
+    min_wait_ms: float = 0.05
+    gain: float = 0.5
+    ewma_alpha: float = 0.3
+
+    def validate(self) -> "BatchPolicy":
+        if self.mode not in _BATCH_MODES:
+            raise ValueError(f"batch mode must be one of {_BATCH_MODES}, "
+                             f"got {self.mode!r}")
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_wait_ms < 0:
+            raise ValueError(
+                f"max_wait_ms must be >= 0, got {self.max_wait_ms}")
+        if not 0 <= self.min_wait_ms <= self.max_wait_ms:
+            raise ValueError(
+                f"min_wait_ms ({self.min_wait_ms}) must be within "
+                f"[0, max_wait_ms={self.max_wait_ms}]")
+        if self.gain <= 0:
+            raise ValueError(f"gain must be > 0, got {self.gain}")
+        if not 0 < self.ewma_alpha <= 1:
+            raise ValueError(
+                f"ewma_alpha must be in (0, 1], got {self.ewma_alpha}")
+        return self
+
+    def replace(self, **changes: Any) -> "BatchPolicy":
+        """``dataclasses.replace`` + ``validate`` in one step."""
+        return dataclasses.replace(self, **changes).validate()
+
+    def buckets(self) -> List[int]:
+        """Padded batch sizes for the dynamic batcher: powers of two up
+        to ``max_batch`` (bounds the number of compiled programs)."""
+        out, b = [], 1
+        while b < self.max_batch:
+            out.append(b)
+            b *= 2
+        out.append(self.max_batch)
+        return out
+
+    def wait_budget_s(self, have: int, depth: int,
+                      service_ewma_s: Optional[float],
+                      engine_idle: bool = True,
+                      arrival_gap_s: Optional[float] = None) -> float:
+        """Seconds the batcher should keep a ``have``-request batch open
+        given ``depth`` queued behind it (the adaptive control law).
+
+        Fixed mode ignores the load signals and returns the classic
+        deadline.  Adaptive mode::
+
+            queue covers the batch     ->  0             (drain)
+            batch opened while busy    ->  min_wait_ms   (keep draining)
+            no EWMA yet                ->  max_wait_ms   (fixed fallback)
+            arrivals sparser than the
+            justified wait             ->  min_wait_ms   (nothing to
+                                                          coalesce)
+            else (idle engine, dense
+            arrivals)                  ->  clip(gain * S * (1 - fill),
+                                              min_wait, max_wait)
+
+        with ``fill = (have + depth) / max_batch``, ``S`` the EWMA of
+        per-batch service seconds, and ``arrival_gap_s`` the EWMA of
+        inter-submit gaps.  The marginal gain of waiting is amortising
+        the per-batch fixed cost (which scales with ``S``) over one
+        more request; the marginal cost is every request in hand
+        waiting.  Two discriminators keep that trade honest:
+        ``engine_idle`` — a batch opened back-to-back with the previous
+        one means the engine is the bottleneck, waiting cannot raise
+        throughput and only inflates tail latency, so drain at the
+        floor (batch size comes from whatever queued during the last
+        service); and ``arrival_gap_s`` — a stretch shorter than the
+        typical inter-arrival gap coalesces nothing, it is pure added
+        latency, so it must cover at least one expected arrival to be
+        worth paying.  Only an idle engine seeing arrivals denser than
+        the justified wait stretches (up to the ceiling).
+        """
+        if self.mode == "fixed":
+            return self.max_wait_ms / 1e3
+        if have + depth >= self.max_batch:
+            return 0.0                      # queue covers the batch: drain
+        if not engine_idle:
+            return self.min_wait_ms / 1e3   # busy: draining beats waiting
+        if service_ewma_s is None:
+            return self.max_wait_ms / 1e3   # no telemetry yet
+        fill = (have + depth) / self.max_batch
+        budget = min(max(self.gain * service_ewma_s * (1.0 - fill),
+                         self.min_wait_ms / 1e3),
+                     self.max_wait_ms / 1e3)
+        if arrival_gap_s is not None and arrival_gap_s > budget:
+            return self.min_wait_ms / 1e3   # too sparse to coalesce
+        return budget
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "BatchPolicy":
+        """Tolerant inverse of ``to_dict`` (unknown keys dropped with a
+        warning, mirroring ``SearchConfig.from_dict``)."""
+        known = {f.name for f in dataclasses.fields(cls)}
+        extra = sorted(set(d) - known)
+        if extra:
+            warnings.warn(f"BatchPolicy.from_dict: ignoring unknown "
+                          f"fields {extra}", RuntimeWarning, stacklevel=2)
+        return cls(**{k: v for k, v in d.items() if k in known})
+
 
 @dataclasses.dataclass(frozen=True)
 class SearchConfig:
@@ -80,9 +219,13 @@ class SearchConfig:
       "distributed" (shard fan-out over a mesh), "engine" (dynamic
       batcher), "fleet" (replicated hedged fan-out with failover and
       live elasticity).  See ``repro.db.registry``.
-    * ``max_batch`` / ``max_wait_ms`` — dynamic-batcher policy
-      (latency/throughput trade-off; "engine" searcher and
-      ``ServingEngine`` only).
+    * ``batch_policy`` — the dynamic batcher's :class:`BatchPolicy`
+      ("engine" searcher and ``ServingEngine`` only): fixed
+      ``max_batch``/``max_wait_ms`` two-knob batching, or
+      ``mode="adaptive"`` closed-loop waits driven by queue depth and
+      the service-time EWMA (DESIGN.md §12).  The flat ``max_batch=`` /
+      ``max_wait_ms=`` constructor kwargs remain as one-release
+      ``DeprecationWarning`` shims that populate the policy.
 
     Resilience (``repro.fleet``, "fleet" searcher; DESIGN.md §11):
 
@@ -133,8 +276,7 @@ class SearchConfig:
     early_abandon: bool = True
     backend: str = "auto"
     searcher: str = "batched"
-    max_batch: int = 8
-    max_wait_ms: float = 2.0
+    batch_policy: BatchPolicy = BatchPolicy()
     replication: int = 1
     fleet_workers: Optional[int] = None
     hedge_policy: str = "adaptive"
@@ -143,9 +285,32 @@ class SearchConfig:
     subseq_window: Optional[int] = None
     subseq_hop: int = 1
     exclusion_zone: Optional[int] = None
+    # One-release deprecation shims: the historical flat batcher knobs.
+    # Init-only (not part of the dataclass schema): when passed they warn
+    # and fold into ``batch_policy``, results identical.  They are NOT
+    # readable back — read ``cfg.batch_policy.max_batch`` instead
+    # (``dataclasses.replace`` re-feeds InitVar defaults through
+    # ``getattr``, so a read alias here would silently overwrite an
+    # explicitly-passed new policy).
+    max_batch: dataclasses.InitVar[Optional[int]] = None
+    max_wait_ms: dataclasses.InitVar[Optional[float]] = None
 
-    def __post_init__(self):
-        """Subclass hook (the deprecated ``EngineConfig`` warns here)."""
+    def __post_init__(self, max_batch, max_wait_ms):
+        if max_batch is None and max_wait_ms is None:
+            return
+        warnings.warn(
+            "SearchConfig(max_batch=..., max_wait_ms=...) flat batcher "
+            "kwargs are deprecated; pass "
+            "batch_policy=repro.db.BatchPolicy(...) instead",
+            DeprecationWarning, stacklevel=3)
+        changes = {}
+        if max_batch is not None:
+            changes["max_batch"] = max_batch
+        if max_wait_ms is not None:
+            changes["max_wait_ms"] = max_wait_ms
+        object.__setattr__(self, "batch_policy",
+                           dataclasses.replace(self.batch_policy,
+                                               **changes))
 
     # -- validation -------------------------------------------------------
     def validate(self) -> "SearchConfig":
@@ -182,11 +347,10 @@ class SearchConfig:
                 "use_host_buckets is only served by the 'local' searcher "
                 f"(got searcher={self.searcher!r}); the batched/"
                 "distributed paths probe the device-side key matrix")
-        if self.max_batch < 1:
-            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
-        if self.max_wait_ms < 0:
-            raise ValueError(
-                f"max_wait_ms must be >= 0, got {self.max_wait_ms}")
+        if not isinstance(self.batch_policy, BatchPolicy):
+            raise ValueError(f"batch_policy must be a BatchPolicy, "
+                             f"got {type(self.batch_policy).__name__}")
+        self.batch_policy.validate()
         if self.replication < 1:
             raise ValueError(
                 f"replication must be >= 1, got {self.replication}")
@@ -222,24 +386,34 @@ class SearchConfig:
         return dataclasses.replace(self, **changes).validate()
 
     def buckets(self) -> List[int]:
-        """Padded batch sizes for the dynamic batcher: powers of two up
-        to ``max_batch`` (bounds the number of compiled programs)."""
-        out, b = [], 1
-        while b < self.max_batch:
-            out.append(b)
-            b *= 2
-        out.append(self.max_batch)
-        return out
+        """Padded batch sizes for the dynamic batcher (delegates to
+        ``batch_policy.buckets()``)."""
+        return self.batch_policy.buckets()
 
     # -- (de)serialisation (index persistence carries the config) ---------
     def to_dict(self) -> Dict[str, Any]:
+        """JSON-ready dict; ``batch_policy`` nests as its own dict."""
         return dataclasses.asdict(self)
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "SearchConfig":
         """Tolerant inverse of ``to_dict``: unknown keys (a config written
         by a newer release) are dropped with a warning instead of failing
-        the load."""
+        the load.  Configs persisted before the ``BatchPolicy`` surface
+        carried flat ``max_batch``/``max_wait_ms`` keys — those fold into
+        the policy silently (a saved database keeps loading, identical
+        behaviour, no deprecation noise for an on-disk artifact).
+        """
+        d = dict(d)
+        policy = d.get("batch_policy")
+        policy = (BatchPolicy.from_dict(policy) if isinstance(policy, dict)
+                  else policy if policy is not None else BatchPolicy())
+        legacy = {k: d.pop(k) for k in ("max_batch", "max_wait_ms")
+                  if k in d}
+        legacy = {k: v for k, v in legacy.items() if v is not None}
+        if legacy:
+            policy = dataclasses.replace(policy, **legacy)
+        d["batch_policy"] = policy
         known = {f.name for f in dataclasses.fields(cls)}
         extra = sorted(set(d) - known)
         if extra:
@@ -259,7 +433,9 @@ def config_from_legacy_kwargs(caller: str, kwargs: Dict[str, Any],
     silently dropped), and overlays the kwargs on ``base`` (defaults when
     None) so shim results are bit-identical to the config form.
     """
-    known = {f.name for f in dataclasses.fields(SearchConfig)}
+    # the flat batcher knobs ride through their own InitVar shims
+    known = {f.name for f in dataclasses.fields(SearchConfig)} \
+        | {"max_batch", "max_wait_ms"}
     unknown = sorted(set(kwargs) - known)
     if unknown:
         raise TypeError(f"{caller}() got unexpected keyword arguments "
@@ -270,4 +446,12 @@ def config_from_legacy_kwargs(caller: str, kwargs: Dict[str, Any],
             f"pass config=repro.db.SearchConfig(...) instead",
             DeprecationWarning, stacklevel=3)
     base = base if base is not None else SearchConfig()
+    kwargs = dict(kwargs)
+    # fold flat batcher knobs into the policy here (already warned above
+    # — going through the InitVar shim would warn a second time)
+    flat = {k: kwargs.pop(k) for k in ("max_batch", "max_wait_ms")
+            if k in kwargs}
+    if flat:
+        kwargs["batch_policy"] = dataclasses.replace(base.batch_policy,
+                                                     **flat)
     return dataclasses.replace(base, **kwargs)

@@ -19,7 +19,9 @@ serves through the sequential re-rank (``searcher="local"``), the fused
 batched path (``"batched"``, default), shard fan-out over a mesh
 (``"distributed"``), or the dynamic-batching engine (``"engine"``) —
 see ``repro.db.registry``.  Legacy entry points (``ssh_search`` kwargs,
-``EngineConfig``) remain as deprecation shims for one release.
+flat ``SearchConfig(max_batch=..., max_wait_ms=...)`` batcher kwargs)
+remain as deprecation shims for one release; batcher policy lives on
+``SearchConfig.batch_policy`` (a ``BatchPolicy``).
 """
 from __future__ import annotations
 

@@ -45,7 +45,7 @@ def _ssh_db(arch, config, db_dir=None):
         tsdb = TimeSeriesDB.load(db_dir)
         overlay = dict(
             searcher=config.searcher, backend=config.backend,
-            max_batch=config.max_batch, max_wait_ms=config.max_wait_ms,
+            batch_policy=config.batch_policy,
             replication=config.replication,
             fleet_workers=config.fleet_workers,
             hedge_policy=config.hedge_policy, hedge_ms=config.hedge_ms)
@@ -69,15 +69,21 @@ def _ssh_db(arch, config, db_dir=None):
 
 def serve_ssh(arch, requests: int, batch_size: int, wait_ms: float,
               backend: str = "auto", db_dir=None, replication: int = 1,
-              fleet_workers=None, hedge_ms: float = 30.0):
+              fleet_workers=None, hedge_ms: float = 30.0,
+              batch_mode: str = "fixed"):
     """Engine-based serving: dynamic batching + batched probe/re-rank.
 
-    ``replication >= 2`` serves through the resilient fleet tier
-    (replicated shards, hedged fan-out, failover — DESIGN.md §11)
-    behind the same engine."""
+    ``batch_mode="adaptive"`` lets the batcher set its own wait from the
+    queue depth and the service-time EWMA (DESIGN.md §12); answers are
+    bit-identical to fixed batching either way.  ``replication >= 2``
+    serves through the resilient fleet tier (replicated shards, hedged
+    fan-out, failover — DESIGN.md §11) behind the same engine."""
+    from repro.db import BatchPolicy
+    policy = BatchPolicy(mode=batch_mode, max_batch=batch_size,
+                         max_wait_ms=wait_ms)
     cfg = arch.search_config(length=SERVE_LENGTH, searcher="engine",
-                             backend=backend, max_batch=batch_size,
-                             max_wait_ms=wait_ms, replication=replication,
+                             backend=backend, batch_policy=policy,
+                             replication=replication,
                              fleet_workers=fleet_workers,
                              hedge_ms=hedge_ms)
     if replication > 1 and cfg.multiprobe_offsets > 1:
@@ -172,6 +178,10 @@ def main():
                     help="dynamic batcher max batch (ssh only)")
     ap.add_argument("--wait-ms", type=float, default=2.0,
                     help="dynamic batcher max wait (ssh only)")
+    ap.add_argument("--batch-mode", default="fixed",
+                    choices=("fixed", "adaptive"),
+                    help="batcher policy: fixed two-knob deadline or "
+                         "queue-depth/EWMA adaptive wait (ssh only)")
     ap.add_argument("--sequential", action="store_true",
                     help="bypass the engine; one ssh_search per request")
     ap.add_argument("--backend", default="auto",
@@ -200,7 +210,7 @@ def main():
                       backend=args.backend, db_dir=args.db_dir,
                       replication=args.replication,
                       fleet_workers=args.fleet_workers,
-                      hedge_ms=args.hedge_ms)
+                      hedge_ms=args.hedge_ms, batch_mode=args.batch_mode)
     elif arch.family == "lm":
         serve_lm(arch, args.requests, args.smoke)
     else:

@@ -6,20 +6,22 @@ Public API:
   BatchedSearcher / DistributedSearcher              — compute backends
   ServingMetrics                                     — latency/throughput
   SearchConfig (re-export of repro.db.SearchConfig)  — all search knobs
-  EngineConfig                                       — deprecated alias
 
-Most callers should reach the engine through the ``repro.db``
-facade (``TimeSeriesDB`` + ``SearchConfig(searcher="engine")``).
+The batcher's policy lives on ``SearchConfig.batch_policy`` as a
+``repro.db.BatchPolicy`` (fixed or adaptive).  The former
+``EngineConfig`` alias is retired — constructing it raises with
+migration guidance.  Most callers should reach the engine through the
+``repro.db`` facade (``TimeSeriesDB`` + ``SearchConfig(searcher="engine")``).
 """
 from repro.db.config import SearchConfig
 from repro.serving.batched import (BatchSearchResult, batch_probe,
                                    ssh_search_batch)
 from repro.serving.engine import (BatchedSearcher, DistributedSearcher,
-                                  EngineConfig, ServingEngine)
+                                  ServingEngine)
 from repro.serving.metrics import ServingMetrics
 
 __all__ = [
     "BatchSearchResult", "batch_probe", "ssh_search_batch",
-    "BatchedSearcher", "DistributedSearcher", "EngineConfig",
+    "BatchedSearcher", "DistributedSearcher",
     "SearchConfig", "ServingEngine", "ServingMetrics",
 ]

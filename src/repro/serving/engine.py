@@ -1,17 +1,31 @@
 """ServingEngine — dynamic batching on top of the batched SSH search.
 
-Request lifecycle (DESIGN.md §4):
+Request lifecycle (DESIGN.md §4, §12):
 
-  client -> submit() -> request queue -> batcher thread -> ssh_search_batch
-                                           |                      |
+  client -> submit() -> request deque -> batcher thread -> ssh_search_batch
+                          (condition var)  |                      |
                                            +--- pending inserts --+-> futures
 
-The batcher pulls the first waiting request, then keeps draining the queue
-until either ``max_batch`` requests are in hand or ``max_wait_ms`` has
-elapsed since the batch opened — the standard latency/throughput knob.
-Batches are padded up to a *bucketed* size (powers of two ≤ ``max_batch``)
-so a steady stream of ragged batch sizes hits a handful of compiled
-programs instead of recompiling per size.
+The batcher pulls the first waiting request, then keeps draining the
+queue until the batch closes under the config's ``BatchPolicy``:
+``mode="fixed"`` closes at ``max_batch`` requests or ``max_wait_ms``
+after the batch opened (the classic two-knob trade-off);
+``mode="adaptive"`` computes the wait from the instantaneous queue
+depth, EWMAs of per-batch service seconds and inter-submit gaps, and
+whether the batch opened from an idle engine
+(``BatchPolicy.wait_budget_s`` — drain immediately when the queue
+covers the batch, drain at ``min_wait`` when batches open back-to-back
+or arrivals are too sparse to coalesce, stretch the wait only from an
+idle engine seeing dense arrivals), so the engine rides the
+latency/throughput knee without hand-tuning.  Either way the batch is padded up to a *bucketed*
+size (powers of two ≤ ``max_batch``) so a steady stream of ragged batch
+sizes hits a handful of compiled programs instead of recompiling per
+size — and since batching only changes grouping and padding geometry,
+answers are bit-identical across policies (enforced by test).
+
+The request queue is a plain deque under one ``threading.Condition``:
+``submit()`` wakes the batcher directly, so an idle engine burns no CPU
+and wake-on-submit latency is not quantized by any poll interval.
 
 Streaming inserts are routed through ``SSHIndex.insert`` on the batcher
 thread, between batches — queries never race an index mutation, and every
@@ -29,7 +43,7 @@ import dataclasses
 import queue
 import threading
 import time
-import warnings
+from collections import deque
 from concurrent.futures import Future
 from typing import List, Optional, Sequence
 
@@ -44,21 +58,19 @@ from repro.serving.batched import BatchSearchResult, ssh_search_batch
 from repro.serving.metrics import ServingMetrics
 
 
-class EngineConfig(SearchConfig):
-    """Deprecated alias of :class:`repro.db.SearchConfig` (one release).
-
-    The engine's knobs (search parameters + batching policy) are now
-    fields of the unified ``SearchConfig`` consumed by every entry
-    point; construct that instead.  Field names and defaults are
-    unchanged, so existing ``EngineConfig(...)`` call sites keep their
-    exact behaviour.
+class EngineConfig:
+    """Removed alias of :class:`repro.db.SearchConfig` (one deprecation
+    release, retired).  Constructing it raises with migration guidance —
+    the search fields moved to ``SearchConfig`` unchanged, and the
+    batcher knobs now live on ``SearchConfig.batch_policy`` as a
+    :class:`repro.db.BatchPolicy`.
     """
 
-    def __post_init__(self):
-        warnings.warn(
-            "EngineConfig is deprecated; use repro.db.SearchConfig "
-            "(same fields, one config for every entry point)",
-            DeprecationWarning, stacklevel=3)
+    def __init__(self, *args, **kwargs):
+        raise TypeError(
+            "EngineConfig was removed; construct repro.db.SearchConfig "
+            "instead (same search fields — batcher knobs now live on "
+            "SearchConfig.batch_policy as a repro.db.BatchPolicy)")
 
 
 class BatchedSearcher:
@@ -249,7 +261,8 @@ class ServingEngine:
 
     Usage::
 
-        engine = ServingEngine(index, SearchConfig(band=8, max_batch=8))
+        cfg = SearchConfig(band=8, batch_policy=BatchPolicy(max_batch=8))
+        engine = ServingEngine(index, cfg)
         with engine:                       # starts the batcher thread
             fut = engine.submit(q)         # async
             res = engine.search(q)         # sync convenience
@@ -280,8 +293,18 @@ class ServingEngine:
                 searcher = BatchedSearcher(index, config)
         self.searcher = searcher
         self.metrics = metrics or ServingMetrics()
-        self._queue: "queue.Queue" = queue.Queue()
+        # request queue: a deque under one condition variable — submit()
+        # wakes the batcher directly and _collect() reads the exact depth
+        # (no polling, no qsize() approximation)
+        self._cond = threading.Condition()
+        self._pending: deque = deque()
         self._inserts: "queue.Queue" = queue.Queue()
+        # EWMA of per-batch service seconds (stage-seconds sum when the
+        # config collects them, batch wall clock otherwise) — the
+        # adaptive policy's estimate of what one more batch costs
+        self._service_ewma_s: Optional[float] = None
+        self._arrival_gap_ewma_s: Optional[float] = None
+        self._last_enqueue_t: Optional[float] = None
         self._thread: Optional[threading.Thread] = None
         # serializes index mutation vs. serving across the batcher thread
         # and direct search_batch() callers
@@ -310,22 +333,21 @@ class ServingEngine:
     def stop(self) -> None:
         if self._thread is None:
             return
-        self._queue.put(self._STOP)
+        with self._cond:
+            self._pending.append(self._STOP)
+            self._cond.notify_all()
         self._thread.join()
         with self._lifecycle_lock:
             self._state = "stopped"
             self._thread = None
-            stragglers = []
-            while True:
-                try:
-                    item = self._queue.get_nowait()
-                except queue.Empty:
-                    break
-                if item is not self._STOP:
-                    stragglers.append(item)
+            with self._cond:
+                stragglers = [r for r in self._pending
+                              if r is not self._STOP]
+                self._pending.clear()
         # requests/inserts that raced shutdown: resolve every future
-        for lo in range(0, len(stragglers), self.config.max_batch):
-            chunk = stragglers[lo:lo + self.config.max_batch]
+        max_batch = self.config.batch_policy.max_batch
+        for lo in range(0, len(stragglers), max_batch):
+            chunk = stragglers[lo:lo + max_batch]
             try:
                 results = self.search_batch(
                     jnp.stack([r.query for r in chunk], axis=0))
@@ -357,9 +379,20 @@ class ServingEngine:
         with self._lifecycle_lock:
             enqueue = self._state != "stopped"
             if enqueue:
-                self._queue.put(_Request(query, fut, time.perf_counter()))
+                with self._cond:
+                    now = time.perf_counter()
+                    if self._last_enqueue_t is not None:
+                        gap = now - self._last_enqueue_t
+                        alpha = self.config.batch_policy.ewma_alpha
+                        prev = self._arrival_gap_ewma_s
+                        self._arrival_gap_ewma_s = gap if prev is None \
+                            else alpha * gap + (1.0 - alpha) * prev
+                    self._last_enqueue_t = now
+                    self._pending.append(_Request(query, fut, now))
+                    depth = len(self._pending)
+                    self._cond.notify_all()
         if enqueue:
-            self.metrics.on_enqueue(self._queue.qsize())
+            self.metrics.on_enqueue(depth)
         else:
             try:
                 fut.set_result(self.search_batch(query[None, :])[0])
@@ -388,7 +421,7 @@ class ServingEngine:
             b, [wall] * b, [0.0] * b,
             list(res.pruned_by_hash_frac[:b]),
             list(res.pruned_total_frac[:b]),
-            self._queue.qsize(),
+            len(self._pending),
             lb_pruned_frac=_lb_fracs(res),
             dtw_abandoned_frac=_abandon_fracs(res),
             stage_seconds=_stage_seconds(res),
@@ -462,6 +495,24 @@ class ServingEngine:
                 self.searcher.insert(series)
         self.metrics.on_insert(int(series.shape[0]))
 
+    @property
+    def service_ewma_s(self) -> Optional[float]:
+        """The adaptive policy's live service-time estimate (seconds per
+        batch; None until the first batch completes)."""
+        return self._service_ewma_s
+
+    @property
+    def arrival_gap_ewma_s(self) -> Optional[float]:
+        """The adaptive policy's live inter-arrival estimate (seconds
+        between submits; None until the second submit)."""
+        return self._arrival_gap_ewma_s
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests waiting in the batcher queue right now."""
+        with self._cond:
+            return sum(1 for r in self._pending if r is not self._STOP)
+
     # -- batcher internals ------------------------------------------------
     def _drain_inserts(self) -> None:
         while True:
@@ -478,28 +529,64 @@ class ServingEngine:
         block = list(queries) + [queries[0]] * (bucket - b)
         return jnp.stack(block, axis=0)
 
-    def _collect(self, first: _Request) -> List[_Request]:
+    def _collect(self, first: _Request,
+                 opened_idle: bool = True) -> List[_Request]:
+        """Grow a batch around ``first`` under the config's BatchPolicy.
+
+        The wait budget is recomputed from the live batch size and queue
+        depth every time the state changes (fixed mode: constant budget),
+        so the adaptive policy reacts within one condition-variable
+        wake-up.  The budget counts from the moment the batch opened —
+        arriving requests extend the batch, never the deadline.
+        ``opened_idle`` records whether the worker had to sleep for
+        ``first`` (idle engine: the adaptive policy may stretch the
+        wait) or found it already queued (busy: drain at ``min_wait``).
+        A ``_STOP`` sentinel is left in the deque for ``_worker``'s
+        outer loop to consume.
+        """
+        pol = self.config.batch_policy
         batch = [first]
-        deadline = time.perf_counter() + self.config.max_wait_ms / 1e3
-        while len(batch) < self.config.max_batch:
-            remaining = deadline - time.perf_counter()
-            try:
-                item = self._queue.get(timeout=max(remaining, 0.0)) \
-                    if remaining > 0 else self._queue.get_nowait()
-            except queue.Empty:
-                break
-            if item is self._STOP:
-                self._queue.put(self._STOP)   # re-post for the outer loop
-                break
-            batch.append(item)
+        t_open = time.perf_counter()
+        with self._cond:
+            while len(batch) < pol.max_batch:
+                while self._pending and len(batch) < pol.max_batch:
+                    if self._pending[0] is self._STOP:
+                        return batch        # leave the sentinel in place
+                    batch.append(self._pending.popleft())
+                if len(batch) >= pol.max_batch:
+                    break
+                budget = pol.wait_budget_s(
+                    len(batch), len(self._pending), self._service_ewma_s,
+                    engine_idle=opened_idle,
+                    arrival_gap_s=self._arrival_gap_ewma_s)
+                remaining = t_open + budget - time.perf_counter()
+                if remaining <= 0:
+                    break
+                if not self._cond.wait(timeout=remaining):
+                    break                   # budget elapsed, nothing new
         return batch
 
+    def _observe_service(self, res: BatchSearchResult,
+                         wall_s: float) -> None:
+        """Fold one batch's service time into the adaptive EWMA."""
+        stage = _stage_seconds(res)
+        sample = sum(stage.values()) if stage else wall_s
+        alpha = self.config.batch_policy.ewma_alpha
+        prev = self._service_ewma_s
+        self._service_ewma_s = sample if prev is None \
+            else alpha * sample + (1.0 - alpha) * prev
+
     def _worker(self) -> None:
+        pol = self.config.batch_policy
         while True:
-            item = self._queue.get()
+            with self._cond:
+                opened_idle = not self._pending
+                while not self._pending:
+                    self._cond.wait()
+                item = self._pending.popleft()
             if item is self._STOP:
                 return
-            batch = self._collect(item)
+            batch = self._collect(item, opened_idle)
             t0 = time.perf_counter()
             try:                 # a failing insert also fails the batch
                 with self._serve_lock:       # loudly (and keeps the worker
@@ -511,6 +598,7 @@ class ServingEngine:
                     r.future.set_exception(exc)
                 continue
             done = time.perf_counter()
+            self._observe_service(res, done - t0)
             for i, r in enumerate(batch):
                 r.future.set_result(res.per_query(i))
             self.metrics.set_index_bytes(self.index.nbytes())
@@ -520,9 +608,11 @@ class ServingEngine:
                 [t0 - r.t_enqueue for r in batch],
                 list(res.pruned_by_hash_frac[:len(batch)]),
                 list(res.pruned_total_frac[:len(batch)]),
-                self._queue.qsize(),
+                len(self._pending),
                 lb_pruned_frac=_lb_fracs(res),
                 dtw_abandoned_frac=_abandon_fracs(res),
                 stage_seconds=_stage_seconds(res),
                 sig_cache_hits=_sig_hits(res),
+                batch_wait_s=t0 - batch[0].t_enqueue,
+                batch_occupancy=len(batch) / pol.max_batch,
                 **_fleet_counters(res))

@@ -102,6 +102,15 @@ class ServingMetrics:
         self.queue_latency = LatencyTracker(latency_window)
         self.throughput = ThroughputTracker(throughput_window_seconds)
         self.batch_size = RunningMean()
+        # adaptive-batching observability: time each batch's head request
+        # waited before dispatch, fraction of max_batch actually filled,
+        # exact batch-size counts, and a windowed reservoir of queue
+        # depths (sampled at every enqueue and batch dispatch) so the
+        # load harness reads depth percentiles, not just the last gauge
+        self.batch_wait = RunningMean()
+        self.batch_occupancy = RunningMean()
+        self.batch_sizes: Dict[int, int] = {}
+        self.queue_depths = LatencyTracker(latency_window)
         self.pruned_by_hash = RunningMean()
         self.pruned_total = RunningMean()
         self.lb_pruned = RunningMean()     # LB-cascade fraction of top-C
@@ -138,6 +147,7 @@ class ServingMetrics:
     def on_enqueue(self, depth: int) -> None:
         with self._lock:
             self.queue_depth = depth
+            self.queue_depths.record(depth)
 
     def on_batch(self, batch_size: int, latencies_s, queue_waits_s,
                  pruned_by_hash_frac, pruned_total_frac,
@@ -145,7 +155,9 @@ class ServingMetrics:
                  dtw_abandoned_frac=(),
                  stage_seconds: Optional[Dict[str, float]] = None,
                  sig_cache_hits: int = 0, hedged: int = 0,
-                 failovers: int = 0, degraded: int = 0) -> None:
+                 failovers: int = 0, degraded: int = 0,
+                 batch_wait_s: Optional[float] = None,
+                 batch_occupancy: Optional[float] = None) -> None:
         with self._lock:
             self.sig_cache_hits += int(sig_cache_hits)
             self.hedged_total += int(hedged)
@@ -154,7 +166,14 @@ class ServingMetrics:
             self.batches_total += 1
             self.requests_total += batch_size
             self.batch_size.record(batch_size)
+            self.batch_sizes[batch_size] = \
+                self.batch_sizes.get(batch_size, 0) + 1
+            if batch_wait_s is not None:
+                self.batch_wait.record(batch_wait_s)
+            if batch_occupancy is not None:
+                self.batch_occupancy.record(batch_occupancy)
             self.queue_depth = depth_after
+            self.queue_depths.record(depth_after)
             self.throughput.record(batch_size)
             for s in latencies_s:
                 self.latency.record(s)
@@ -186,6 +205,11 @@ class ServingMetrics:
             self.index_bytes = int(n)
 
     # -- readout ----------------------------------------------------------
+    def batch_histogram(self) -> Dict[int, int]:
+        """Exact batch-size → count histogram (copy)."""
+        with self._lock:
+            return dict(self.batch_sizes)
+
     def snapshot(self) -> Dict[str, float]:
         with self._lock:
             stage_rows = {
@@ -202,8 +226,13 @@ class ServingMetrics:
                 "degraded_total": self.degraded_total,
                 "rebalanced_shards_total": self.rebalanced_shards_total,
                 "queue_depth": self.queue_depth,
+                "queue_depth_p50": self.queue_depths.percentile(50),
+                "queue_depth_p95": self.queue_depths.percentile(95),
+                "queue_depth_max": self.queue_depths.percentile(100),
                 "index_bytes": self.index_bytes,
                 "batch_size_mean": self.batch_size.mean,
+                "batch_wait_ms_mean": self.batch_wait.mean * 1e3,
+                "batch_occupancy_mean": self.batch_occupancy.mean,
                 "latency_p50_ms": self.latency.percentile(50) * 1e3,
                 "latency_p95_ms": self.latency.percentile(95) * 1e3,
                 "latency_p99_ms": self.latency.percentile(99) * 1e3,

@@ -13,7 +13,8 @@ import pytest
 
 from repro.core import SSHParams, ssh_search
 from repro.data.timeseries import extract_subsequences, synthetic_ecg
-from repro.db import SearchConfig, TimeSeriesDB, available_searchers
+from repro.db import (BatchPolicy, SearchConfig, TimeSeriesDB,
+                      available_searchers)
 from repro.serving import ssh_search_batch
 
 pytestmark = pytest.mark.api
@@ -60,7 +61,7 @@ def test_config_validate_rejects_bad_knobs():
     with pytest.raises(ValueError, match="host_buckets"):
         SearchConfig(use_host_buckets=True, searcher="batched").validate()
     with pytest.raises(ValueError, match="max_batch"):
-        SearchConfig(max_batch=0).validate()
+        SearchConfig(batch_policy=BatchPolicy(max_batch=0)).validate()
     # replace() validates too
     with pytest.raises(ValueError, match="seed_size"):
         SearchConfig().replace(seed_size=-1)
@@ -312,18 +313,98 @@ def test_ssh_search_batch_legacy_kwargs_shim(series, db):
     np.testing.assert_array_equal(want.dists, got.dists)
 
 
-def test_engine_config_alias_deprecated_but_equivalent(series, db):
-    from repro.serving import EngineConfig, ServingEngine
-    with pytest.warns(DeprecationWarning, match="EngineConfig"):
-        legacy = EngineConfig(topk=5, top_c=64, band=8, max_batch=4)
-    assert isinstance(legacy, SearchConfig)
-    modern = SearchConfig(topk=5, top_c=64, band=8, max_batch=4)
-    e1 = ServingEngine(db.index, legacy)
-    e2 = ServingEngine(db.index, modern)
-    r1 = e1.search_batch(series[jnp.asarray(QIDS[:2])])
-    r2 = e2.search_batch(series[jnp.asarray(QIDS[:2])])
+def test_engine_config_alias_retired():
+    """The PR-3 deprecation alias is gone: constructing it raises with
+    migration guidance, and repro.serving no longer exports it."""
+    import repro.serving
+    from repro.serving.engine import EngineConfig
+    with pytest.raises(TypeError, match="batch_policy"):
+        EngineConfig(topk=5)
+    assert not hasattr(repro.serving, "EngineConfig")
+
+
+# ---------------------------------------------------------------------------
+# BatchPolicy
+# ---------------------------------------------------------------------------
+
+def test_batch_policy_validate_and_roundtrip():
+    pol = BatchPolicy(mode="adaptive", max_batch=16, max_wait_ms=4.0,
+                      min_wait_ms=0.1, gain=0.7, ewma_alpha=0.2)
+    assert pol.validate() is pol
+    assert BatchPolicy.from_dict(pol.to_dict()) == pol
+    assert pol.replace(max_batch=8).max_batch == 8
+    assert pol.buckets() == [1, 2, 4, 8, 16]
+    for bad in (dict(mode="magic"), dict(max_batch=0),
+                dict(max_wait_ms=-1.0), dict(min_wait_ms=-0.1),
+                dict(min_wait_ms=5.0, max_wait_ms=2.0), dict(gain=0.0),
+                dict(ewma_alpha=0.0), dict(ewma_alpha=1.5)):
+        with pytest.raises(ValueError):
+            BatchPolicy(**bad).validate()
+
+
+def test_batch_policy_busy_engine_drains_at_min_wait():
+    """The adaptive budget stretches only from an idle engine; a batch
+    opened while work was already queued drains at the min-wait floor
+    (waiting can't raise throughput when the engine is the bottleneck)."""
+    pol = BatchPolicy(mode="adaptive", max_batch=8, max_wait_ms=10.0)
+    s = 0.1
+    assert pol.wait_budget_s(2, 6, s) == 0.0          # covered: drain
+    busy = pol.wait_budget_s(2, 1, s, engine_idle=False)
+    assert busy == pol.min_wait_ms / 1e3
+    assert pol.wait_budget_s(2, 1, s, engine_idle=True) >= busy
+    # busy beats the no-telemetry fallback too
+    assert pol.wait_budget_s(2, 1, None, engine_idle=False) == busy
+    # arrivals sparser than the justified wait: nothing to coalesce
+    stretch = pol.wait_budget_s(2, 1, s)
+    assert pol.wait_budget_s(2, 1, s, arrival_gap_s=2 * stretch) == busy
+    assert pol.wait_budget_s(2, 1, s,
+                             arrival_gap_s=stretch / 2) == stretch
+    fixed = BatchPolicy(mode="fixed", max_batch=8, max_wait_ms=10.0)
+    assert fixed.wait_budget_s(2, 1, s, engine_idle=False) == 10.0 / 1e3
+
+
+def test_batch_policy_nested_in_search_config():
+    pol = BatchPolicy(mode="adaptive", max_batch=4)
+    cfg = SearchConfig(batch_policy=pol).validate()
+    assert cfg.batch_policy == pol
+    assert cfg.buckets() == [1, 2, 4]
+    rt = SearchConfig.from_dict(cfg.to_dict())
+    assert rt.batch_policy == pol
+
+
+def test_flat_batcher_kwargs_deprecated_but_equivalent(series, db):
+    """SearchConfig(max_batch=..., max_wait_ms=...) still works for one
+    release, warns, and produces the identical nested policy (and the
+    identical answers through the engine)."""
+    from repro.serving import ServingEngine
+    with pytest.warns(DeprecationWarning, match="batch_policy"):
+        legacy = SearchConfig(topk=5, top_c=64, band=8, max_batch=4,
+                              max_wait_ms=3.0)
+    modern = SearchConfig(topk=5, top_c=64, band=8,
+                          batch_policy=BatchPolicy(max_batch=4,
+                                                   max_wait_ms=3.0))
+    assert legacy == modern
+    r1 = ServingEngine(db.index, legacy).search_batch(
+        series[jnp.asarray(QIDS[:2])])
+    r2 = ServingEngine(db.index, modern).search_batch(
+        series[jnp.asarray(QIDS[:2])])
     for a, b in zip(r1, r2):
         np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.dists, b.dists)
+
+
+def test_flat_batcher_keys_load_from_saved_config():
+    """Databases persisted before BatchPolicy carry flat max_batch /
+    max_wait_ms keys in meta — from_dict folds them silently."""
+    d = SearchConfig().to_dict()
+    pol = d.pop("batch_policy")
+    d["max_batch"], d["max_wait_ms"] = 16, 9.0
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")              # silence is part of the API
+        cfg = SearchConfig.from_dict(d)
+    assert cfg.batch_policy == BatchPolicy.from_dict(pol).replace(
+        max_batch=16, max_wait_ms=9.0)
 
 
 def test_make_query_fn_legacy_kwargs_shim(series):

@@ -275,9 +275,11 @@ def test_fleet_live_resize_and_drain(db, index):
 
 def test_engine_drain_loses_no_queries(db, index):
     from repro.serving import ServingEngine
+    from repro.db import BatchPolicy
     cfg = SearchConfig(topk=5, top_c=64, band=8, replication=2,
-                       fleet_workers=4, max_batch=4,
-                       max_wait_ms=1.0).validate()
+                       fleet_workers=4,
+                       batch_policy=BatchPolicy(
+                           max_batch=4, max_wait_ms=1.0)).validate()
     engine = ServingEngine(index, cfg)               # auto-routes to fleet
     assert isinstance(engine.searcher, FleetSearcher)
     rng = np.random.default_rng(3)

@@ -1,0 +1,192 @@
+"""repro.loadgen: seeded arrival determinism, trace replay, adaptive ≡
+fixed bit-identity through a live engine, adaptive convergence, and the
+serving metrics gauges the harness reads."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SSHIndex
+from repro.data.timeseries import extract_subsequences, synthetic_ecg
+from repro.db import BatchPolicy, SearchConfig
+from repro.encoders import IndexSpec
+from repro.loadgen import (ARRIVAL_PROCESSES, Mixture, WorkloadSpec,
+                           diurnal_arrivals, generate_trace, make_arrivals,
+                           mmpp_arrivals, poisson_arrivals, run_trace)
+from repro.serving import ServingEngine, ServingMetrics
+
+pytestmark = pytest.mark.loadgen
+
+SPEC = IndexSpec(encoder="ssh", params=dict(
+    window=24, step=3, ngram=8, num_hashes=40, num_tables=20))
+
+
+@pytest.fixture(scope="module")
+def db():
+    stream = synthetic_ecg(2500, seed=5)
+    return jnp.asarray(extract_subsequences(stream, 128, stride=4,
+                                            znorm=True))   # ~594 series
+
+
+@pytest.fixture(scope="module")
+def index(db):
+    return SSHIndex.build(db, spec=SPEC)
+
+
+def _engine(index, mode, max_batch=8, max_wait_ms=4.0):
+    pol = BatchPolicy(mode=mode, max_batch=max_batch,
+                      max_wait_ms=max_wait_ms)
+    return ServingEngine(index, SearchConfig(topk=5, top_c=64, band=8,
+                                             batch_policy=pol))
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fn", [poisson_arrivals, mmpp_arrivals,
+                                diurnal_arrivals])
+def test_arrivals_deterministic_sorted_and_rate_normalized(fn):
+    a = fn(100.0, 2000, seed=7)
+    b = fn(100.0, 2000, seed=7)
+    np.testing.assert_array_equal(a, b)            # seeded → replayable
+    assert np.all(np.diff(a) >= 0)                 # time moves forward
+    assert a.shape == (2000,)
+    rate = 2000 / a[-1]                            # mean-rate normalized
+    assert 75.0 < rate < 130.0
+    assert not np.array_equal(a, fn(100.0, 2000, seed=8))
+
+
+def test_mmpp_burstier_than_poisson():
+    """The MMPP's inter-arrival coefficient of variation exceeds the
+    Poisson's (CV=1): that is the whole point of the bursty process."""
+    gaps_p = np.diff(poisson_arrivals(100.0, 4000, seed=3))
+    gaps_m = np.diff(mmpp_arrivals(100.0, 4000, seed=3, burst_factor=8.0))
+    cv = lambda g: np.std(g) / np.mean(g)          # noqa: E731
+    assert cv(gaps_m) > cv(gaps_p)
+
+
+def test_make_arrivals_dispatch_and_rejects_unknown():
+    np.testing.assert_array_equal(
+        make_arrivals("poisson", 50.0, 10, seed=1),
+        poisson_arrivals(50.0, 10, seed=1))
+    assert set(ARRIVAL_PROCESSES) == {"poisson", "mmpp", "diurnal"}
+    with pytest.raises(ValueError, match="unknown arrival process"):
+        make_arrivals("tidal", 50.0, 10)
+
+
+# ---------------------------------------------------------------------------
+# workload → trace
+# ---------------------------------------------------------------------------
+
+def test_trace_deterministic_and_within_pool():
+    spec = WorkloadSpec(process="mmpp", rate_qps=50, n_requests=500, seed=3,
+                        topks=Mixture((5, 10), (0.5, 0.5)))
+    t1 = generate_trace(spec, {128: 321})
+    t2 = generate_trace(spec, {128: 321})
+    np.testing.assert_array_equal(t1.arrivals_s, t2.arrivals_s)
+    np.testing.assert_array_equal(t1.pool_ids, t2.pool_ids)
+    np.testing.assert_array_equal(t1.topks, t2.topks)
+    assert 0 <= t1.pool_ids.min() and t1.pool_ids.max() < 321
+    assert set(np.unique(t1.topks)) <= {5, 10}
+    assert len(t1) == 500 and t1.duration_s > 0
+
+
+def test_workload_spec_validation():
+    with pytest.raises(ValueError, match="arrival process"):
+        WorkloadSpec(process="tidal").validate()
+    with pytest.raises(ValueError, match="rate_qps"):
+        WorkloadSpec(rate_qps=0).validate()
+    with pytest.raises(ValueError, match="weights"):
+        WorkloadSpec(lengths=Mixture((128,), (0.5, 0.5))).validate()
+    with pytest.raises(ValueError, match="topk"):
+        WorkloadSpec(topks=Mixture((0,))).validate()
+    with pytest.raises(ValueError, match="pool"):
+        generate_trace(WorkloadSpec(lengths=Mixture((64,))), {128: 10})
+
+
+# ---------------------------------------------------------------------------
+# closed-loop harness + adaptive batching
+# ---------------------------------------------------------------------------
+
+def _warm(engine, db):
+    for s in engine.config.buckets():
+        engine.searcher.search_batch(db[:s])
+
+
+def test_adaptive_identical_to_fixed_over_same_trace(db, index):
+    """Tentpole acceptance: identical request stream through a fixed and
+    an adaptive engine → bit-identical per-request top-k ids/distances
+    (batching only changes grouping and padding, never answers)."""
+    spec = WorkloadSpec(rate_qps=200.0, n_requests=24, seed=11,
+                        topks=Mixture((3, 5), (0.5, 0.5)))
+    trace = generate_trace(spec, {128: len(db)})
+    results = {}
+    for mode in ("fixed", "adaptive"):
+        engine = _engine(index, mode)
+        with engine:
+            _warm(engine, db)
+            results[mode] = run_trace(engine, trace, {128: db},
+                                      timeout_s=300)
+    assert results["fixed"].same_answers(results["adaptive"])
+    for res in results.values():
+        assert res.n_requests == 24
+        assert res.latency_p99_ms >= res.latency_p50_ms > 0
+        assert sum(res.batch_histogram.values()) > 0
+        assert res.achieved_qps > 0
+
+
+def test_adaptive_occupancy_rises_under_step_load(db, index):
+    """Step load (every request queued up front) → the adaptive batcher
+    drains at full occupancy instead of waiting out its deadline."""
+    engine = _engine(index, "adaptive", max_batch=4, max_wait_ms=50.0)
+    # queue everything before the worker starts: the queue always covers
+    # max_batch, so wait_budget_s must return 0 and batches run full
+    futs = [engine.submit(db[i]) for i in range(16)]
+    with engine:
+        for f in futs:
+            f.result(timeout=300)
+    hist = engine.metrics.batch_histogram()
+    assert hist == {4: 4}
+    snap = engine.metrics.snapshot()
+    assert snap["batch_occupancy_mean"] == pytest.approx(1.0)
+
+
+def test_adaptive_wait_shrinks_under_light_load(db, index):
+    """Once the engine has a service-time estimate, a lone request under
+    light load waits less than the fixed deadline (the policy scales the
+    budget by the EWMA instead of always burning max_wait_ms)."""
+    engine = _engine(index, "adaptive", max_batch=8, max_wait_ms=500.0)
+    with engine:
+        _warm(engine, db)
+        for i in range(4):                    # populate the service EWMA
+            engine.search(db[i], timeout=300)
+        ewma = engine.service_ewma_s
+        assert ewma is not None and ewma > 0
+        pol = engine.config.batch_policy
+        light = pol.wait_budget_s(1, 0, ewma)
+        assert light < pol.max_wait_ms / 1e3  # shrunk below the ceiling
+        assert light >= pol.min_wait_ms / 1e3
+        assert pol.wait_budget_s(1, pol.max_batch, ewma) == 0.0
+        # the engine actually closes lone batches early: the batcher's
+        # recorded wait for a lone query must sit far below the 500 ms
+        # fixed deadline (service time is excluded — batch_wait covers
+        # enqueue → dispatch only)
+        wait0 = engine.metrics.batch_wait.total
+        engine.search(db[5], timeout=300)
+        lone_wait_s = engine.metrics.batch_wait.total - wait0
+        assert lone_wait_s < 0.45
+
+
+def test_metrics_gauges_surface():
+    m = ServingMetrics()
+    m.on_enqueue(3)
+    m.on_batch(4, [0.01] * 4, [0.001] * 4, [0.9] * 4, [0.95] * 4,
+               depth_after=1, batch_wait_s=0.002, batch_occupancy=0.5)
+    m.on_batch(2, [0.01] * 2, [0.001] * 2, [0.9] * 2, [0.95] * 2,
+               depth_after=0, batch_wait_s=0.004, batch_occupancy=0.25)
+    s = m.snapshot()
+    assert s["queue_depth_max"] == 3
+    assert s["queue_depth_p50"] <= s["queue_depth_p95"] <= 3
+    assert s["batch_wait_ms_mean"] == pytest.approx(3.0)
+    assert s["batch_occupancy_mean"] == pytest.approx(0.375)
+    assert m.batch_histogram() == {4: 1, 2: 1}

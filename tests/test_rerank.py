@@ -312,9 +312,11 @@ def test_search_stats_partition(db, index):
 
 
 def test_serving_metrics_report_lb_pruning(db, index):
-    from repro.serving import EngineConfig, ServingEngine
-    engine = ServingEngine(index, EngineConfig(topk=5, top_c=64, band=8,
-                                               max_batch=4, backend="jnp"))
+    from repro.db import BatchPolicy, SearchConfig
+    from repro.serving import ServingEngine
+    engine = ServingEngine(index, SearchConfig(
+        topk=5, top_c=64, band=8, backend="jnp",
+        batch_policy=BatchPolicy(max_batch=4)))
     engine.search_batch(db[jnp.asarray(QIDS[:4])])
     snap = engine.metrics.snapshot()
     assert "lb_pruned_frac_mean" in snap

@@ -11,7 +11,8 @@ import pytest
 from repro.core import SSHParams, SSHIndex, ssh_search
 from repro.core.dtw import znormalize
 from repro.data.timeseries import extract_subsequences, synthetic_ecg
-from repro.serving import (EngineConfig, ServingEngine, ServingMetrics,
+from repro.db import BatchPolicy, SearchConfig
+from repro.serving import (ServingEngine, ServingMetrics,
                            batch_probe, ssh_search_batch)
 
 PARAMS = SSHParams(window=24, step=3, ngram=8, num_hashes=40, num_tables=20)
@@ -57,7 +58,8 @@ def test_batched_identical_to_sequential(db, index, kw):
 def test_engine_batched_path_matches_sequential(db, index):
     """Acceptance: the ServingEngine batched path == sequential ssh_search
     (same params, rank_by_signature=True) over the synthetic-ECG db."""
-    cfg = EngineConfig(topk=10, top_c=128, band=8, max_batch=8)
+    cfg = SearchConfig(topk=10, top_c=128, band=8,
+                   batch_policy=BatchPolicy(max_batch=8))
     engine = ServingEngine(index, cfg)
     results = engine.search_batch(db[jnp.asarray(QIDS)])
     for qid, got in zip(QIDS, results):
@@ -83,8 +85,9 @@ def test_batch_probe_matches_single_probe(db, index):
 
 def test_engine_threaded_dynamic_batching(db, index):
     """Queued requests are served in batches; results match sequential."""
-    cfg = EngineConfig(topk=5, top_c=64, band=8, max_batch=4,
-                       max_wait_ms=50.0)
+    cfg = SearchConfig(topk=5, top_c=64, band=8,
+                       batch_policy=BatchPolicy(max_batch=4,
+                                                max_wait_ms=50.0))
     engine = ServingEngine(index, cfg)
     # prefill the queue before starting the worker → deterministic batching
     futs = [engine.submit(db[qid]) for qid in QIDS]
@@ -102,8 +105,8 @@ def test_engine_threaded_dynamic_batching(db, index):
 
 def test_engine_insert_visible_to_later_queries(db, index):
     """Streaming insert routes through SSHIndex.insert and is searchable."""
-    engine = ServingEngine(index, EngineConfig(topk=3, top_c=64, band=8,
-                                               max_batch=4))
+    engine = ServingEngine(index, SearchConfig(
+        topk=3, top_c=64, band=8, batch_policy=BatchPolicy(max_batch=4)))
     n0 = int(index.signatures.shape[0])
     novel = znormalize(jnp.asarray(
         np.sin(np.linspace(0, 17, 128)) ** 3, jnp.float32))[None, :]
@@ -118,8 +121,9 @@ def test_engine_insert_visible_to_later_queries(db, index):
 
 def test_engine_concurrent_submitters(db, index):
     """Many client threads sharing one engine all get correct answers."""
-    cfg = EngineConfig(topk=3, top_c=64, band=8, max_batch=4,
-                       max_wait_ms=5.0)
+    cfg = SearchConfig(topk=3, top_c=64, band=8,
+                       batch_policy=BatchPolicy(max_batch=4,
+                                                max_wait_ms=5.0))
     engine = ServingEngine(index, cfg)
     out = {}
 
@@ -140,7 +144,8 @@ def test_engine_concurrent_submitters(db, index):
 def test_engine_survives_failing_insert(db, index):
     """A backend insert error fails the affected batch loudly but leaves
     the worker alive for later requests."""
-    cfg = EngineConfig(topk=3, top_c=64, band=8, max_batch=2)
+    cfg = SearchConfig(topk=3, top_c=64, band=8,
+                       batch_policy=BatchPolicy(max_batch=2))
     engine = ServingEngine(index, cfg)
 
     class Boom(RuntimeError):
@@ -160,7 +165,8 @@ def test_engine_survives_failing_insert(db, index):
 def test_submit_after_stop_and_straggler_drain(db, index):
     """stop() resolves every queued future; submit() after stop serves on
     the caller's thread — no request ever hangs around shutdown."""
-    cfg = EngineConfig(topk=3, top_c=64, band=8, max_batch=4)
+    cfg = SearchConfig(topk=3, top_c=64, band=8,
+                       batch_policy=BatchPolicy(max_batch=4))
     engine = ServingEngine(index, cfg)
     engine.start()
     engine.stop()
@@ -179,13 +185,13 @@ def test_submit_after_stop_and_straggler_drain(db, index):
 def test_distributed_searcher_rejects_unsupported_config(index):
     from repro.serving.engine import DistributedSearcher
     with pytest.raises(ValueError, match="band"):
-        DistributedSearcher(index, EngineConfig(band=None), mesh=None)
+        DistributedSearcher(index, SearchConfig(band=None), mesh=None)
     with pytest.raises(ValueError, match="rank_by_signature"):
         DistributedSearcher(
-            index, EngineConfig(band=8, rank_by_signature=False), mesh=None)
+            index, SearchConfig(band=8, rank_by_signature=False), mesh=None)
     with pytest.raises(ValueError, match="multiprobe"):
         DistributedSearcher(
-            index, EngineConfig(band=8, multiprobe_offsets=3), mesh=None)
+            index, SearchConfig(band=8, multiprobe_offsets=3), mesh=None)
 
 
 def test_metrics_percentiles_and_throughput():
